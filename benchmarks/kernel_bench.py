@@ -1,0 +1,146 @@
+"""Paper Fig. 14: batched custom kernels vs the naive implementation.
+
+The naive baselines mirror the paper's: estimation and top-k LOOP OVER
+HEADS sequentially (ragged centroid counts defeat batching), and the naive
+attention GATHERS selected KV into contiguous buffers before computing.
+Our implementations batch all heads in one launch (static ragged layout)
+and consume the page table in place.
+
+On this CPU container we measure the *XLA-compiled* batched path against
+the XLA-compiled per-head-loop path (same numerics) — the structural
+speedup the kernels encode.  We additionally report HBM-byte structure
+(gather materialization vs none), which is what dominates on real TPU.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # compile + warm
+    jax.block_until_ready(fn(*args))
+    t0 = time.monotonic()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.monotonic() - t0) / iters
+
+
+def run(S=8192, D=64, n_kv=8, g=2, B=2, budget=1024):
+    from repro.core.centroids import build_rank_keys, rank_query
+    from repro.core import estimation
+    from repro.core.ragged import layout_for
+    from repro.core.selection import select_page_table
+    from repro.core.sparse_attention import (
+        build_centroid_store,
+        gather_pages,
+        paged_attention_reference,
+    )
+
+    key = jax.random.PRNGKey(0)
+    bs = tuple([16, 32, 64, 32] * (n_kv // 4))
+    lay = layout_for(bs, S, 16, budget)
+    k = jax.random.normal(key, (B, n_kv, S, D))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (B, n_kv, S, D))
+    q = jax.random.normal(jax.random.fold_in(key, 2), (B, n_kv * g, D))
+    store = build_centroid_store(k, lay, "quest", quant="none")
+    rq = rank_query(q, "quest", D)
+
+    # ---- estimation: size-grouped batched vs per-head loop -----------------
+    # Kernel 1's batching strategy: heads sharing a block size execute in one
+    # launch (the static ragged layout makes the groups compile-time).  The
+    # naive baseline launches one estimation per head (the paper's Fig. 14
+    # baseline for ragged centroid counts).
+    per_head_rks = [
+        build_rank_keys(k[:, h], lay.block_sizes[h], "quest")
+        for h in range(n_kv)
+    ]
+    groups = {}
+    for h, b in enumerate(lay.block_sizes):
+        groups.setdefault(b, []).append(h)
+    grouped_rks = {
+        b: jnp.stack([per_head_rks[h] for h in hs], axis=1)  # [B, Hg, nb, Dp]
+        for b, hs in groups.items()
+    }
+
+    @jax.jit
+    def est_batched(rq, grouped):
+        rq4 = rq.reshape(B, n_kv, g, -1)
+        out = jnp.full((B, n_kv, lay.max_blocks), -1e30)
+        for b, hs in groups.items():
+            rqh = rq4[:, jnp.asarray(hs)]                   # [B, Hg, g, Dp]
+            s = jnp.einsum("bhgd,bhnd->bhgn", rqh, grouped[b]).max(axis=2)
+            out = out.at[:, jnp.asarray(hs), : s.shape[-1]].set(s)
+        return out
+
+    @jax.jit
+    def est_naive(rq, *rks):
+        outs = []
+        for h in range(n_kv):  # sequential per-head launches
+            rqh = rq.reshape(B, n_kv, g, -1)[:, h]
+            s = jnp.einsum("bgd,bnd->bgn", rqh, rks[h]).max(axis=1)
+            pad = lay.max_blocks - s.shape[-1]
+            outs.append(jnp.pad(s, ((0, 0), (0, pad)), constant_values=-1e30))
+        return jnp.stack(outs, axis=1)
+
+    t_b = _time(est_batched, rq, grouped_rks)
+    t_n = _time(est_naive, rq, *per_head_rks)
+
+    scores = estimation.estimate_scores(rq, store.rank_keys, lay, n_kv)
+    table, valid = select_page_table(scores, lay)
+
+    # ---- top-k: batched single top_k vs per-head loop ----------------------
+    @jax.jit
+    def topk_batched(scores):
+        return jax.lax.top_k(scores, lay.max_top_k)[1]
+
+    @jax.jit
+    def topk_naive(scores):
+        outs = []
+        for h in range(n_kv):
+            outs.append(jax.lax.top_k(scores[:, h], lay.max_top_k)[1])
+        return jnp.stack(outs, axis=1)
+
+    t_tb = _time(topk_batched, scores)
+    t_tn = _time(topk_naive, scores)
+
+    # ---- attention: page-table in place vs gather-then-attend --------------
+    seq_len = jnp.full((B,), S, jnp.int32)
+
+    @jax.jit
+    def attn_paged(q, k, v, table, valid):
+        return paged_attention_reference(q, k, v, table, valid, 16, seq_len)
+
+    @jax.jit
+    def attn_gather_naive(q, k, v, table, valid):
+        # materialize gathered KV (the naive copy the paper's Fig. 14 avoids)
+        sk = gather_pages(k, table, 16)
+        sv = gather_pages(v, table, 16)
+        sk = sk + 0.0  # force materialization boundary
+        out = paged_attention_reference(q, k, v, table, valid, 16, seq_len)
+        return out + 0.0 * sk.sum() + 0.0 * sv.sum()
+
+    t_ap = _time(attn_paged, q, k, v, table, valid)
+    t_an = _time(attn_gather_naive, q, k, v, table, valid)
+
+    gather_bytes = 2 * B * n_kv * lay.selected_pages * 16 * D * 4
+    return {
+        "name": "fig14_kernel_vs_naive",
+        "us_per_call": t_b * 1e6,
+        "derived": {
+            "estimation_speedup": round(t_n / t_b, 2),
+            "topk_speedup": round(t_tn / t_tb, 2),
+            "attention_gather_overhead": round(t_an / t_ap, 2),
+            "gather_bytes_avoided": gather_bytes,
+            "estimation_us": round(t_b * 1e6, 1),
+            "naive_estimation_us": round(t_n * 1e6, 1),
+        },
+    }
+
+
+if __name__ == "__main__":
+    print(run()["derived"])

@@ -1,0 +1,66 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Roofline terms come from the
+dry-run artifacts (run ``python -m repro.launch.dryrun`` first); everything
+else executes at CPU smoke scale.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def main() -> None:
+    from benchmarks import (
+        adaptive_recall,
+        batch_throughput,
+        budget_sweep,
+        decode_latency,
+        kernel_bench,
+        quant_ablation,
+        sensitivity,
+    )
+
+    mods = [
+        sensitivity,
+        adaptive_recall,
+        quant_ablation,
+        budget_sweep,
+        kernel_bench,
+        decode_latency,
+        batch_throughput,
+    ]
+    print("name,us_per_call,derived")
+    for mod in mods:
+        try:
+            out = mod.run()
+            derived = json.dumps(out["derived"], separators=(",", ":"))
+            print(f"{out['name']},{out['us_per_call']:.1f},{derived}")
+        except Exception as e:  # keep the harness going
+            print(f"{mod.__name__},-1,\"ERROR: {type(e).__name__}: {e}\"")
+
+    # roofline summary (if dry-run artifacts exist)
+    try:
+        from benchmarks import roofline
+
+        rows = roofline.full_table()
+        if rows:
+            worst = min(rows, key=lambda r: r.fraction)
+            collbound = max(rows, key=lambda r: r.collective_s / max(r.bound_s, 1e-12))
+            print(
+                f"roofline_summary,0,"
+                + json.dumps(
+                    {
+                        "cells": len(rows),
+                        "worst_fraction": f"{worst.arch}/{worst.shape}:{worst.fraction:.3f}",
+                        "most_collective_bound": f"{collbound.arch}/{collbound.shape}",
+                    },
+                    separators=(",", ":"),
+                )
+            )
+    except Exception as e:
+        print(f"roofline_summary,-1,\"ERROR: {e}\"")
+
+
+if __name__ == "__main__":
+    main()

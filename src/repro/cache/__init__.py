@@ -1,0 +1,5 @@
+"""Paged KV cache substrate: physical page pool allocator + block->page
+mapping (paper §3.4 Kernel 3 / Fig. 9)."""
+from repro.cache.paged_kv import PagePool, PageTable
+
+__all__ = ["PagePool", "PageTable"]

@@ -1,0 +1,110 @@
+"""Physical page pool + per-sequence page tables (vLLM-style management).
+
+The pool is a host-side free-list allocator over fixed-size physical pages
+(page = 16 tokens = the finest AB-Sparse granularity, so the paper's
+hierarchical-divisibility property holds for every candidate block size:
+any logical block of size B maps to exactly B/16 physical pages).
+
+``PageTable.physical_view(logical_page_table)`` performs the block->page
+strided mapping of paper Fig. 9: selection produces *logical* page indices
+per sequence; composing with the logical->physical map yields the indices
+kernel 3 DMAs — one gather on a [B, H, P_sel] int32 table, no KV movement.
+
+Invariants (property-tested):
+- a page is owned by at most one sequence,
+- freeing returns exactly the pages allocated,
+- logical->physical is injective per sequence,
+- allocation fails cleanly when the pool is exhausted (admission control).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+class PoolExhausted(Exception):
+    pass
+
+
+@dataclass
+class PageTable:
+    """Per-sequence logical -> physical page mapping."""
+
+    seq_id: int
+    physical: List[int] = field(default_factory=list)  # index = logical page
+
+    @property
+    def n_pages(self) -> int:
+        return len(self.physical)
+
+    def physical_view(self, logical_pages: np.ndarray) -> np.ndarray:
+        """Map logical page indices (any shape) to physical pool indices."""
+        table = np.asarray(self.physical, dtype=np.int32)
+        return table[np.asarray(logical_pages)]
+
+
+class PagePool:
+    """Free-list allocator over ``total_pages`` physical pages."""
+
+    def __init__(self, total_pages: int, page_size: int = 16):
+        self.total_pages = total_pages
+        self.page_size = page_size
+        self._free: List[int] = list(range(total_pages - 1, -1, -1))
+        self._tables: Dict[int, PageTable] = {}
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.total_pages - self.free_pages
+
+    def can_admit(self, n_tokens: int) -> bool:
+        need = -(-n_tokens // self.page_size)
+        return need <= self.free_pages
+
+    def allocate(self, seq_id: int, n_tokens: int) -> PageTable:
+        if seq_id in self._tables:
+            raise ValueError(f"sequence {seq_id} already allocated")
+        need = -(-n_tokens // self.page_size)
+        if need > len(self._free):
+            raise PoolExhausted(
+                f"need {need} pages, only {len(self._free)} free"
+            )
+        pages = [self._free.pop() for _ in range(need)]
+        table = PageTable(seq_id, pages)
+        self._tables[seq_id] = table
+        return table
+
+    def extend(self, seq_id: int, n_new_tokens: int) -> PageTable:
+        """Grow a sequence's table to cover ``n_new_tokens`` more tokens."""
+        table = self._tables[seq_id]
+        have_tokens = table.n_pages * self.page_size
+        # tokens the existing last page can still absorb are free
+        need = -(-n_new_tokens // self.page_size)
+        if need > len(self._free):
+            raise PoolExhausted(
+                f"extend needs {need} pages, only {len(self._free)} free"
+            )
+        table.physical.extend(self._free.pop() for _ in range(need))
+        return table
+
+    def free(self, seq_id: int):
+        table = self._tables.pop(seq_id)
+        self._free.extend(reversed(table.physical))
+        table.physical.clear()
+
+    def table(self, seq_id: int) -> PageTable:
+        return self._tables[seq_id]
+
+    def owner_map(self) -> np.ndarray:
+        """[total_pages] -> seq_id or -1 (debug/invariant checking)."""
+        owner = np.full(self.total_pages, -1, np.int64)
+        for sid, t in self._tables.items():
+            for p in t.physical:
+                assert owner[p] == -1, f"page {p} double-owned"
+                owner[p] = sid
+        return owner

@@ -1,0 +1,292 @@
+"""Configuration schema for the AB-Sparse framework.
+
+Everything downstream (models, kernels, sharding, dry-run) is driven by these
+frozen dataclasses.  Configs are plain data: importing a config file never
+touches jax device state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Sparse attention (the paper's technique)
+# ---------------------------------------------------------------------------
+
+CANDIDATE_BLOCK_SIZES: Tuple[int, ...] = (16, 32, 64)
+PAGE_SIZE: int = 16  # finest granularity == B_min; physical page size.
+
+
+@dataclass(frozen=True)
+class SparseConfig:
+    """AB-Sparse configuration (paper §3)."""
+
+    enabled: bool = True
+    page_size: int = PAGE_SIZE
+    candidate_block_sizes: Tuple[int, ...] = CANDIDATE_BLOCK_SIZES
+    #: token budget T shared by all heads (paper fixes 4096 / 4% of context).
+    token_budget: int = 4096
+    #: if set, budget = max(min_budget, budget_frac * context_len) at runtime.
+    budget_frac: Optional[float] = None
+    #: centroid construction: "mean" | "quest" (min-max) | "arkvale" (bounding volume)
+    centroid_method: str = "quest"
+    #: "none" | "int8_asym" | "int8_sym" | "int4_asym" | "int4_sym" | "int2_asym"
+    quant: str = "int4_asym"
+    #: recall-retention threshold τ in Eq. (2).
+    tau: float = 0.98
+    #: block selection granularity: "kv_head" (scores max-pooled over the GQA
+    #: group; selected pages shared within the group) or "q_head".
+    selection_granularity: str = "kv_head"
+    #: number of initial (sink) and trailing (local) pages always kept, in pages.
+    sink_pages: int = 1
+    local_pages: int = 4
+    #: per-(layer, kv_head) block size assignment produced by calibration.
+    #: ``None`` means uniform ``uniform_block_size`` everywhere.
+    block_sizes: Optional[Tuple[Tuple[int, ...], ...]] = None
+    uniform_block_size: int = 32
+
+    def head_block_size(self, layer: int, head: int) -> int:
+        if self.block_sizes is None:
+            return self.uniform_block_size
+        return self.block_sizes[layer][head]
+
+    def layer_block_sizes(self, layer: int, n_kv_heads: int) -> Tuple[int, ...]:
+        if self.block_sizes is None:
+            return (self.uniform_block_size,) * n_kv_heads
+        row = self.block_sizes[layer]
+        assert len(row) == n_kv_heads
+        return tuple(row)
+
+    def budget_for(self, context_len: int) -> int:
+        if self.budget_frac is not None:
+            b = int(self.budget_frac * context_len)
+            b = max(b, 4 * max(self.candidate_block_sizes))
+        else:
+            b = self.token_budget
+        # budget never exceeds the context and is page aligned.
+        b = min(b, context_len)
+        return (b // self.page_size) * self.page_size
+
+
+# ---------------------------------------------------------------------------
+# Model architecture
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    experts_per_token: int
+    #: router jitter / load-balancing aux loss weight (training only)
+    router_aux_weight: float = 0.01
+    #: expert capacity = ceil(cf * tokens * K / E); >= E/K means lossless
+    capacity_factor: float = 1.25
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    #: "swiglu" | "geglu" | "relu2" | "gelu"
+    activation: str = "swiglu"
+    qkv_bias: bool = False
+    rope_theta: float = 500000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    moe: Optional[MoEConfig] = None
+    #: layer kinds, cycled over n_layers. "attn" | "local_attn" | "rglru" | "rwkv"
+    layer_pattern: Tuple[str, ...] = ("attn",)
+    local_window: int = 2048
+    #: rwkv6-specific dims
+    rwkv_head_dim: int = 64
+    #: modality frontend stub: None | "vision_patches" | "audio_frames"
+    frontend: Optional[str] = None
+    n_prefix_embeddings: int = 0
+    sparse: SparseConfig = field(default_factory=SparseConfig)
+
+    # -- derived ------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    def layer_kind(self, layer: int) -> str:
+        return self.layer_pattern[layer % len(self.layer_pattern)]
+
+    @property
+    def layer_kinds(self) -> Tuple[str, ...]:
+        return tuple(self.layer_kind(i) for i in range(self.n_layers))
+
+    @property
+    def attn_layers(self) -> Tuple[int, ...]:
+        return tuple(
+            i for i, k in enumerate(self.layer_kinds) if k in ("attn", "local_attn")
+        )
+
+    @property
+    def is_attention_free(self) -> bool:
+        return len(self.attn_layers) == 0
+
+    @property
+    def uses_global_attention(self) -> bool:
+        return any(k == "attn" for k in self.layer_kinds)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding included once)."""
+        d, h = self.d_model, self.resolved_head_dim
+        n_q, n_kv = self.n_heads, self.n_kv_heads
+        total = self.vocab_size * d  # embed
+        if not self.tie_embeddings:
+            total += self.vocab_size * d  # lm head
+        for kind in self.layer_kinds:
+            if kind in ("attn", "local_attn"):
+                attn = d * (n_q * h) + 2 * d * (n_kv * h) + (n_q * h) * d
+                if self.qkv_bias:
+                    attn += (n_q + 2 * n_kv) * h
+                total += attn
+            elif kind == "rglru":
+                # linear recurrent block: in/out proj + conv + gates
+                total += 2 * d * self.d_ff // 2 * 2 + 3 * (self.d_ff // 2)
+            elif kind == "rwkv":
+                total += 4 * d * d + 2 * d * d  # time-mix r,k,v,o + decay/bonus proj
+            if self.moe is not None:
+                total += d * self.moe.n_experts  # router
+                total += self.moe.n_experts * (self._ff_params())
+            else:
+                total += self._ff_params()
+            total += 2 * d  # norms
+        return total
+
+    def _ff_params(self) -> int:
+        gated = self.activation in ("swiglu", "geglu")
+        n_in = 2 if gated else 1
+        return (n_in + 1) * self.d_model * self.d_ff
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only routed experts)."""
+        if self.moe is None:
+            return self.param_count()
+        dense_like = dataclasses.replace(self, moe=None)
+        per_expert = self._ff_params()
+        base = dense_like.param_count() - self.n_layers * per_expert
+        return base + self.n_layers * (
+            self.moe.experts_per_token * per_expert + self.d_model * self.moe.n_experts
+        )
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned shape set)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4096, 256, "train"),
+    ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32768, 128, "decode"),
+    ShapeConfig("long_500k", 524288, 1, "decode"),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}
+
+
+# ---------------------------------------------------------------------------
+# Mesh / distribution plan
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MeshPlan:
+    """Which mesh axes exist and how logical axes map onto them."""
+
+    multi_pod: bool = False
+    #: activation-checkpoint policy: "none" | "full" | "dots"
+    remat: str = "dots"
+    #: microbatches for gradient accumulation (1 = none)
+    grad_accum: int = 1
+    #: int8 error-feedback gradient compression across the pod axis
+    grad_compression: bool = False
+    #: shard KV pages over the data axis when decode batch < data-axis size
+    context_parallel_decode: bool = True
+
+    @property
+    def axis_names(self) -> Tuple[str, ...]:
+        return ("pod", "data", "model") if self.multi_pod else ("data", "model")
+
+    @property
+    def mesh_shape(self) -> Tuple[int, ...]:
+        return (2, 16, 16) if self.multi_pod else (16, 16)
+
+    @property
+    def data_axes(self) -> Tuple[str, ...]:
+        return ("pod", "data") if self.multi_pod else ("data",)
+
+    @property
+    def n_devices(self) -> int:
+        return math.prod(self.mesh_shape)
+
+    @property
+    def data_size(self) -> int:
+        return (2 * 16) if self.multi_pod else 16
+
+    @property
+    def model_size(self) -> int:
+        return 16
+
+
+# ---------------------------------------------------------------------------
+# Training / serving knobs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    grad_clip: float = 1.0
+    seed: int = 0
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep_checkpoints: int = 3
+    #: straggler watchdog: steps whose wall time exceeds
+    #: ``straggler_factor`` x the running median are logged and the data shard
+    #: is re-queued (simulated single-host semantics on CPU).
+    straggler_factor: float = 3.0
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 128
+    max_context: int = 524288
+    page_size: int = PAGE_SIZE
+    #: physical pages per sequence slot are over-allocated by this factor to
+    #: amortize page-table rebuilds during decode.
+    page_headroom: float = 1.0
+    temperature: float = 0.6
+    top_k: int = 20
+    top_p: float = 0.95

@@ -1,0 +1,125 @@
+"""Architecture registry.
+
+One module per assigned architecture (exact published config), plus the three
+models the paper itself evaluates.  ``get_config(name)`` returns the full
+config; ``smoke_variant(cfg)`` returns a reduced same-family config for CPU
+smoke tests (full configs are only ever lowered via the dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+from repro.config import ModelConfig, MoEConfig, SparseConfig
+
+from . import (
+    musicgen_large,
+    qwen15_4b,
+    gemma_7b,
+    llama32_3b,
+    nemotron4_340b,
+    granite_moe_3b,
+    grok1_314b,
+    recurrentgemma_9b,
+    internvl2_2b,
+    rwkv6_3b,
+    llama31_8b,
+    qwen3_8b,
+    qwen3_32b,
+)
+
+_MODULES = {
+    "musicgen-large": musicgen_large,
+    "qwen1.5-4b": qwen15_4b,
+    "gemma-7b": gemma_7b,
+    "llama3.2-3b": llama32_3b,
+    "nemotron-4-340b": nemotron4_340b,
+    "granite-moe-3b-a800m": granite_moe_3b,
+    "grok-1-314b": grok1_314b,
+    "recurrentgemma-9b": recurrentgemma_9b,
+    "internvl2-2b": internvl2_2b,
+    "rwkv6-3b": rwkv6_3b,
+    # the paper's own evaluation models (not part of the assigned 10).
+    "llama3.1-8b": llama31_8b,
+    "qwen3-8b": qwen3_8b,
+    "qwen3-32b": qwen3_32b,
+}
+
+#: the 10 assigned architectures (dry-run / roofline matrix rows).
+ASSIGNED_ARCHS: Tuple[str, ...] = (
+    "musicgen-large",
+    "qwen1.5-4b",
+    "gemma-7b",
+    "llama3.2-3b",
+    "nemotron-4-340b",
+    "granite-moe-3b-a800m",
+    "grok-1-314b",
+    "recurrentgemma-9b",
+    "internvl2-2b",
+    "rwkv6-3b",
+)
+
+
+def list_archs() -> Tuple[str, ...]:
+    return tuple(_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return _MODULES[name].CONFIG
+    except KeyError:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {', '.join(_MODULES)}"
+        ) from None
+
+
+def smoke_variant(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family config: tiny widths, few layers, tiny vocab.
+
+    Preserves everything that changes code paths (activation, qkv bias, GQA
+    ratio when possible, layer pattern, MoE top-k, frontend kind).
+    """
+    n_layers = max(2, len(cfg.layer_pattern))
+    n_heads = 4
+    n_kv = max(1, min(cfg.n_kv_heads, 4 * cfg.n_kv_heads // max(cfg.n_heads, 1), 4))
+    if cfg.n_kv_heads == cfg.n_heads:
+        n_kv = n_heads  # preserve MHA
+    elif cfg.n_kv_heads == 1:
+        n_kv = 1  # preserve MQA
+    else:
+        n_kv = 2
+    moe = cfg.moe
+    if moe is not None:
+        k = min(2, moe.experts_per_token)
+        moe = MoEConfig(
+            n_experts=4,
+            experts_per_token=k,
+            router_aux_weight=moe.router_aux_weight,
+            # lossless capacity (C == group tokens): smoke tests assert
+            # bit-exact prefill->decode continuation, which token dropping
+            # (a batch-context effect) would break.
+            capacity_factor=4.0 / k,
+        )
+    sparse = dataclasses.replace(
+        cfg.sparse,
+        token_budget=64,
+        block_sizes=None,
+        sink_pages=1,
+        local_pages=1,
+    )
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        n_layers=n_layers,
+        d_model=64,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=16 if cfg.head_dim else 0,
+        d_ff=128,
+        vocab_size=256,
+        moe=moe,
+        local_window=64,
+        n_prefix_embeddings=min(cfg.n_prefix_embeddings, 8),
+        sparse=sparse,
+        dtype="float32",
+    )

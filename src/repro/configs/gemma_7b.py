@@ -1,0 +1,22 @@
+"""Gemma-7B — dense decoder, GeGLU, head_dim=256.
+
+[arXiv:2403.08295; hf]  28L d_model=3072 16H (GQA kv=16 == MHA) d_ff=24576
+vocab=256000, GeGLU activation, head_dim=256 (so n_heads*head_dim = 4096 !=
+d_model — the o-projection maps 4096 -> 3072).
+"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma-7b",
+    family="dense",
+    n_layers=28,
+    d_model=3072,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=24576,
+    vocab_size=256000,
+    head_dim=256,
+    activation="geglu",
+    rope_theta=10000.0,
+    tie_embeddings=True,
+)

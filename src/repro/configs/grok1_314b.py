@@ -1,0 +1,20 @@
+"""Grok-1-314B — large MoE, 8 experts top-2.
+
+[hf:xai-org/grok-1; unverified]  64L d_model=6144 48H (GQA kv=8) d_ff=32768
+(per-expert), vocab=131072, MoE 8 experts top-2, GeGLU.
+"""
+from repro.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=32768,
+    vocab_size=131072,
+    activation="geglu",
+    rope_theta=10000.0,
+    moe=MoEConfig(n_experts=8, experts_per_token=2),
+)

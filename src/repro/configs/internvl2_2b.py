@@ -1,0 +1,23 @@
+"""InternVL2-2B — InternLM2 backbone + InternViT frontend (stub).
+
+[arXiv:2404.16821; hf]  24L d_model=2048 16H (GQA kv=8) d_ff=8192 vocab=92553.
+The vision tower is a STUB per the assignment: ``input_specs`` provides
+precomputed patch embeddings (256 patches per image tile) that are prepended
+to the token embedding sequence.
+"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-2b",
+    family="vlm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab_size=92553,
+    activation="swiglu",
+    rope_theta=1000000.0,
+    frontend="vision_patches",
+    n_prefix_embeddings=256,
+)

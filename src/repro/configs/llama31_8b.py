@@ -1,0 +1,19 @@
+"""Llama-3.1-8B — the paper's primary evaluation model.
+
+[hf:meta-llama/Llama-3.1-8B]  32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=128256.
+"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.1-8b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=128256,
+    activation="swiglu",
+    rope_theta=500000.0,
+)

@@ -1,0 +1,20 @@
+"""Llama-3.2-3B — small llama3 dense decoder.
+
+[hf:meta-llama/Llama-3.2-3B; unverified]  28L d_model=3072 24H (GQA kv=8)
+d_ff=8192 vocab=128256, SwiGLU.
+"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.2-3b",
+    family="dense",
+    n_layers=28,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab_size=128256,
+    activation="swiglu",
+    rope_theta=500000.0,
+    tie_embeddings=True,
+)

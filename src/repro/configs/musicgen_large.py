@@ -1,0 +1,22 @@
+"""MusicGen-Large — decoder-only transformer over EnCodec tokens.
+
+[arXiv:2306.05284; hf]  48L d_model=2048 32H (GQA kv=32 == MHA) d_ff=8192
+vocab=2048.  The EnCodec audio frontend is a STUB per the assignment:
+``input_specs`` provides precomputed frame embeddings for the prefix.
+"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large",
+    family="audio",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab_size=2048,
+    activation="gelu",
+    rope_theta=10000.0,
+    frontend="audio_frames",
+    n_prefix_embeddings=0,
+)

@@ -1,0 +1,19 @@
+"""Qwen3-32B — paper evaluation model. [hf:Qwen/Qwen3-32B]
+
+64L d_model=5120 64H (GQA kv=8) d_ff=25600 vocab=151936, head_dim=128.
+"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=25600,
+    vocab_size=151936,
+    head_dim=128,
+    activation="swiglu",
+    rope_theta=1000000.0,
+)

@@ -1,0 +1,18 @@
+"""Qwen3-8B — paper evaluation model. [hf:Qwen/Qwen3-8B]
+
+36L d_model=4096 32H (GQA kv=8) d_ff=12288 vocab=151936, head_dim=128.
+"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-8b",
+    family="dense",
+    n_layers=36,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=12288,
+    vocab_size=151936,
+    activation="swiglu",
+    rope_theta=1000000.0,
+)

@@ -1,0 +1,32 @@
+"""RecurrentGemma-9B — Griffin hybrid: RG-LRU + local attention, 2:1.
+
+[arXiv:2402.19427; unverified]  38L d_model=4096 16H (MQA kv=1) d_ff=12288
+vocab=256000.  Layer pattern cycles (rglru, rglru, local_attn) — two
+recurrent blocks per local-attention block, window 2048.
+
+AB-Sparse note: local attention has a fixed 2048-token window, so the KV
+cache never grows with context; there is nothing for Top-K block selection
+to prune.  The arch is implemented WITHOUT the sparse path (see DESIGN.md
+§Arch-applicability).
+"""
+import dataclasses
+
+from repro.config import ModelConfig, SparseConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,
+    d_ff=12288,
+    vocab_size=256000,
+    head_dim=256,
+    activation="geglu",
+    rope_theta=10000.0,
+    tie_embeddings=True,
+    layer_pattern=("rglru", "rglru", "local_attn"),
+    local_window=2048,
+    sparse=SparseConfig(enabled=False),
+)

@@ -1,0 +1,25 @@
+"""RWKV-6 (Finch) 3B — attention-free, data-dependent decay.
+
+[arXiv:2404.05892; hf]  32L d_model=2560 d_ff=8960 vocab=65536.  Time-mixing
+with data-dependent decay (wkv6 recurrence), head_dim 64.
+
+AB-Sparse note: attention-free — no KV cache, no block selection.  The arch
+is implemented WITHOUT the sparse path (DESIGN.md §Arch-applicability);
+decode state is O(1) in context length, so long_500k runs natively.
+"""
+from repro.config import ModelConfig, SparseConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b",
+    family="ssm",
+    n_layers=32,
+    d_model=2560,
+    n_heads=40,        # 2560 / 64 time-mix heads
+    n_kv_heads=40,
+    d_ff=8960,
+    vocab_size=65536,
+    activation="relu2",  # rwkv channel-mix uses squared relu
+    layer_pattern=("rwkv",),
+    rwkv_head_dim=64,
+    sparse=SparseConfig(enabled=False),
+)

@@ -1,0 +1,142 @@
+"""Block centroid construction (paper §2.2 footnote 1, §4.1 baselines).
+
+Three representation strategies, all orthogonal to the adaptive-block-size
+technique (the paper applies AB-Sparse on top of each):
+
+- ``mean``      mean pooling (MoBA-style):        score = q . c
+- ``quest``     per-channel min-max pooling:      score = sum_d max(q_d*cmax_d, q_d*cmin_d)
+- ``arkvale``   bounding volume (center+radius):  score = q . ctr + ||q|| * r
+
+TPU adaptation — the *unified rank-key formulation*: every method's score is
+rewritten as a single inner product ``dot(rank_query(q), rank_keys(K))`` so
+the estimation stage is one MXU matmul regardless of method:
+
+- mean:     rq = q                    rk = c                 (width D)
+- quest:    rq = [relu(q), -relu(-q)] rk = [cmax, cmin]      (width 2D)
+            (q_d>=0 picks q_d*cmax_d, q_d<0 picks q_d*cmin_d — exactly the
+            Quest upper bound, now expressible as one matmul.)
+- arkvale:  rq = [q, ||q||_2]         rk = [center, radius]  (width D+1)
+
+Rank keys are what gets INT4-quantized and stored (the "centroid store");
+widths are zero-padded to the 128-lane boundary for the Pallas kernel.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+LANE = 128
+
+METHODS = ("mean", "quest", "arkvale")
+
+
+def rank_key_width(head_dim: int, method: str) -> int:
+    """Logical (unpadded) rank-key width D' for a method."""
+    if method == "mean":
+        return head_dim
+    if method == "quest":
+        return 2 * head_dim
+    if method == "arkvale":
+        return head_dim + 1
+    raise ValueError(f"unknown centroid method {method!r}")
+
+
+def padded_rank_key_width(head_dim: int, method: str) -> int:
+    w = rank_key_width(head_dim, method)
+    return ((w + LANE - 1) // LANE) * LANE
+
+
+def build_rank_keys(
+    keys: jax.Array, block_size: int, method: str, pad: bool = True
+) -> jax.Array:
+    """Summarize ``keys [..., S, D]`` into per-block rank keys ``[..., Nb, D']``.
+
+    S must be a multiple of ``block_size``.  Leading axes (head, batch) are
+    broadcast.  Output padded to the 128-lane boundary when ``pad``.
+    """
+    *lead, S, D = keys.shape
+    assert S % block_size == 0, (S, block_size)
+    nb = S // block_size
+    blocks = keys.reshape(*lead, nb, block_size, D).astype(jnp.float32)
+
+    if method == "mean":
+        rk = jnp.mean(blocks, axis=-2)
+    elif method == "quest":
+        cmax = jnp.max(blocks, axis=-2)
+        cmin = jnp.min(blocks, axis=-2)
+        rk = jnp.concatenate([cmax, cmin], axis=-1)
+    elif method == "arkvale":
+        # bounding ball: center = (elementwise max+min)/2, radius covers the
+        # farthest key in the block (tight axis-aligned bounding sphere).
+        cmax = jnp.max(blocks, axis=-2)
+        cmin = jnp.min(blocks, axis=-2)
+        center = 0.5 * (cmax + cmin)
+        radius = jnp.sqrt(
+            jnp.max(
+                jnp.sum((blocks - center[..., None, :]) ** 2, axis=-1), axis=-1
+            )
+        )
+        rk = jnp.concatenate([center, radius[..., None]], axis=-1)
+    else:
+        raise ValueError(f"unknown centroid method {method!r}")
+
+    if pad:
+        w = padded_rank_key_width(D, method)
+        pad_w = w - rk.shape[-1]
+        if pad_w:
+            rk = jnp.pad(rk, [(0, 0)] * (rk.ndim - 1) + [(0, pad_w)])
+    return rk
+
+
+def rank_query(q: jax.Array, method: str, head_dim: int, pad: bool = True) -> jax.Array:
+    """Transform queries ``[..., D]`` into rank queries ``[..., D']``.
+
+    Inner products of rank queries with rank keys reproduce each method's
+    block-importance score exactly (padding channels are zero on the query
+    side, so padded key channels contribute nothing).
+    """
+    q = q.astype(jnp.float32)
+    if method == "mean":
+        rq = q
+    elif method == "quest":
+        rq = jnp.concatenate([jnp.maximum(q, 0.0), jnp.minimum(q, 0.0)], axis=-1)
+    elif method == "arkvale":
+        norm = jnp.linalg.norm(q, axis=-1, keepdims=True)
+        rq = jnp.concatenate([q, norm], axis=-1)
+    else:
+        raise ValueError(f"unknown centroid method {method!r}")
+    if pad:
+        w = padded_rank_key_width(head_dim, method)
+        pad_w = w - rq.shape[-1]
+        if pad_w:
+            rq = jnp.pad(rq, [(0, 0)] * (rq.ndim - 1) + [(0, pad_w)])
+    return rq
+
+
+def reference_block_score(
+    q: jax.Array, keys: jax.Array, block_size: int, method: str
+) -> jax.Array:
+    """Direct (non-rank-key) score formula — the oracle the unified
+    formulation is property-tested against.  q: [D], keys: [S, D] ->
+    scores [S/block_size]."""
+    S, D = keys.shape
+    nb = S // block_size
+    blocks = keys.reshape(nb, block_size, D).astype(jnp.float32)
+    q = q.astype(jnp.float32)
+    if method == "mean":
+        return jnp.einsum("d,nd->n", q, jnp.mean(blocks, axis=1))
+    if method == "quest":
+        cmax = jnp.max(blocks, axis=1)
+        cmin = jnp.min(blocks, axis=1)
+        return jnp.sum(jnp.maximum(q * cmax, q * cmin), axis=-1)
+    if method == "arkvale":
+        cmax = jnp.max(blocks, axis=1)
+        cmin = jnp.min(blocks, axis=1)
+        center = 0.5 * (cmax + cmin)
+        radius = jnp.sqrt(
+            jnp.max(jnp.sum((blocks - center[:, None, :]) ** 2, axis=-1), axis=-1)
+        )
+        return jnp.einsum("d,nd->n", q, center) + jnp.linalg.norm(q) * radius
+    raise ValueError(method)

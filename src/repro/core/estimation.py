@@ -1,0 +1,106 @@
+"""Query-centroid importance estimation (paper Kernel 1, reference level).
+
+The Pallas kernel (:mod:`repro.kernels.centroid_score`) implements the same
+contract; this module is the pure-jnp oracle and the CPU execution path.
+
+Contract: given per-sequence flattened rank keys ``[B, N_total, D']``
+(optionally INT4/INT8-quantized) and rank queries ``[B, n_q, D']``, produce
+block-importance scores in the padded 2-D per-kv-head view
+``[B, n_kv_heads, max_blocks]`` with -inf in pad slots.  GQA aggregation:
+scores of the query heads in a group are max-pooled onto their kv head
+(``selection_granularity == "kv_head"``).
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantization import QuantizedTensor, dequantize
+from repro.core.ragged import RaggedLayout
+
+NEG_INF = -1e30
+
+
+def _row_head(layout: RaggedLayout) -> np.ndarray:
+    """Static per-row owning head id over the flattened layout."""
+    out = np.zeros(layout.total_rows, dtype=np.int32)
+    for h in range(layout.n_heads):
+        out[layout.offsets[h] : layout.offsets[h + 1]] = h
+    return out
+
+
+def estimate_scores(
+    rank_q: jax.Array,
+    rank_keys: Union[jax.Array, QuantizedTensor],
+    layout,
+    n_kv_heads: int,
+    granularity: str = "kv_head",
+) -> jax.Array:
+    """-> scores ``[B, n_kv_heads (or n_q), max_blocks]``, -inf in pads.
+
+    ``layout`` may be a static RaggedLayout or array-form LayoutArrays.
+    """
+    from repro.core.stacked import as_arrays
+
+    la = as_arrays(layout)
+    if isinstance(rank_keys, QuantizedTensor):
+        rank_keys = dequantize(rank_keys)
+    rank_keys = rank_keys.astype(jnp.float32)
+    rank_q = rank_q.astype(jnp.float32)
+    B, n_q, Dp = rank_q.shape
+    assert rank_keys.shape[-1] == Dp, (rank_keys.shape, Dp)
+    g = n_q // n_kv_heads
+
+    # all-pairs reference: [B, n_q, N_total]
+    flat = jnp.einsum("bqd,bnd->bqn", rank_q, rank_keys)
+    rows = la.scatter_rows                             # [H, max_blocks]
+    mask = la.pad_mask                                 # [H, max_blocks]
+    if granularity == "kv_head":
+        flat = flat.reshape(B, n_kv_heads, g, -1).max(axis=2)  # [B, n_kv, N]
+        picked = jnp.take_along_axis(
+            flat, jnp.broadcast_to(rows[None], (B,) + rows.shape), axis=2
+        )
+        scores = jnp.where(mask[None], picked, NEG_INF)
+    elif granularity == "q_head":
+        # per-query-head selection: each q head keeps its own score row over
+        # its kv head's centroids.
+        kv_of_q = jnp.arange(n_q) // g
+        picked = flat[:, jnp.arange(n_q)[:, None], rows[kv_of_q]]
+        scores = jnp.where(mask[kv_of_q][None], picked, NEG_INF)
+    else:
+        raise ValueError(granularity)
+    return scores
+
+
+def estimate_scores_dense_oracle(
+    q: jax.Array,
+    keys: jax.Array,
+    layout: RaggedLayout,
+    method: str,
+    granularity: str = "kv_head",
+) -> jax.Array:
+    """End-to-end oracle straight from raw K vectors (no rank-key layout):
+    q ``[B, n_q, D]``, keys ``[B, n_kv, S, D]`` -> ``[B, H, max_blocks]``.
+
+    Used by property tests to pin the unified rank-key path to the paper's
+    score formulas.
+    """
+    from repro.core.centroids import build_rank_keys, rank_query
+
+    B, n_kv, S, D = keys.shape
+    n_q = q.shape[1]
+    g = n_q // n_kv
+    rq = rank_query(q, method, D)  # [B, n_q, Dp]
+    per_head = []
+    for h in range(n_kv):
+        rk = build_rank_keys(keys[:, h], layout.block_sizes[h], method)  # [B, nb, Dp]
+        s = jnp.einsum("bqd,bnd->bqn", rq[:, h * g : (h + 1) * g], rk)
+        if granularity == "kv_head":
+            s = s.max(axis=1)  # [B, nb]
+        pad = layout.max_blocks - s.shape[-1]
+        s = jnp.pad(s, [(0, 0)] * (s.ndim - 1) + [(0, pad)], constant_values=NEG_INF)
+        per_head.append(s)
+    return jnp.stack(per_head, axis=1)

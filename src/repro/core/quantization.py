@@ -1,0 +1,237 @@
+"""Centroid quantization (paper §3.3).
+
+Centroids ("rank keys", see :mod:`repro.core.centroids`) are used only for
+*ranking* blocks, never inside the attention computation — they are
+precision-insensitive.  Per-channel values cluster tightly (paper Fig. 7),
+so one (scale, zero_point) pair per channel suffices.
+
+Supported schemes: {INT2, INT4, INT8} x {symmetric, asymmetric}, per-channel
+or per-tensor.  The deployed scheme is INT4 asymmetric per-channel; the rest
+exist to reproduce the paper's ablation ladder (Fig. 8/13).
+
+INT4 values are bit-packed two-per-byte along the channel axis so the packed
+array is exactly what the Pallas estimation kernel DMAs from HBM.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_SCHEMES = {
+    # name: (bits, symmetric)
+    "int8_asym": (8, False),
+    "int8_sym": (8, True),
+    "int4_asym": (4, False),
+    "int4_sym": (4, True),
+    "int2_asym": (2, False),
+    "int2_sym": (2, True),
+}
+
+
+def scheme_bits(scheme: str) -> int:
+    return _SCHEMES[scheme][0]
+
+
+def scheme_symmetric(scheme: str) -> bool:
+    return _SCHEMES[scheme][1]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class QuantizedTensor:
+    """Quantized array + per-channel affine parameters.
+
+    ``codes`` holds unpacked integer codes (uint8, one code per element) in
+    reference form, or nibble-packed bytes when ``packed`` is True (INT4/INT2
+    only, packed along the last axis).
+    """
+
+    codes: jax.Array          # uint8
+    scale: jax.Array          # f32, broadcastable to logical shape
+    zero: jax.Array           # f32 zero point (0.0 for symmetric)
+    bits: int
+    packed: bool
+    symmetric: bool
+    logical_shape: Tuple[int, ...]
+
+    def tree_flatten(self):
+        return (self.codes, self.scale, self.zero), (
+            self.bits,
+            self.packed,
+            self.symmetric,
+            self.logical_shape,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        codes, scale, zero = children
+        bits, packed, symmetric, logical_shape = aux
+        return cls(codes, scale, zero, bits, packed, symmetric, logical_shape)
+
+    @property
+    def nbytes_codes(self) -> int:
+        import math
+
+        n = math.prod(self.logical_shape)
+        return n * self.bits // 8
+
+
+def _qrange(bits: int, symmetric: bool) -> Tuple[float, float]:
+    if symmetric:
+        # signed range stored with an offset so codes stay unsigned.
+        half = 2 ** (bits - 1) - 1
+        return (-half, half)
+    return (0.0, 2.0**bits - 1.0)
+
+
+def quantize(
+    x: jax.Array,
+    scheme: str = "int4_asym",
+    channel_axis: Optional[int] = -1,
+    reduce_axes: Optional[Tuple[int, ...]] = None,
+    pack: bool = False,
+) -> QuantizedTensor:
+    """Quantize ``x`` with per-channel affine parameters.
+
+    ``channel_axis`` is the axis whose positions each get their own
+    (scale, zero); statistics are reduced over every *other* axis
+    (``None`` -> per-tensor).  Pass explicit ``reduce_axes`` to keep
+    additional axes un-reduced (e.g. per-(batch, head, channel) scales for
+    the flattened centroid store: reduce over the block-row axis only).
+    """
+    bits, symmetric = _SCHEMES[scheme]
+    x = x.astype(jnp.float32)
+    if reduce_axes is not None:
+        reduce_axes = tuple(a % x.ndim for a in reduce_axes)
+    elif channel_axis is None:
+        reduce_axes = tuple(range(x.ndim))
+    else:
+        channel_axis = channel_axis % x.ndim
+        reduce_axes = tuple(i for i in range(x.ndim) if i != channel_axis)
+
+    qlo, qhi = _qrange(bits, symmetric)
+    if symmetric:
+        amax = jnp.max(jnp.abs(x), axis=reduce_axes, keepdims=True)
+        scale = jnp.maximum(amax / qhi, 1e-8)
+        zero = jnp.zeros_like(scale)
+        q = jnp.clip(jnp.round(x / scale), qlo, qhi)
+        # store unsigned: code = q + qhi  (so int4_sym codes live in [0, 14])
+        codes = (q + qhi).astype(jnp.uint8)
+    else:
+        xmin = jnp.min(x, axis=reduce_axes, keepdims=True)
+        xmax = jnp.max(x, axis=reduce_axes, keepdims=True)
+        scale = jnp.maximum((xmax - xmin) / qhi, 1e-8)
+        zero = xmin  # dequant: x = code * scale + zero
+        codes = jnp.clip(jnp.round((x - xmin) / scale), 0, qhi).astype(jnp.uint8)
+
+    qt = QuantizedTensor(
+        codes=codes,
+        scale=scale,
+        zero=zero,
+        bits=bits,
+        packed=False,
+        symmetric=symmetric,
+        logical_shape=tuple(x.shape),
+    )
+    if pack:
+        qt = pack_codes(qt)
+    return qt
+
+
+def dequantize(qt: QuantizedTensor) -> jax.Array:
+    codes = unpack_codes(qt).codes.astype(jnp.float32)
+    if qt.symmetric:
+        half = 2.0 ** (qt.bits - 1) - 1.0
+        return (codes - half) * qt.scale + qt.zero
+    return codes * qt.scale + qt.zero
+
+
+# -- packing ---------------------------------------------------------------
+
+
+def pack_codes(qt: QuantizedTensor) -> QuantizedTensor:
+    """Nibble/crumb-pack codes along the last axis (INT4: 2/byte, INT2: 4/byte)."""
+    if qt.packed or qt.bits == 8:
+        return qt
+    codes = qt.codes
+    per_byte = 8 // qt.bits
+    assert codes.shape[-1] % per_byte == 0, (
+        f"last axis {codes.shape[-1]} not a multiple of {per_byte}"
+    )
+    new_shape = codes.shape[:-1] + (codes.shape[-1] // per_byte, per_byte)
+    grouped = codes.reshape(new_shape).astype(jnp.uint32)
+    shifts = jnp.arange(per_byte, dtype=jnp.uint32) * qt.bits
+    packed = jnp.sum(grouped << shifts, axis=-1).astype(jnp.uint8)
+    return QuantizedTensor(
+        codes=packed,
+        scale=qt.scale,
+        zero=qt.zero,
+        bits=qt.bits,
+        packed=True,
+        symmetric=qt.symmetric,
+        logical_shape=qt.logical_shape,
+    )
+
+
+def unpack_codes(qt: QuantizedTensor) -> QuantizedTensor:
+    if not qt.packed:
+        return qt
+    per_byte = 8 // qt.bits
+    mask = jnp.uint32(2**qt.bits - 1)
+    packed = qt.codes.astype(jnp.uint32)
+    shifts = jnp.arange(per_byte, dtype=jnp.uint32) * qt.bits
+    unpacked = (packed[..., None] >> shifts) & mask
+    codes = unpacked.reshape(qt.logical_shape).astype(jnp.uint8)
+    return QuantizedTensor(
+        codes=codes,
+        scale=qt.scale,
+        zero=qt.zero,
+        bits=qt.bits,
+        packed=False,
+        symmetric=qt.symmetric,
+        logical_shape=qt.logical_shape,
+    )
+
+
+def pack_split_half(codes: jax.Array) -> jax.Array:
+    """INT4 kernel-layout packing: byte ``j`` holds channels ``(j, j+W/2)``
+    as (low, high) nibbles, where W is the channel width.
+
+    Unpacking is then a lane-wise concat — no interleave shuffle — which is
+    what the Pallas estimation kernel does in VREGs:
+    ``unpacked = concat([b & 0xF, b >> 4], axis=-1)``.
+    """
+    W = codes.shape[-1]
+    assert W % 2 == 0, W
+    lo = codes[..., : W // 2].astype(jnp.uint8)
+    hi = codes[..., W // 2 :].astype(jnp.uint8)
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_split_half(packed: jax.Array) -> jax.Array:
+    lo = packed & jnp.uint8(0xF)
+    hi = (packed >> 4) & jnp.uint8(0xF)
+    return jnp.concatenate([lo, hi], axis=-1)
+
+
+def fake_quantize(
+    x: jax.Array, scheme: str, channel_axis: Optional[int] = -1
+) -> jax.Array:
+    """quantize -> dequantize round trip (the reference path used by tests
+    and by the pure-jnp estimation oracle)."""
+    if scheme in (None, "none"):
+        return x.astype(jnp.float32)
+    qt = quantize(x, scheme, channel_axis)
+    codes = qt.codes.astype(jnp.float32)
+    if _SCHEMES[scheme][1]:
+        half = 2.0 ** (qt.bits - 1) - 1.0
+        return (codes - half) * qt.scale
+    return codes * qt.scale + qt.zero
+
+
+def quantization_error_bound(qt: QuantizedTensor) -> jax.Array:
+    """Max absolute reconstruction error is scale/2 per channel (property 2)."""
+    return qt.scale * 0.5

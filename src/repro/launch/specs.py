@@ -1,0 +1,127 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) dry-run cell.
+
+No allocation anywhere: params / optimizer state / decode cache specs come
+from ``jax.eval_shape`` over the real constructors, so the dry-run lowers
+the exact computation the runtime would execute.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (
+    MeshPlan,
+    ModelConfig,
+    ShapeConfig,
+    TrainConfig,
+)
+from repro.models import Transformer
+from repro.training.optimizer import init_opt_state
+from repro.training.train_loop import make_train_step
+
+
+def prefix_spec(cfg: ModelConfig, batch: int) -> Optional[jax.ShapeDtypeStruct]:
+    if cfg.frontend is None or cfg.n_prefix_embeddings == 0:
+        return None
+    return jax.ShapeDtypeStruct(
+        (batch, cfg.n_prefix_embeddings, cfg.d_model), jnp.dtype(cfg.dtype)
+    )
+
+
+def params_spec(model: Transformer):
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def opt_spec(params_shapes, compression: bool = False):
+    return jax.eval_shape(
+        functools.partial(init_opt_state, compression=compression),
+        params_shapes,
+    )
+
+
+def cache_spec(model: Transformer, batch: int, max_context: int):
+    return jax.eval_shape(
+        lambda: model.init_cache(batch, max_context)
+    )
+
+
+def build_cell(
+    cfg: ModelConfig, shape: ShapeConfig, plan: MeshPlan
+) -> Dict[str, Any]:
+    """-> dict(step_fn, arg_specs (tree of ShapeDtypeStruct), arg_kinds
+    (param|cache|data per top-level arg)) for one dry-run cell."""
+    model = Transformer(cfg)
+    train_cfg = TrainConfig()
+
+    if shape.kind == "train":
+        pspec = params_spec(model)
+        ospec = opt_spec(pspec, plan.grad_compression)
+        tokens = jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len), jnp.int32
+        )
+        prefix = prefix_spec(cfg, shape.global_batch)
+        step = make_train_step(model, train_cfg, plan)
+        if prefix is not None:
+            base = step
+
+            def step_with_prefix(params, opt, tokens, prefix):
+                def loss_fn(p, t):
+                    return model.loss(p, t, prefix, remat=plan.remat)
+
+                loss, grads = jax.value_and_grad(loss_fn)(params, tokens)
+                from repro.training.optimizer import adamw_update
+
+                params, opt, metrics = adamw_update(
+                    train_cfg, params, grads, opt
+                )
+                metrics["loss"] = loss
+                return params, opt, metrics
+
+            return {
+                "model": model,
+                "fn": step_with_prefix,
+                "args": (pspec, ospec, tokens, prefix),
+                "kinds": ("param", "opt", "data", "data"),
+            }
+        return {
+            "model": model,
+            "fn": step,
+            "args": (pspec, ospec, tokens),
+            "kinds": ("param", "opt", "data"),
+        }
+
+    if shape.kind == "prefill":
+        pspec = params_spec(model)
+        tokens = jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len), jnp.int32
+        )
+        prefix = prefix_spec(cfg, shape.global_batch)
+
+        # the modality prefix consumes context alongside the prompt tokens
+        n_prefix = cfg.n_prefix_embeddings if cfg.frontend else 0
+        max_ctx = shape.seq_len + n_prefix
+
+        def prefill_fn(params, tokens, prefix=None):
+            return model.prefill(params, tokens, prefix, max_context=max_ctx)
+
+        args = (pspec, tokens) + ((prefix,) if prefix is not None else ())
+        kinds = ("param", "data") + (("data",) if prefix is not None else ())
+        return {"model": model, "fn": prefill_fn, "args": args, "kinds": kinds}
+
+    # decode: one new token against a KV cache of seq_len
+    pspec = params_spec(model)
+    cspec = cache_spec(model, shape.global_batch, shape.seq_len)
+    tokens = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+
+    def decode_fn(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    return {
+        "model": model,
+        "fn": decode_fn,
+        "args": (pspec, cspec, tokens),
+        "kinds": ("param", "cache", "data"),
+    }

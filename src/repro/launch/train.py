@@ -1,0 +1,58 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
+        --steps 100 [--smoke] [--grad-accum 2] [--resume]
+
+``--smoke`` trains the reduced same-family config on the local device
+(CPU-runnable); without it the full config is used (TPU-scale — on this
+container use the dry-run instead).  The loop checkpoints atomically,
+auto-resumes, and logs straggler events.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.config import MeshPlan, TrainConfig
+from repro.configs import get_config, smoke_variant
+from repro.training.data import DataConfig
+from repro.training.train_loop import Trainer, run_with_restarts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--seq-len", type=int, default=None)
+    ap.add_argument("--global-batch", type=int, default=None)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--no-resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    seq = args.seq_len or (256 if args.smoke else 4096)
+    gb = args.global_batch or (8 if args.smoke else 256)
+
+    tc = TrainConfig(
+        learning_rate=args.lr,
+        total_steps=args.steps,
+        warmup_steps=max(2, args.steps // 20),
+        checkpoint_every=max(5, args.steps // 10),
+        checkpoint_dir=args.ckpt_dir,
+    )
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq, global_batch=gb)
+    trainer = Trainer(cfg, tc, dc, MeshPlan(grad_accum=args.grad_accum,
+                                            remat="dots"))
+    out = run_with_restarts(trainer, args.steps)
+    losses = out["losses"]
+    print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f}); "
+          f"restarts={out['fault_log'].restarts} "
+          f"stragglers={len(out['fault_log'].stragglers)}")
+
+
+if __name__ == "__main__":
+    main()

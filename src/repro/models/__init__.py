@@ -1,0 +1,6 @@
+"""Model zoo: one composable transformer covering all 10 assigned
+architectures (dense GQA / MoE / RG-LRU hybrid / RWKV6 / VLM+audio stubs),
+with AB-Sparse integrated as a first-class decode path."""
+from repro.models.transformer import Transformer, Cache
+
+__all__ = ["Transformer", "Cache"]

@@ -1,0 +1,285 @@
+"""Common layers: RMSNorm, RoPE / sinusoidal positions, MLP variants,
+attention projections.  Pure functions over param dicts; sharding via
+logical-axis annotations (no-ops outside a mesh context)."""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+
+def truncated_normal_init(key, shape, stddev, dtype):
+    return (stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(
+        dtype
+    )
+
+
+# -- norms -------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype) -> Dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(p: Dict, x: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# -- positions ---------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x [..., S, n, D] rotated pairwise; positions [..., S]."""
+    D = x.shape[-1]
+    half = D // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def sinusoidal_embedding(positions: jax.Array, d: int) -> jax.Array:
+    half = d // 2
+    freqs = jnp.exp(
+        -math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half
+    )
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# -- dense / MLP --------------------------------------------------------------
+
+
+def init_dense(key, d_in: int, d_out: int, dtype, bias: bool = False) -> Dict:
+    p = {"w": truncated_normal_init(key, (d_in, d_out), d_in**-0.5, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Dict, x: jax.Array) -> jax.Array:
+    from repro.distributed.params import cast_cotangent
+
+    # cast_cotangent pins the BACKWARD chain to the compute dtype at every
+    # projection boundary: rope/rms f32 internals otherwise re-upcast the
+    # cotangent so each dW einsum (and its DP all-reduce) runs in f32 —
+    # 2x reduction traffic + an f32 grad stack (§Perf iteration 2.6).
+    x = cast_cotangent(x, x.dtype)
+    y = jnp.einsum("...d,df->...f", x, p["w"])
+    if "b" in p:
+        y = y + p["b"]
+    return cast_cotangent(y.astype(x.dtype), x.dtype)
+
+
+GATED = {"swiglu", "geglu"}
+
+
+def init_mlp(key, d_model: int, d_ff: int, activation: str, dtype) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"down": init_dense(k2, d_ff, d_model, dtype)}
+    p["up"] = init_dense(k1, d_model, d_ff, dtype)
+    if activation in GATED:
+        p["gate"] = init_dense(k3, d_model, d_ff, dtype)
+    return p
+
+
+def mlp(p: Dict, x: jax.Array, activation: str) -> jax.Array:
+    up = dense(p["up"], x)
+    up = constrain(up, *(("batch",) + (None,) * (up.ndim - 2) + ("mlp",)))
+    if activation == "swiglu":
+        h = jax.nn.silu(dense(p["gate"], x)) * up
+    elif activation == "geglu":
+        h = jax.nn.gelu(dense(p["gate"], x), approximate=True) * up
+    elif activation == "relu2":
+        h = jnp.square(jax.nn.relu(up))
+    elif activation == "gelu":
+        h = jax.nn.gelu(up, approximate=True)
+    else:
+        raise ValueError(activation)
+    return dense(p["down"], h)
+
+
+# -- attention projections -----------------------------------------------------
+
+
+def init_attention(key, cfg) -> Dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "wq": init_dense(kq, d, cfg.n_heads * hd, dtype, cfg.qkv_bias),
+        "wk": init_dense(kk, d, cfg.n_kv_heads * hd, dtype, cfg.qkv_bias),
+        "wv": init_dense(kv, d, cfg.n_kv_heads * hd, dtype, cfg.qkv_bias),
+        "wo": init_dense(ko, cfg.n_heads * hd, d, dtype),
+    }
+
+
+def qkv_project(
+    p: Dict, x: jax.Array, cfg, positions: jax.Array
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x [B, S, d] -> q [B, S, Hq, hd], k/v [B, S, Hkv, hd] (RoPE applied)."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = dense(p["wq"], x).reshape(B, S, cfg.n_heads, hd)
+    k = dense(p["wk"], x).reshape(B, S, cfg.n_kv_heads, hd)
+    v = dense(p["wv"], x).reshape(B, S, cfg.n_kv_heads, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def out_project(p: Dict, attn_out: jax.Array, cfg) -> jax.Array:
+    """attn_out [B, S, Hq, hd] -> [B, S, d]."""
+    B, S = attn_out.shape[:2]
+    return dense(p["wo"], attn_out.reshape(B, S, -1))
+
+
+# -- chunked causal attention (pure-jnp flash; reference/train path) -----------
+
+
+def chunked_causal_attention(
+    q: jax.Array,          # [B, Hq, S, D]
+    k: jax.Array,          # [B, Hkv, S, D]
+    v: jax.Array,
+    chunk: int = 512,
+    window: Optional[int] = None,
+    causal_pairs: bool = True,
+) -> jax.Array:
+    """Online-softmax attention scanning KV chunks — O(S * chunk) live
+    memory instead of O(S^2).  ``window`` enables sliding-window (local)
+    causal attention.  This is the distributed train/prefill path (GSPMD
+    partitions it); the Pallas flash kernel replaces it on-TPU.
+
+    ``causal_pairs`` scans only the lower-triangular (q-chunk, kv-chunk)
+    pairs — half the FLOPs of the dense rectangle (§Perf iteration 2.2)."""
+    if causal_pairs and window is None:
+        return _causal_pair_attention(q, k, v, chunk)
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    g = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    n_chunks = S // chunk
+    qf = q.reshape(B, Hkv, g, S, D).astype(jnp.float32)
+
+    kc = k.reshape(B, Hkv, n_chunks, chunk, D).astype(jnp.float32)
+    vc = v.reshape(B, Hkv, n_chunks, chunk, D).astype(jnp.float32)
+    rows = jnp.arange(S)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        kj, vj, j = inputs
+        cols = j * chunk + jnp.arange(chunk)
+        logits = jnp.einsum("bhgsd,bhcd->bhgsc", qf, kj) * scale
+        mask = rows[:, None] >= cols[None, :]
+        if window is not None:
+            mask &= rows[:, None] < cols[None, :] + window
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgsc,bhcd->bhgsd", p, vj
+        )
+        return (m_new, l_new, acc_new), None
+
+    init = (
+        jnp.full((B, Hkv, g, S), -1e30, jnp.float32),
+        jnp.zeros((B, Hkv, g, S), jnp.float32),
+        jnp.zeros((B, Hkv, g, S, D), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(
+        body,
+        init,
+        (
+            jnp.moveaxis(kc, 2, 0),
+            jnp.moveaxis(vc, 2, 0),
+            jnp.arange(n_chunks),
+        ),
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Hq, S, D).astype(q.dtype)
+
+
+def _causal_pair_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, chunk: int
+) -> jax.Array:
+    """Causal attention scanning only lower-triangular (qi, kj) chunk pairs
+    — n(n+1)/2 tiles instead of n^2 (2x FLOP cut vs the dense scan).
+    Per-pair work gathers the q chunk and scatter-merges flash statistics
+    back into per-q-chunk accumulators (fully differentiable)."""
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    g = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    n = S // chunk
+    qc = q.reshape(B, Hkv, g, n, chunk, D).astype(jnp.float32)
+    qc = jnp.moveaxis(qc, 3, 0)                       # [n, B, Hkv, g, c, D]
+    kc = jnp.moveaxis(
+        k.reshape(B, Hkv, n, chunk, D).astype(jnp.float32), 2, 0
+    )                                                 # [n, B, Hkv, c, D]
+    vc = jnp.moveaxis(
+        v.reshape(B, Hkv, n, chunk, D).astype(jnp.float32), 2, 0
+    )
+
+    pairs_q, pairs_k = [], []
+    for qi in range(n):
+        for kj in range(qi + 1):
+            pairs_q.append(qi)
+            pairs_k.append(kj)
+    pq = jnp.asarray(pairs_q)
+    pk = jnp.asarray(pairs_k)
+
+    rows = jnp.arange(chunk)
+
+    def body(carry, pair):
+        m, l, acc = carry                             # [n, B, Hkv, g, c(,D)]
+        qi, kj = pair
+        qb = qc[qi]                                   # [B, Hkv, g, c, D]
+        kb = kc[kj]
+        vb = vc[kj]
+        logits = jnp.einsum("bhgsd,bhcd->bhgsc", qb, kb) * scale
+        diag = qi == kj
+        mask = jnp.where(diag, rows[:, None] >= rows[None, :], True)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        m_old = m[qi]
+        m_cur = logits.max(axis=-1)
+        m_new = jnp.maximum(m_old, m_cur)
+        alpha = jnp.exp(m_old - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l_new = l[qi] * alpha + p.sum(axis=-1)
+        acc_new = acc[qi] * alpha[..., None] + jnp.einsum(
+            "bhgsc,bhcd->bhgsd", p, vb
+        )
+        return (
+            m.at[qi].set(m_new),
+            l.at[qi].set(l_new),
+            acc.at[qi].set(acc_new),
+        ), None
+
+    init = (
+        jnp.full((n, B, Hkv, g, chunk), -1e30, jnp.float32),
+        jnp.zeros((n, B, Hkv, g, chunk), jnp.float32),
+        jnp.zeros((n, B, Hkv, g, chunk, D), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(body, init, (pq, pk))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]      # [n, B, Hkv, g, c, D]
+    out = jnp.moveaxis(out, 0, 3).reshape(B, Hq, S, D)
+    return out.astype(q.dtype)

@@ -1,0 +1,178 @@
+"""Mixture-of-Experts FFN with top-k routing (granite-moe, grok-1).
+
+Capacity-based dispatch (GShard/T5X style): tokens are grouped, each group
+dispatches to per-expert capacity buffers via one-hot einsums, experts run
+as one batched matmul over ``[E, C, d]``, results combine with router
+weights.  FLOPs scale with *active* experts (E·C ≈ tokens·K·cf), and the
+expert dimension shards over the ``model`` mesh axis (expert parallelism).
+Tokens routed beyond capacity are dropped (standard; aux loss balances
+load).  A Megablox-style ragged kernel is the known upgrade path — tracked
+in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers
+
+
+def init_moe(key, cfg) -> Dict:
+    moe = cfg.moe
+    d, ff, E = cfg.d_model, cfg.d_ff, moe.n_experts
+    dtype = jnp.dtype(cfg.dtype)
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    gated = cfg.activation in layers.GATED
+    p = {
+        "router": layers.init_dense(kr, d, E, jnp.float32),
+        "up": layers.truncated_normal_init(k1, (E, d, ff), d**-0.5, dtype),
+        "down": layers.truncated_normal_init(k2, (E, ff, d), ff**-0.5, dtype),
+    }
+    if gated:
+        p["gate"] = layers.truncated_normal_init(k3, (E, d, ff), d**-0.5, dtype)
+    return p
+
+
+def _router(p, xg, E, K):
+    """-> (normalized top-k weights [G, gt, K], expert ids [G, gt, K], aux)."""
+    router_logits = jnp.einsum(
+        "gtd,de->gte", xg.astype(jnp.float32), p["router"]["w"]
+    )
+    probs = jax.nn.softmax(router_logits, axis=-1)             # [G, gt, E]
+    top_p, top_e = jax.lax.top_k(probs, K)                     # [G, gt, K]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    # aux load-balancing loss (Switch): E * sum_e f_e * P_e
+    me = probs.mean(axis=(0, 1))
+    ce = jax.nn.one_hot(top_e, E).sum(axis=2).mean(axis=(0, 1))
+    aux = E * jnp.sum(me * ce) / K
+    return top_p, top_e, aux
+
+
+def _expert_positions(top_e: jax.Array, E: int) -> jax.Array:
+    """Position of each (token, k) within its expert's queue, WITHOUT
+    materializing a [.., E] one-hot: stable argsort by expert id, rank
+    within the sorted run, scatter ranks back.  O(T K log) and E-free —
+    the key to scaling fine-grained MoE (E=40) without dispatch blowup."""
+    G, gt, K = top_e.shape
+    flat = top_e.reshape(G, gt * K)
+
+    def per_group(e):
+        order = jnp.argsort(e, stable=True)
+        se = e[order]
+        first = jnp.searchsorted(se, se, side="left")
+        rank = jnp.arange(se.shape[0]) - first
+        return jnp.zeros_like(rank).at[order].set(rank)
+
+    return jax.vmap(per_group)(flat).reshape(G, gt, K)
+
+
+def moe_ffn(
+    p: Dict,
+    x: jax.Array,              # [B, S, d]
+    cfg,
+    group_size: int = 512,
+    capacity_factor: Optional[float] = None,
+    impl: str = "einsum",
+) -> Tuple[jax.Array, jax.Array]:
+    """-> (output [B, S, d], load-balancing aux loss scalar).
+
+    ``impl='einsum'`` (default): sort-based positions (E-free, O(T K log))
+    + one-hot dispatch/combine einsums.  With token groups sharded over the
+    full mesh the dispatch tensors stay rank-local and GSPMD partitions the
+    einsums exactly — measured in EXPERIMENTS.md §Perf.
+
+    ``impl='scatter'`` looked cheaper on paper (O(T*K*d) moved) but GSPMD
+    cannot prove scatter-index locality and replicates the whole capacity
+    buffer across the mesh (hypothesis REFUTED in §Perf — kept for the
+    equivalence tests and as documentation of the failure mode).
+    """
+    moe = cfg.moe
+    E, K = moe.n_experts, moe.experts_per_token
+    B, S, d = x.shape
+    T = B * S
+    G = max(1, T // group_size)
+    gt = T // G  # tokens per group
+    xg = x.reshape(G, gt, d)
+    # shard token groups over the FULL mesh so dispatch stays rank-local
+    # (constrain's divisibility guard degrades gracefully for tiny G).
+    xg = constrain(xg, "moe_group", None, None)
+
+    if capacity_factor is None:
+        capacity_factor = moe.capacity_factor
+    top_p, top_e, aux = _router(p, xg, E, K)
+    C = max(1, int(capacity_factor * gt * K / E))
+    # capacity floor: tiny decode groups (gt ~ batch) would otherwise get
+    # C=1 and drop colliding tokens every step.
+    C = max(C, min(gt, 8))
+    C = min(C, gt)
+
+    if impl == "einsum":
+        onehot = jax.nn.one_hot(top_e, E, dtype=jnp.int32)     # [G, gt, K, E]
+        flat = onehot.reshape(G, gt * K, E)
+        pos = (jnp.cumsum(flat, axis=1) - 1).reshape(G, gt, K, E)
+        pos = (pos * onehot).sum(-1)                           # [G, gt, K]
+    else:
+        pos = _expert_positions(top_e, E)                      # [G, gt, K]
+
+    in_cap = pos < C
+    garange = jnp.arange(G)[:, None]
+    e_flat = top_e.reshape(G, gt * K)
+    pos_flat = jnp.where(in_cap, pos, C).reshape(G, gt * K)    # C = dropped
+
+    if impl == "einsum":
+        onehot_e = jax.nn.one_hot(top_e, E, dtype=jnp.float32)     # [G,gt,K,E]
+        slot = jnp.where(in_cap, pos, C)
+        onehot_c = jax.nn.one_hot(slot, C + 1, dtype=jnp.float32)[..., :C]
+        dispatch = jnp.einsum("gtke,gtkc->gtec", onehot_e, onehot_c)
+        combine = jnp.einsum(
+            "gtke,gtkc->gtec", onehot_e * top_p[..., None], onehot_c
+        )
+        xe = jnp.einsum(
+            "gtec,gtd->gecd", dispatch.astype(xg.dtype), xg
+        )                                                          # [G,E,C,d]
+    else:
+        # scatter-add dispatch: token value lands in its expert/slot cell;
+        # out-of-capacity writes target row C of a (C+1)-deep buffer and are
+        # sliced off (jnp scatter drop semantics kept explicit).
+        x_rep = jnp.repeat(xg, K, axis=1)                      # [G, gt*K, d]
+        xe = jnp.zeros((G, E, C + 1, d), xg.dtype)
+        xe = xe.at[garange, e_flat, pos_flat].add(x_rep)
+        xe = xe[:, :, :C]
+
+    xe = constrain(xe, "moe_group", "experts", None, None)
+    up = jnp.einsum("gecd,edf->gecf", xe, p["up"])
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["gate"])) * up
+    elif cfg.activation == "geglu":
+        h = jax.nn.gelu(
+            jnp.einsum("gecd,edf->gecf", xe, p["gate"]), approximate=True
+        ) * up
+    elif cfg.activation == "relu2":
+        h = jnp.square(jax.nn.relu(up))
+    else:
+        h = jax.nn.gelu(up, approximate=True)
+    ye = jnp.einsum("gecf,efd->gecd", h, p["down"])            # [G, E, C, d]
+    ye = constrain(ye, "moe_group", "experts", None, None)
+
+    if impl == "einsum":
+        y = jnp.einsum("gtec,gecd->gtd", combine.astype(ye.dtype), ye)
+    else:
+        # gather combine: each (token, k) reads back its expert/slot row.
+        ye_pad = jnp.concatenate(
+            [ye, jnp.zeros((G, E, 1, d), ye.dtype)], axis=2
+        )
+        picked = ye_pad[garange[..., None], e_flat[..., None],
+                        pos_flat[..., None], jnp.arange(d)[None, None]]
+        picked = picked.reshape(G, gt, K, d)
+        w = (top_p * in_cap.astype(top_p.dtype))[..., None]
+        y = jnp.sum(picked.astype(jnp.float32) * w, axis=2)
+    y = y.reshape(B, S, d).astype(x.dtype)
+    # reshard back to the surrounding batch layout at the block exit: the
+    # full-mesh moe_group sharding otherwise leaks into the attention
+    # chunk scans, whose dynamic-index carries then all-gather per step
+    # (402 MB x 66k on granite prefill — measured, §Perf 1.5).
+    y = constrain(y, "batch", None, None)
+    return y, aux.astype(jnp.float32)

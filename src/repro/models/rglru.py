@@ -1,0 +1,118 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Real-Gated Linear Recurrent Unit:
+  r_t = sigmoid(W_a x_t)            recurrence gate
+  i_t = sigmoid(W_x x_t)            input gate
+  a_t = exp(c * softplus(Lambda) * (-r_t))   per-channel decay in (0,1)
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Block structure (Griffin recurrent block): two parallel width-``lru``
+branches — (linear -> gelu) and (linear -> temporal conv1d(4) -> RG-LRU) —
+merged by elementwise product, then an output linear.
+
+Prefill/train uses ``jax.lax.associative_scan`` (log-depth on TPU);
+decode is an O(1) state update.  State: (h [B, lru], conv tail [B, 3, lru]).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+C_FACTOR = 8.0
+CONV_K = 4
+
+
+def lru_width(cfg) -> int:
+    return cfg.d_model
+
+
+def init_rglru(key, cfg) -> Dict:
+    d = cfg.d_model
+    lru = lru_width(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_gelu": layers.init_dense(ks[0], d, lru, dtype),
+        "in_rec": layers.init_dense(ks[1], d, lru, dtype),
+        "conv_w": layers.truncated_normal_init(ks[2], (CONV_K, lru), 0.1, dtype),
+        "conv_b": jnp.zeros((lru,), dtype),
+        "w_a": layers.init_dense(ks[3], lru, lru, dtype),
+        "w_x": layers.init_dense(ks[4], lru, lru, dtype),
+        # Lambda init so decay a ~ U(0.9, 0.999) at r=0.5 (Griffin appendix)
+        "lam": jnp.linspace(2.0, 6.0, lru).astype(jnp.float32),
+        "out": layers.init_dense(ks[5], lru, d, dtype),
+    }
+
+
+def _decay(p, r):
+    log_a = -C_FACTOR * jax.nn.softplus(p["lam"]) * r  # [..., lru], <= 0
+    return jnp.exp(log_a)
+
+
+def _conv_full(p, u: jax.Array) -> jax.Array:
+    """Causal temporal conv over [B, S, lru] with kernel CONV_K."""
+    pads = jnp.pad(u, ((0, 0), (CONV_K - 1, 0), (0, 0)))
+    out = sum(
+        pads[:, i : i + u.shape[1]] * p["conv_w"][i]
+        for i in range(CONV_K)
+    )
+    return out + p["conv_b"]
+
+
+def rglru_block(p: Dict, x: jax.Array, cfg) -> jax.Array:
+    """Full-sequence (train/prefill) pass. x [B, S, d] -> [B, S, d]."""
+    gate = jax.nn.gelu(layers.dense(p["in_gelu"], x), approximate=True)
+    u = layers.dense(p["in_rec"], x)
+    u = _conv_full(p, u)
+
+    r = jax.nn.sigmoid(layers.dense(p["w_a"], u).astype(jnp.float32))
+    i = jax.nn.sigmoid(layers.dense(p["w_x"], u).astype(jnp.float32))
+    a = _decay(p, r)                                      # [B, S, lru]
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9)) * (
+        i * u.astype(jnp.float32)
+    )
+
+    # associative linear recurrence h_t = a_t h_{t-1} + b_t over axis 1
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = gate.astype(jnp.float32) * h
+    return layers.dense(p["out"], y.astype(x.dtype))
+
+
+def rglru_decode(
+    p: Dict, x: jax.Array, state: Tuple[jax.Array, jax.Array], cfg
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """One-token decode. x [B, 1, d]; state (h [B, lru], conv [B, K-1, lru])."""
+    h_prev, conv_tail = state
+    gate = jax.nn.gelu(layers.dense(p["in_gelu"], x), approximate=True)
+    u = layers.dense(p["in_rec"], x)[:, 0]                 # [B, lru]
+
+    window = jnp.concatenate([conv_tail, u[:, None]], axis=1)  # [B, K, lru]
+    uc = jnp.einsum("bkl,kl->bl", window, p["conv_w"]) + p["conv_b"]
+    conv_tail_new = window[:, 1:]
+
+    r = jax.nn.sigmoid(layers.dense(p["w_a"], uc).astype(jnp.float32))
+    i = jax.nn.sigmoid(layers.dense(p["w_x"], uc).astype(jnp.float32))
+    a = _decay(p, r)
+    h = a * h_prev + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9)) * (
+        i * uc.astype(jnp.float32)
+    )
+    y = gate.astype(jnp.float32)[:, 0] * h
+    out = layers.dense(p["out"], y.astype(x.dtype))[:, None][:, 0]
+    return out[:, None], (h, conv_tail_new)
+
+
+def init_state(cfg, batch: int):
+    lru = lru_width(cfg)
+    return (
+        jnp.zeros((batch, lru), jnp.float32),
+        jnp.zeros((batch, CONV_K - 1, lru), jnp.dtype(cfg.dtype)),
+    )

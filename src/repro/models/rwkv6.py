@@ -1,0 +1,119 @@
+"""RWKV-6 "Finch" time-mixing with data-dependent decay (attention-free).
+
+Per head (head_dim = N), per step:
+  S_t = diag(w_t) S_{t-1} + k_t^T v_t          state [N, N]
+  o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)      (bonus u for current token)
+with data-dependent per-channel decay w_t = exp(-exp(ddlerp_w(x_t, x_{t-1})))
+and token-shift mixing (lerp of current and previous token) on r/k/v/w/g.
+
+Train/prefill uses a sequential ``lax.scan`` over time (the chunked
+parallel form is a known optimization, EXPERIMENTS.md §Perf); decode is an
+O(1) state update.  State: (S [B, H, N, N] f32, x_prev [B, d]).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def init_rwkv(key, cfg) -> Dict:
+    d = cfg.d_model
+    H = d // cfg.rwkv_head_dim
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        # token-shift lerp factors per channel for r,k,v,w,g
+        "mu": 0.5 * jnp.ones((5, d), jnp.float32),
+        "wr": layers.init_dense(ks[0], d, d, dtype),
+        "wk": layers.init_dense(ks[1], d, d, dtype),
+        "wv": layers.init_dense(ks[2], d, d, dtype),
+        "wg": layers.init_dense(ks[3], d, d, dtype),
+        "ww": layers.init_dense(ks[4], d, d, dtype),   # data-dependent decay
+        "w_bias": jnp.full((d,), -2.0, jnp.float32),   # base decay ~ exp(-e^-2)
+        "u": 0.5 * jnp.ones((d,), jnp.float32),        # bonus
+        "wo": layers.init_dense(ks[5], d, d, dtype),
+        "ln_x": layers.init_rmsnorm(d, dtype),
+    }
+
+
+def _mix(mu, x, x_prev):
+    return x + (x_prev - x) * mu
+
+
+def _projections(p: Dict, x: jax.Array, x_prev: jax.Array, cfg):
+    """x, x_prev [B, d] -> r,k,v,g [B, H, N], w [B, H, N] decay in (0,1)."""
+    B, d = x.shape
+    N = cfg.rwkv_head_dim
+    H = d // N
+    mu = p["mu"]
+    xr = _mix(mu[0], x, x_prev)
+    xk = _mix(mu[1], x, x_prev)
+    xv = _mix(mu[2], x, x_prev)
+    xw = _mix(mu[3], x, x_prev)
+    xg = _mix(mu[4], x, x_prev)
+    r = layers.dense(p["wr"], xr.astype(x.dtype)).reshape(B, H, N)
+    k = layers.dense(p["wk"], xk.astype(x.dtype)).reshape(B, H, N)
+    v = layers.dense(p["wv"], xv.astype(x.dtype)).reshape(B, H, N)
+    g = jax.nn.silu(layers.dense(p["wg"], xg.astype(x.dtype))).reshape(B, H, N)
+    wlog = layers.dense(p["ww"], xw.astype(x.dtype)).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(wlog + p["w_bias"])).reshape(B, H, N)
+    return r, k, v, g, w
+
+
+def _step(p, cfg, S, x, x_prev):
+    """One token for all heads. S [B,H,N,N] f32; x,x_prev [B,d]."""
+    r, k, v, g, w = _projections(p, x, x_prev, cfg)
+    B, H, N = r.shape
+    u = p["u"].reshape(H, N)
+    kv = jnp.einsum("bhn,bhm->bhnm", k.astype(jnp.float32),
+                    v.astype(jnp.float32))
+    att = S + u[None, :, :, None] * kv                 # bonus on k-dim
+    o = jnp.einsum("bhn,bhnm->bhm", r.astype(jnp.float32), att)
+    S_new = w[..., None] * S + kv                      # decay on k-dim
+    y = (o.reshape(B, -1) * g.reshape(B, -1).astype(jnp.float32))
+    return S_new, y
+
+
+def rwkv_time_mix(p: Dict, x: jax.Array, cfg) -> jax.Array:
+    """Full sequence. x [B, S, d] -> [B, S, d]."""
+    B, T, d = x.shape
+    H = d // cfg.rwkv_head_dim
+    N = cfg.rwkv_head_dim
+    x_prev0 = jnp.zeros((B, d), x.dtype)
+    xf = x
+
+    def body(carry, xt):
+        S, xp = carry
+        S_new, y = _step(p, cfg, S, xt, xp)
+        return (S_new, xt), y
+
+    S0 = jnp.zeros((B, H, N, N), jnp.float32)
+    (_, _), ys = jax.lax.scan(
+        body, (S0, x_prev0), jnp.moveaxis(xf, 1, 0)
+    )
+    y = jnp.moveaxis(ys, 0, 1)                          # [B, T, d]
+    y = layers.rms_norm(p["ln_x"], y.astype(x.dtype), 1e-5)
+    return layers.dense(p["wo"], y)
+
+
+def rwkv_decode(
+    p: Dict, x: jax.Array, state, cfg
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """x [B, 1, d]; state (S [B,H,N,N], x_prev [B, d])."""
+    S, x_prev = state
+    S_new, y = _step(p, cfg, S, x[:, 0], x_prev)
+    y = layers.rms_norm(p["ln_x"], y[:, None].astype(x.dtype), 1e-5)
+    out = layers.dense(p["wo"], y)
+    return out, (S_new, x[:, 0])
+
+
+def init_state(cfg, batch: int):
+    H = cfg.d_model // cfg.rwkv_head_dim
+    return (
+        jnp.zeros((batch, H, cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32),
+        jnp.zeros((batch, cfg.d_model), jnp.dtype(cfg.dtype)),
+    )

@@ -1,0 +1,979 @@
+"""The unified Transformer covering all assigned architectures.
+
+One composable model: dense GQA / MoE FFN / RG-LRU hybrid / RWKV6 / modality
+-stub prefixes, driven entirely by :class:`repro.config.ModelConfig`.
+
+Layer execution uses ``lax.scan`` over *pattern cycles* (params stacked along
+the cycle axis) so 96-layer models lower to small HLO; remainder layers (when
+``n_layers % len(pattern) != 0``) run unscanned.  Per-layer heterogeneous
+AB-Sparse layouts ride the scan as stacked arrays (:mod:`repro.core.stacked`).
+
+Three entry points per model:
+  forward_train  full causal pass -> final hidden (loss via chunked CE)
+  prefill        builds the KV cache + quantized centroid store
+  decode_step    one token; AB-Sparse estimation -> top-k -> paged attention
+                 on attention layers when enabled, O(1) state for
+                 recurrent/SSM layers.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, SparseConfig
+from repro.core import stacked as stacked_mod
+from repro.core.centroids import (
+    padded_rank_key_width,
+    rank_query,
+)
+from repro.core.quantization import pack_split_half
+from repro.core.ragged import RaggedLayout, layout_for
+from repro.core.selection import select_page_table
+from repro.core import estimation as est_mod
+from repro.core.sparse_attention import (
+    dense_decode_attention,
+    paged_attention_reference,
+)
+from repro.distributed.sharding import constrain
+from repro.models import layers, moe as moe_mod, rglru, rwkv6
+
+Cache = Dict[str, Any]
+
+def _attn_chunk(S: int, target: int = 512) -> int:
+    """Largest chunk <= target that divides S (prefix-extended sequences
+    like 4096+256 patches are not powers of two)."""
+    c = min(target, S)
+    while S % c:
+        c -= 1
+    return c
+
+
+
+def _split_like(key, n):
+    return list(jax.random.split(key, n))
+
+
+@dataclass(frozen=True)
+class _Plan:
+    """Static execution plan derived from the config."""
+
+    pattern: Tuple[str, ...]
+    n_cycles: int
+    n_rest: int          # remainder layers (prefix of pattern)
+
+    @property
+    def rest_kinds(self) -> Tuple[str, ...]:
+        return self.pattern[: self.n_rest]
+
+
+class Transformer:
+    def __init__(self, cfg: ModelConfig, context_len: Optional[int] = None):
+        self.cfg = cfg
+        pattern = cfg.layer_pattern
+        self.plan = _Plan(
+            pattern=pattern,
+            n_cycles=cfg.n_layers // len(pattern),
+            n_rest=cfg.n_layers % len(pattern),
+        )
+        self.dtype = jnp.dtype(cfg.dtype)
+        self._context_len = context_len
+        if cfg.sparse.enabled:
+            assert pattern == ("attn",), (
+                "AB-Sparse decode currently assumes a homogeneous global-"
+                "attention stack (see DESIGN.md §Arch-applicability)"
+            )
+
+    # ------------------------------------------------------------------ init
+
+    def _init_layer(self, key, kind: str) -> Dict:
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        p: Dict[str, Any] = {
+            "norm1": layers.init_rmsnorm(cfg.d_model, self.dtype),
+            "norm2": layers.init_rmsnorm(cfg.d_model, self.dtype),
+        }
+        if kind in ("attn", "local_attn"):
+            p["attn"] = layers.init_attention(k1, cfg)
+        elif kind == "rglru":
+            p["rec"] = rglru.init_rglru(k1, cfg)
+        elif kind == "rwkv":
+            p["tmix"] = rwkv6.init_rwkv(k1, cfg)
+        else:
+            raise ValueError(kind)
+        if cfg.moe is not None:
+            p["ffn"] = moe_mod.init_moe(k2, cfg)
+        else:
+            p["ffn"] = layers.init_mlp(
+                k2, cfg.d_model, cfg.d_ff, cfg.activation, self.dtype
+            )
+        return p
+
+    def init(self, key) -> Dict:
+        cfg = self.cfg
+        ke, kh, kl = jax.random.split(key, 3)
+        params: Dict[str, Any] = {
+            "embed": layers.truncated_normal_init(
+                ke, (cfg.vocab_size, cfg.d_model), 0.02, self.dtype
+            ),
+            "final_norm": layers.init_rmsnorm(cfg.d_model, self.dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = layers.truncated_normal_init(
+                kh, (cfg.d_model, cfg.vocab_size),
+                cfg.d_model**-0.5, self.dtype,
+            )
+
+        # stacked cycle params: vmap init over the cycle axis
+        pat = self.plan.pattern
+        cyc_keys = jax.random.split(kl, max(self.plan.n_cycles, 1))
+
+        def init_cycle(k):
+            ks = jax.random.split(k, len(pat))
+            return {
+                f"pos{i}": self._init_layer(ks[i], kind)
+                for i, kind in enumerate(pat)
+            }
+
+        if self.plan.n_cycles > 0:
+            params["cycles"] = jax.vmap(init_cycle)(jnp.stack(cyc_keys))
+        if self.plan.n_rest:
+            kr = jax.random.fold_in(kl, 10_007)
+            rest_keys = jax.random.split(kr, self.plan.n_rest)
+            params["rest"] = [
+                self._init_layer(rest_keys[i], kind)
+                for i, kind in enumerate(self.plan.rest_kinds)
+            ]
+        return params
+
+    # -------------------------------------------------------------- layouts
+
+    def sparse_layouts(self, context_len: int) -> Optional[List[RaggedLayout]]:
+        cfg = self.cfg
+        if not cfg.sparse.enabled:
+            return None
+        budget = cfg.sparse.budget_for(context_len)
+        return [
+            layout_for(
+                cfg.sparse.layer_block_sizes(l, cfg.n_kv_heads),
+                context_len,
+                cfg.sparse.page_size,
+                budget,
+            )
+            for l in range(cfg.n_layers)
+        ]
+
+    def use_sparse(self, context_len: int) -> bool:
+        cfg = self.cfg
+        if not cfg.sparse.enabled or self.cfg.is_attention_free:
+            return False
+        budget = cfg.sparse.budget_for(context_len)
+        return context_len >= 2 * budget
+
+    # -------------------------------------------------------------- embedding
+
+    def embed_inputs(
+        self,
+        params,
+        tokens: jax.Array,                   # [B, S]
+        prefix_emb: Optional[jax.Array],     # [B, P, d] or None
+    ) -> jax.Array:
+        cfg = self.cfg
+        x = params["embed"][tokens]          # [B, S, d]
+        if cfg.family in ("vlm", "audio") and prefix_emb is not None:
+            x = jnp.concatenate([prefix_emb.astype(x.dtype), x], axis=1)
+        if cfg.name.startswith("musicgen"):
+            # sinusoidal additive positions (MusicGen uses absolute pos emb)
+            pos = jnp.arange(x.shape[1])
+            x = x + layers.sinusoidal_embedding(pos, cfg.d_model)[None].astype(
+                x.dtype
+            )
+        return constrain(x, "batch", None, "embed")
+
+    def unembed(self, params, h: jax.Array) -> jax.Array:
+        if self.cfg.tie_embeddings:
+            w = params["embed"].T
+        else:
+            w = params["lm_head"]
+        logits = jnp.einsum("...d,dv->...v", h, w)
+        return logits
+
+    # ----------------------------------------------------------- train pass
+
+    def _layer_train(self, p, kind: str, x, positions, aux_sum):
+        cfg = self.cfg
+        h = layers.rms_norm(p["norm1"], x, cfg.norm_eps)
+        if kind in ("attn", "local_attn"):
+            q, k, v = layers.qkv_project(p["attn"], h, cfg, positions)
+            window = cfg.local_window if kind == "local_attn" else None
+            attn = layers.chunked_causal_attention(
+                jnp.moveaxis(q, 1, 2),
+                jnp.moveaxis(k, 1, 2),
+                jnp.moveaxis(v, 1, 2),
+                chunk=_attn_chunk(x.shape[1]),
+                window=window,
+            )
+            h = layers.out_project(p["attn"], jnp.moveaxis(attn, 1, 2), cfg)
+        elif kind == "rglru":
+            h = rglru.rglru_block(p["rec"], h, cfg)
+        elif kind == "rwkv":
+            h = rwkv6.rwkv_time_mix(p["tmix"], h, cfg)
+        x = x + h
+        h = layers.rms_norm(p["norm2"], x, cfg.norm_eps)
+        if cfg.moe is not None:
+            h, aux = moe_mod.moe_ffn(p["ffn"], h, cfg)
+            aux_sum = aux_sum + aux
+        else:
+            h = layers.mlp(p["ffn"], h, cfg.activation)
+        return x + h, aux_sum
+
+    def forward_train(
+        self,
+        params,
+        tokens: jax.Array,
+        prefix_emb: Optional[jax.Array] = None,
+        remat: str = "none",
+    ) -> Tuple[jax.Array, jax.Array]:
+        """-> (final hidden [B, S_tot, d], moe aux loss scalar)."""
+        cfg = self.cfg
+        x = self.embed_inputs(params, tokens, prefix_emb)
+        S_tot = x.shape[1]
+        positions = jnp.arange(S_tot)[None, :]
+        pat = self.plan.pattern
+
+        def cycle_fn(carry, cyc_params):
+            from repro.distributed.params import (
+                cast_cotangent,
+                shard_param_cotangents,
+            )
+
+            x, aux = carry
+            cyc_params = shard_param_cotangents(cyc_params)
+            x = cast_cotangent(x, self.dtype)
+            for i, kind in enumerate(pat):
+                x, aux = self._layer_train(
+                    cyc_params[f"pos{i}"], kind, x, positions, aux
+                )
+            return (x, aux), None
+
+        if remat == "full":
+            cycle_fn = jax.checkpoint(cycle_fn)
+        elif remat == "dots":
+            cycle_fn = jax.checkpoint(
+                cycle_fn,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            )
+
+        aux0 = jnp.zeros((), jnp.float32)
+        if self.plan.n_cycles > 0:
+            (x, aux), _ = jax.lax.scan(cycle_fn, (x, aux0), params["cycles"])
+        else:
+            aux = aux0
+        for i, kind in enumerate(self.plan.rest_kinds):
+            x, aux = self._layer_train(params["rest"][i], kind, x, positions, aux)
+        x = layers.rms_norm(params["final_norm"], x, cfg.norm_eps)
+        return x, aux
+
+    def loss(
+        self,
+        params,
+        tokens: jax.Array,            # [B, S]
+        prefix_emb: Optional[jax.Array] = None,
+        remat: str = "none",
+        label_chunk: int = 2048,
+    ) -> jax.Array:
+        """Next-token CE over the token region (prefix positions excluded),
+        computed in sequence chunks so [B, S, vocab] never materializes.
+
+        Chunking trades the logits buffer against one (tied-)embedding
+        gradient all-reduce PER CHUNK in the backward pass — with pure-FSDP
+        batch sharding the per-device logits are small, so fewer, larger
+        chunks win (§Perf iteration 2.5)."""
+        cfg = self.cfg
+        h, aux = self.forward_train(params, tokens, prefix_emb, remat)
+        P = h.shape[1] - tokens.shape[1]
+        h_tok = h[:, P:, :]
+        inputs = h_tok[:, :-1]
+        targets = tokens[:, 1:]
+
+        w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        B, Sm1, d = inputs.shape
+        label_chunk = min(label_chunk, Sm1)
+        n_chunks = Sm1 // label_chunk
+        rem = Sm1 - n_chunks * label_chunk
+
+        def chunk_loss(h_c, t_c):
+            logits = jnp.einsum("bsd,dv->bsv", h_c, w).astype(jnp.float32)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, t_c[..., None], axis=-1)[..., 0]
+            return jnp.sum(logz - gold)
+
+        total = jnp.zeros((), jnp.float32)
+        if n_chunks:
+            hc = inputs[:, : n_chunks * label_chunk].reshape(
+                B, n_chunks, label_chunk, d
+            )
+            tc = targets[:, : n_chunks * label_chunk].reshape(
+                B, n_chunks, label_chunk
+            )
+
+            def body(tot, xs):
+                h_c, t_c = xs
+                return tot + chunk_loss(h_c, t_c), None
+
+            total, _ = jax.lax.scan(
+                body,
+                total,
+                (jnp.moveaxis(hc, 1, 0), jnp.moveaxis(tc, 1, 0)),
+            )
+        if rem:
+            total = total + chunk_loss(inputs[:, -rem:], targets[:, -rem:])
+        ce = total / (B * Sm1)
+        if cfg.moe is not None:
+            ce = ce + cfg.moe.router_aux_weight * aux / cfg.n_layers
+        return ce
+
+    # ----------------------------------------------------------------- cache
+
+    def init_cache(
+        self, batch: int, max_context: int, quant: Optional[str] = None
+    ) -> Cache:
+        """Allocate the decode cache (KV pools / recurrent states / centroid
+        store) for ``batch`` sequences of up to ``max_context`` tokens."""
+        cfg = self.cfg
+        quant = cfg.sparse.quant if quant is None else quant
+        hd = cfg.resolved_head_dim
+        pat = self.plan.pattern
+        nc = self.plan.n_cycles
+        cache: Cache = {"seq_len": jnp.zeros((batch,), jnp.int32)}
+
+        sparse = self.use_sparse(max_context)
+        layouts = self.sparse_layouts(max_context) if sparse else None
+        if layouts is not None:
+            stk = stacked_mod.stack_layouts(layouts)
+            cache["_layouts"] = stk
+            Dp = padded_rank_key_width(hd, cfg.sparse.centroid_method)
+            W = Dp // 2 if quant == "int4_asym" or quant.startswith("int4") else Dp
+            offs = np.zeros((cfg.n_layers, cfg.n_kv_heads), np.int32)
+            for l, lay in enumerate(layouts):
+                offs[l] = lay.offsets[:-1]
+            cache["_offsets"] = jnp.asarray(offs)
+
+        def per_pos(i, kind):
+            entry = {}
+            if kind == "attn":
+                entry["k"] = jnp.zeros(
+                    (nc, batch, cfg.n_kv_heads, max_context, hd), self.dtype
+                )
+                entry["v"] = jnp.zeros_like(entry["k"])
+                if sparse:
+                    stk = cache["_layouts"]
+                    Dp = padded_rank_key_width(hd, cfg.sparse.centroid_method)
+                    if quant.startswith("int4"):
+                        entry["codes"] = jnp.zeros(
+                            (nc, batch, stk.total_rows, Dp // 2), jnp.uint8
+                        )
+                    elif quant.startswith("int8"):
+                        entry["codes"] = jnp.zeros(
+                            (nc, batch, stk.total_rows, Dp), jnp.uint8
+                        )
+                    else:
+                        entry["codes"] = jnp.zeros(
+                            (nc, batch, stk.total_rows, Dp), jnp.float32
+                        )
+                    entry["scale"] = jnp.ones(
+                        (nc, batch, cfg.n_kv_heads, Dp), jnp.float32
+                    )
+                    entry["zero"] = jnp.zeros_like(entry["scale"])
+            elif kind == "local_attn":
+                W = min(cfg.local_window, max_context)
+                entry["k"] = jnp.zeros(
+                    (nc, batch, cfg.n_kv_heads, W, hd), self.dtype
+                )
+                entry["v"] = jnp.zeros_like(entry["k"])
+            elif kind == "rglru":
+                h0, c0 = rglru.init_state(cfg, batch)
+                entry["h"] = jnp.zeros((nc,) + h0.shape, h0.dtype)
+                entry["conv"] = jnp.zeros((nc,) + c0.shape, c0.dtype)
+            elif kind == "rwkv":
+                S0, xp0 = rwkv6.init_state(cfg, batch)
+                entry["S"] = jnp.zeros((nc,) + S0.shape, S0.dtype)
+                entry["xprev"] = jnp.zeros((nc,) + xp0.shape, xp0.dtype)
+            return entry
+
+        for i, kind in enumerate(pat):
+            cache[f"pos{i}"] = per_pos(i, kind)
+        if self.plan.n_rest:
+            cache["rest"] = []
+            for i, kind in enumerate(self.plan.rest_kinds):
+                e = per_pos(i, kind)
+                cache["rest"].append(jax.tree.map(lambda a: a[0], e))
+        return cache
+
+    # --------------------------------------------------------------- prefill
+
+    def prefill(
+        self,
+        params,
+        tokens: jax.Array,                    # [B, S]
+        prefix_emb: Optional[jax.Array] = None,
+        max_context: Optional[int] = None,
+        quant: Optional[str] = None,
+    ) -> Tuple[jax.Array, Cache]:
+        """Process the full prompt; build KV cache + centroid store.
+        -> (last-token logits [B, vocab], cache)."""
+        cfg = self.cfg
+        x = self.embed_inputs(params, tokens, prefix_emb)
+        B, S_tot, _ = x.shape
+        if max_context is None:
+            max_context = S_tot
+        cache = self.init_cache(B, max_context, quant=quant)
+        positions = jnp.arange(S_tot)[None, :]
+        pat = self.plan.pattern
+        sparse = self.use_sparse(max_context)
+        quant = cfg.sparse.quant if quant is None else quant
+
+        def run_layer(p, kind, x, entry, layer_layout, layer_offs):
+            cfgl = self.cfg
+            h = layers.rms_norm(p["norm1"], x, cfgl.norm_eps)
+            new_entry = dict(entry)
+            if kind in ("attn", "local_attn"):
+                q, k, v = layers.qkv_project(p["attn"], h, cfgl, positions)
+                window = cfgl.local_window if kind == "local_attn" else None
+                attn = layers.chunked_causal_attention(
+                    jnp.moveaxis(q, 1, 2),
+                    jnp.moveaxis(k, 1, 2),
+                    jnp.moveaxis(v, 1, 2),
+                    chunk=_attn_chunk(S_tot),
+                    window=window,
+                )
+                h = layers.out_project(p["attn"], jnp.moveaxis(attn, 1, 2), cfgl)
+                kk = jnp.moveaxis(k, 1, 2)      # [B, n_kv, S, hd]
+                vv = jnp.moveaxis(v, 1, 2)
+                if kind == "attn":
+                    pad = max_context - S_tot
+                    new_entry["k"] = jnp.pad(
+                        kk, ((0, 0), (0, 0), (0, pad), (0, 0))
+                    )
+                    new_entry["v"] = jnp.pad(
+                        vv, ((0, 0), (0, 0), (0, pad), (0, 0))
+                    )
+                    if sparse:
+                        codes, scale, zero = self._build_store(
+                            new_entry["k"], layer_layout, layer_offs, quant
+                        )
+                        new_entry["codes"] = codes
+                        new_entry["scale"] = scale
+                        new_entry["zero"] = zero
+                else:
+                    # ring-buffer fill: last min(W, S) tokens at slot pos % W
+                    W = entry["k"].shape[-2]
+                    L = min(W, S_tot)
+                    tail_pos = jnp.arange(S_tot - L, S_tot)
+                    slots = tail_pos % W
+                    new_entry["k"] = entry["k"].at[:, :, slots].set(
+                        kk[:, :, -L:]
+                    )
+                    new_entry["v"] = entry["v"].at[:, :, slots].set(
+                        vv[:, :, -L:]
+                    )
+            elif kind == "rglru":
+                h = rglru.rglru_block(p["rec"], h, cfgl)
+                # rebuild the final state by a short decode replay of the
+                # last CONV_K tokens is avoided: recompute states directly.
+                new_entry["h"], new_entry["conv"] = self._rglru_final_state(
+                    p["rec"], layers.rms_norm(p["norm1"], x, cfgl.norm_eps)
+                )
+            elif kind == "rwkv":
+                h = rwkv6.rwkv_time_mix(p["tmix"], h, cfgl)
+                new_entry["S"], new_entry["xprev"] = self._rwkv_final_state(
+                    p["tmix"], layers.rms_norm(p["norm1"], x, cfgl.norm_eps)
+                )
+            x = x + h
+            h = layers.rms_norm(p["norm2"], x, cfgl.norm_eps)
+            if cfgl.moe is not None:
+                h, _ = moe_mod.moe_ffn(p["ffn"], h, cfgl)
+            else:
+                h = layers.mlp(p["ffn"], h, cfgl.activation)
+            return x + h, new_entry
+
+        stk = cache.get("_layouts")
+        all_offs = cache.get("_offsets")
+
+        def cycle_fn(x, xs):
+            cyc_params, cyc_cache, cyc_idx = xs
+            new_cache = {}
+            for i, kind in enumerate(pat):
+                is_sparse_attn = stk is not None and kind == "attn"
+                lay = stk.layer(cyc_idx) if is_sparse_attn else None
+                offs = all_offs[cyc_idx] if is_sparse_attn else None
+                x, new_cache[f"pos{i}"] = run_layer(
+                    cyc_params[f"pos{i}"], kind, x, cyc_cache[f"pos{i}"], lay, offs
+                )
+            return x, new_cache
+
+        if self.plan.n_cycles > 0:
+            cyc_cache_in = {
+                f"pos{i}": cache[f"pos{i}"] for i in range(len(pat))
+            }
+            x, new_cyc = jax.lax.scan(
+                cycle_fn,
+                x,
+                (params["cycles"], cyc_cache_in, jnp.arange(self.plan.n_cycles)),
+            )
+            for i in range(len(pat)):
+                cache[f"pos{i}"] = new_cyc[f"pos{i}"]
+        for i, kind in enumerate(self.plan.rest_kinds):
+            lay_idx = self.plan.n_cycles * len(pat) + i
+            is_sparse_attn = stk is not None and kind == "attn"
+            lay = stk.layer(lay_idx) if is_sparse_attn else None
+            offs = all_offs[lay_idx] if is_sparse_attn else None
+            x, cache["rest"][i] = run_layer(
+                params["rest"][i], kind, x, cache["rest"][i], lay, offs
+            )
+
+        x = layers.rms_norm(params["final_norm"], x, cfg.norm_eps)
+        logits = self.unembed(params, x[:, -1])
+        cache["seq_len"] = jnp.full((B,), S_tot, jnp.int32)
+        return logits, cache
+
+    def _rglru_final_state(self, p, h_in):
+        """Final (h, conv-tail) after a full-sequence pass (for decode)."""
+        gate = jax.nn.gelu(layers.dense(p["in_gelu"], h_in), approximate=True)
+        u = layers.dense(p["in_rec"], h_in)
+        uc = rglru._conv_full(p, u)
+        r = jax.nn.sigmoid(layers.dense(p["w_a"], uc).astype(jnp.float32))
+        i = jax.nn.sigmoid(layers.dense(p["w_x"], uc).astype(jnp.float32))
+        a = rglru._decay(p, r)
+        b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9)) * (i * uc.astype(jnp.float32))
+
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, b1 * a2 + b2
+
+        _, hs = jax.lax.associative_scan(combine, (a, b), axis=1)
+        conv_tail = u[:, -(rglru.CONV_K - 1):, :]
+        return hs[:, -1], conv_tail
+
+    def _rwkv_final_state(self, p, h_in):
+        B, T, d = h_in.shape
+        H = d // self.cfg.rwkv_head_dim
+        N = self.cfg.rwkv_head_dim
+        S0 = jnp.zeros((B, H, N, N), jnp.float32)
+
+        def body(carry, xt):
+            S, xp = carry
+            S_new, _ = rwkv6._step(p, self.cfg, S, xt, xp)
+            return (S_new, xt), None
+
+        (S, xprev), _ = jax.lax.scan(
+            body, (S0, jnp.zeros((B, d), h_in.dtype)), jnp.moveaxis(h_in, 1, 0)
+        )
+        return S, xprev
+
+    # ------------------------------------------------------- centroid store
+
+    def _build_store(self, k_cache, layout, offs, quant):
+        """k_cache [B, n_kv, S_max, hd] -> (codes, scale, zero) in the
+        flattened kernel layout for ONE layer.
+
+        Fully vectorized over dynamic per-head block sizes (scan-safe):
+        rank keys are built at every candidate size from page-granular
+        pooled stats, then each flat store row selects its head's size.
+        """
+        from repro.core.stacked import as_arrays
+
+        cfg = self.cfg
+        la = as_arrays(layout)
+        method = cfg.sparse.centroid_method
+        B, n_kv, S_max, hd = k_cache.shape
+        Dp = padded_rank_key_width(hd, method)
+        page = cfg.sparse.page_size
+        n_pages = S_max // page
+        rows_total = la.total_rows
+        cands = cfg.sparse.candidate_block_sizes
+
+        pages = k_cache.reshape(B, n_kv, n_pages, page, hd).astype(jnp.float32)
+        pmax = pages.max(axis=3)
+        pmin = pages.min(axis=3)
+        pmean = pages.mean(axis=3)
+
+        def merge(c):
+            s = c // page
+            nb = n_pages // s
+            mmax = pmax.reshape(B, n_kv, nb, s, hd).max(3)
+            mmin = pmin.reshape(B, n_kv, nb, s, hd).min(3)
+            mmean = pmean.reshape(B, n_kv, nb, s, hd).mean(3)
+            if method == "mean":
+                rk = mmean
+            elif method == "quest":
+                rk = jnp.concatenate([mmax, mmin], axis=-1)
+            else:  # arkvale approximated from page stats: center + half-diag
+                center = 0.5 * (mmax + mmin)
+                radius = 0.5 * jnp.linalg.norm(mmax - mmin, axis=-1)
+                rk = jnp.concatenate([center, radius[..., None]], axis=-1)
+            pad = Dp - rk.shape[-1]
+            if pad:
+                rk = jnp.pad(rk, ((0, 0),) * (rk.ndim - 1) + ((0, pad),))
+            # pad block axis to the max candidate count (= n_pages)
+            rk = jnp.pad(rk, ((0, 0), (0, 0), (0, n_pages - nb), (0, 0)))
+            return rk                                      # [B, n_kv, n_pages, Dp]
+
+        merged = jnp.stack([merge(c) for c in cands])      # [C, B, n_kv, nP, Dp]
+        bsz = la.block_sizes                               # [n_kv] (maybe traced)
+        sel = jnp.zeros_like(merged[0])
+        nb_h = jnp.zeros((n_kv,), jnp.int32)
+        for ci, c in enumerate(cands):
+            hit = (bsz == c)
+            sel = jnp.where(hit[None, :, None, None], merged[ci], sel)
+            nb_h = jnp.where(hit, S_max // c, nb_h)
+        # sel: per head, first nb_h[h] rows are that head's rank keys.
+
+        # per-head quantization params over valid blocks
+        blk_valid = (
+            jnp.arange(n_pages)[None, :] < nb_h[:, None]
+        )[None, :, :, None]                                # [1, n_kv, nP, 1]
+        if quant in ("none", None):
+            scale = jnp.ones((B, n_kv, Dp), jnp.float32)
+            zero = jnp.zeros((B, n_kv, Dp), jnp.float32)
+        else:
+            qhi = 15.0 if quant.startswith("int4") else 255.0
+            xmin = jnp.where(blk_valid, sel, 1e30).min(axis=2)
+            xmax = jnp.where(blk_valid, sel, -1e30).max(axis=2)
+            scale = jnp.maximum((xmax - xmin) / qhi, 1e-8)
+            zero = xmin
+
+        # flat rows: row r -> (head = row_head[r], local block j = r - offs)
+        row_head = jnp.repeat(
+            la.tile_head, la.tile_rows, total_repeat_length=rows_total
+        )                                                   # [rows]
+        row_off = offs[row_head]                            # [rows]
+        row_j = jnp.arange(rows_total, dtype=jnp.int32) - row_off
+        row_j = jnp.clip(row_j, 0, n_pages - 1)
+        # gather per-row rank keys: sel[B, n_kv, nP, Dp] at (row_head, row_j)
+        rk_rows = sel[:, row_head, row_j]                   # [B, rows, Dp]
+
+        if quant in ("none", None):
+            flat = rk_rows
+        else:
+            qhi = 15.0 if quant.startswith("int4") else 255.0
+            s_rows = scale[:, row_head]                     # [B, rows, Dp]
+            z_rows = zero[:, row_head]
+            flat = jnp.clip(
+                jnp.round((rk_rows - z_rows) / s_rows), 0, qhi
+            ).astype(jnp.uint8)
+            if quant.startswith("int4"):
+                flat = pack_split_half(flat)
+        return flat, scale, zero
+
+    # ------------------------------------------------------------ decode step
+
+    def decode_step(
+        self,
+        params,
+        cache: Cache,
+        tokens: jax.Array,            # [B] next input token ids
+        use_kernels: bool = False,
+    ) -> Tuple[jax.Array, Cache]:
+        """One decode step for all sequences. -> (logits [B, vocab], cache)."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        x = params["embed"][tokens][:, None, :]             # [B, 1, d]
+        if cfg.name.startswith("musicgen"):
+            pos0 = cache["seq_len"][:, None]
+            x = x + jax.vmap(
+                lambda p: layers.sinusoidal_embedding(p, cfg.d_model)
+            )(pos0).astype(x.dtype)
+        positions = cache["seq_len"][:, None]               # [B, 1]
+        pat = self.plan.pattern
+        stk = cache.get("_layouts")
+        offsets = cache.get("_offsets")
+
+        def run_layer(p, kind, x, entry, lay, offs):
+            h = layers.rms_norm(p["norm1"], x, cfg.norm_eps)
+            new_entry = dict(entry)
+            if kind == "attn":
+                h, new_entry = self._attn_decode(
+                    p["attn"], h, entry, lay, offs, positions, use_kernels
+                )
+            elif kind == "local_attn":
+                h, new_entry = self._local_attn_decode(
+                    p["attn"], h, entry, positions
+                )
+            elif kind == "rglru":
+                h, (new_entry["h"], new_entry["conv"]) = rglru.rglru_decode(
+                    p["rec"], h, (entry["h"], entry["conv"]), cfg
+                )
+            elif kind == "rwkv":
+                h, (new_entry["S"], new_entry["xprev"]) = rwkv6.rwkv_decode(
+                    p["tmix"], h, (entry["S"], entry["xprev"]), cfg
+                )
+            x = x + h
+            h = layers.rms_norm(p["norm2"], x, cfg.norm_eps)
+            if cfg.moe is not None:
+                h, _ = moe_mod.moe_ffn(p["ffn"], h, cfg, group_size=B)
+            else:
+                h = layers.mlp(p["ffn"], h, cfg.activation)
+            return x + h, new_entry
+
+        def cycle_fn(x, xs):
+            cyc_params, cyc_cache, cyc_idx = xs
+            new_cache = {}
+            for i, kind in enumerate(pat):
+                lay = stk.layer(cyc_idx) if (stk is not None and kind == "attn") else None
+                offs = offsets[cyc_idx] if (offsets is not None and kind == "attn") else None
+                x, new_cache[f"pos{i}"] = run_layer(
+                    cyc_params[f"pos{i}"], kind, x, cyc_cache[f"pos{i}"], lay, offs
+                )
+            return x, new_cache
+
+        if self.plan.n_cycles > 0:
+            cyc_cache_in = {f"pos{i}": cache[f"pos{i}"] for i in range(len(pat))}
+            x, new_cyc = jax.lax.scan(
+                cycle_fn,
+                x,
+                (params["cycles"], cyc_cache_in, jnp.arange(self.plan.n_cycles)),
+            )
+            for i in range(len(pat)):
+                cache[f"pos{i}"] = new_cyc[f"pos{i}"]
+        for i, kind in enumerate(self.plan.rest_kinds):
+            lay_idx = self.plan.n_cycles * len(pat) + i
+            lay = stk.layer(lay_idx) if (stk is not None and kind == "attn") else None
+            offs = offsets[lay_idx] if (offsets is not None and kind == "attn") else None
+            x, cache["rest"][i] = run_layer(
+                params["rest"][i], kind, x, cache["rest"][i], lay, offs
+            )
+
+        x = layers.rms_norm(params["final_norm"], x, cfg.norm_eps)
+        logits = self.unembed(params, x[:, 0])
+        cache = dict(cache)
+        cache["seq_len"] = cache["seq_len"] + 1
+        return logits, cache
+
+    # -- decode helpers ---------------------------------------------------
+
+    def _attn_decode(self, p, h, entry, lay, offs, positions, use_kernels):
+        cfg = self.cfg
+        B = h.shape[0]
+        hd = cfg.resolved_head_dim
+        q, k_new, v_new = layers.qkv_project(p, h, cfg, positions)
+        q = q[:, 0]                                       # [B, Hq, hd]
+        k_new = k_new[:, 0]                               # [B, n_kv, hd]
+        v_new = v_new[:, 0]
+        seq_len = positions[:, 0]                         # [B]
+
+        # append KV at position seq_len (per sequence).  Keep every decode
+        # tensor on the SAME sharding as the cache (batch x head_dim): the
+        # baseline's unannotated fresh k/v made GSPMD bounce between
+        # hd-sharded and kv-sharded layouts with full replication copies
+        # per layer (the "involuntary full rematerialization" storm, §Perf).
+        q = constrain(q, "batch", None, "head_dim")
+        k_new = constrain(k_new, "batch", "kv_heads", "head_dim")
+        v_new = constrain(v_new, "batch", "kv_heads", "head_dim")
+        k_cache = entry["k"]                              # [B, n_kv, S_max, hd]
+        v_cache = entry["v"]
+        bidx = jnp.arange(B)
+        k_cache = k_cache.at[bidx, :, seq_len].set(k_new.astype(k_cache.dtype))
+        v_cache = v_cache.at[bidx, :, seq_len].set(v_new.astype(v_cache.dtype))
+        k_cache = constrain(k_cache, "batch", "kv_heads", "kv_pages", "head_dim")
+        v_cache = constrain(v_cache, "batch", "kv_heads", "kv_pages", "head_dim")
+        new_entry = dict(entry)
+        new_entry["k"] = k_cache
+        new_entry["v"] = v_cache
+        S_max = k_cache.shape[2]
+        live = seq_len + 1
+
+        if lay is None:
+            out = dense_decode_attention(q, k_cache, v_cache, seq_len=live)
+            return layers.out_project(p, out[:, None], cfg), new_entry
+
+        # --- AB-Sparse path ---
+        method = cfg.sparse.centroid_method
+        quant = cfg.sparse.quant
+        # 1. refresh the centroid row of the block containing the new token
+        codes, scale, zero = entry["codes"], entry["scale"], entry["zero"]
+        codes = self._refresh_tail_centroid(
+            codes, scale, zero, k_cache, lay, offs, seq_len, method, quant
+        )
+        new_entry["codes"] = codes
+
+        # 2. estimation
+        rq = rank_query(q, method, hd)
+        if use_kernels:
+            from repro.kernels import ops as kops
+
+            store = kops.KernelCentroidStore(
+                codes, scale, zero,
+                4 if quant.startswith("int4") else (8 if quant.startswith("int8") else 0),
+                False,
+            )
+            scores = kops.centroid_scores(rq, store, lay, cfg.n_kv_heads)
+        else:
+            rk = self._dequant_store(codes, scale, zero, lay, quant)
+            scores = est_mod.estimate_scores(rq, rk, lay, cfg.n_kv_heads)
+
+        # 3. selection
+        table, valid = select_page_table(
+            scores, lay, seq_len=live,
+            sink_pages=cfg.sparse.sink_pages,
+            local_pages=cfg.sparse.local_pages,
+        )
+
+        # 4. paged attention over selected pages
+        if use_kernels:
+            out = kops.paged_attention(
+                q, k_cache, v_cache, table, valid, lay.page_size, live
+            )
+        else:
+            out = paged_attention_reference(
+                q, k_cache, v_cache, table, valid, lay.page_size, live
+            )
+        return layers.out_project(p, out[:, None], cfg), new_entry
+
+    def _dequant_store(self, codes, scale, zero, lay, quant):
+        """Reference dequant of the flattened store -> [B, rows, Dp] f32."""
+        from repro.core.quantization import unpack_split_half
+
+        if quant in ("none", None):
+            return codes
+        if quant.startswith("int4"):
+            u = unpack_split_half(codes).astype(jnp.float32)
+        else:
+            u = codes.astype(jnp.float32)
+        # per-row head id -> per-row scale/zero via tile map
+        row_head = jnp.repeat(lay.tile_head, lay.tile_rows)   # [rows]
+        B = codes.shape[0]
+        s = jnp.take_along_axis(
+            scale, row_head[None, :, None].repeat(B, 0), axis=1
+        )
+        z = jnp.take_along_axis(
+            zero, row_head[None, :, None].repeat(B, 0), axis=1
+        )
+        return u * s + z
+
+    def _refresh_tail_centroid(
+        self, codes, scale, zero, k_cache, lay, offs, seq_len, method, quant
+    ):
+        """Recompute + requantize the rank-key row of the block containing
+        the newest token, for every head (vectorized, static shapes).
+
+        The 64-token window (= max candidate block) containing the token is
+        pooled at each candidate size; the row for each head is selected by
+        its (possibly layer-dynamic) block size.  Positions beyond seq_len
+        are neutralized (-inf/+inf for max/min, zero-weight for mean).
+        """
+        cfg = self.cfg
+        B, n_kv, S_max, hd = k_cache.shape
+        Dp = scale.shape[-1]
+        Wmax = max(cfg.sparse.candidate_block_sizes)
+        w0 = (seq_len // Wmax) * Wmax                        # [B]
+
+        # gather the window [B, n_kv, Wmax, hd]
+        win = jax.vmap(
+            lambda kc, s: jax.lax.dynamic_slice(
+                kc, (0, s, 0), (n_kv, Wmax, hd)
+            )
+        )(k_cache, w0)
+        pos = w0[:, None] + jnp.arange(Wmax)[None]           # [B, Wmax]
+        ok = (pos <= seq_len[:, None])[:, None, :, None]     # include new tok
+        winf = win.astype(jnp.float32)
+        BIG = 1e30
+
+        def pooled(c):
+            n = Wmax // c
+            wm = winf.reshape(B, n_kv, n, c, hd)
+            okm = ok.reshape(B, 1, n, c, 1)
+            mx = jnp.where(okm, wm, -BIG).max(3)
+            mn = jnp.where(okm, wm, BIG).min(3)
+            cnt = jnp.maximum(okm.sum(3), 1)
+            mean = jnp.where(okm, wm, 0.0).sum(3) / cnt
+            # slot containing the new token
+            slot = (seq_len % Wmax) // c                      # [B]
+            take = lambda a: jnp.take_along_axis(
+                a, slot[:, None, None, None], axis=2
+            )[:, :, 0]
+            mx, mn, mean = take(mx), take(mn), take(mean)     # [B, n_kv, hd]
+            if method == "mean":
+                rk = mean
+            elif method == "quest":
+                rk = jnp.concatenate([mx, mn], axis=-1)
+            else:
+                center = 0.5 * (mx + mn)
+                radius = 0.5 * jnp.linalg.norm(mx - mn, axis=-1)
+                rk = jnp.concatenate([center, radius[..., None]], axis=-1)
+            pad = Dp - rk.shape[-1]
+            if pad:
+                rk = jnp.pad(rk, ((0, 0), (0, 0), (0, pad)))
+            return rk                                         # [B, n_kv, Dp]
+
+        cands = cfg.sparse.candidate_block_sizes
+        rks = jnp.stack([pooled(c) for c in cands])           # [C, B, n_kv, Dp]
+        bsz = lay.block_sizes                                 # [n_kv]
+        sel = jnp.zeros_like(rks[0])
+        for ci, c in enumerate(cands):
+            sel = jnp.where((bsz == c)[None, :, None], rks[ci], sel)
+
+        # quantize with the frozen per-head scale/zero
+        if quant in ("none", None):
+            new_codes = sel
+        else:
+            qhi = 15.0 if quant.startswith("int4") else 255.0
+            qv = jnp.clip(jnp.round((sel - zero) / scale), 0, qhi).astype(
+                jnp.uint8
+            )
+            if quant.startswith("int4"):
+                lo = qv[..., : Dp // 2]
+                hi = qv[..., Dp // 2 :]
+                new_codes = (lo | (hi << 4)).astype(jnp.uint8)
+            else:
+                new_codes = qv
+
+        rows = offs[None, :] + (seq_len[:, None] // bsz[None, :])  # [B, n_kv]
+        bidx = jnp.arange(B)[:, None]
+        return codes.at[bidx, rows].set(new_codes)
+
+    def _local_attn_decode(self, p, h, entry, positions):
+        """Sliding-window decode with a ring-buffer KV cache."""
+        cfg = self.cfg
+        B = h.shape[0]
+        q, k_new, v_new = layers.qkv_project(p, h, cfg, positions)
+        q = q[:, 0]
+        seq_len = positions[:, 0]
+        k_cache, v_cache = entry["k"], entry["v"]           # [B, n_kv, W, hd]
+        W = k_cache.shape[2]
+        slot = seq_len % W
+        bidx = jnp.arange(B)
+        k_cache = k_cache.at[bidx, :, slot].set(
+            k_new[:, 0].astype(k_cache.dtype)
+        )
+        v_cache = v_cache.at[bidx, :, slot].set(
+            v_new[:, 0].astype(v_cache.dtype)
+        )
+        # a slot s holds position p = largest p <= seq_len with p % W == s;
+        # valid iff that position is within the live window (seq_len-W, seq_len]
+        pos_in_slot = seq_len[:, None] - (
+            (seq_len[:, None] - jnp.arange(W)[None, :]) % W
+        )
+        valid = (pos_in_slot >= 0) & (pos_in_slot > seq_len[:, None] - W)
+        out = self._masked_dense_decode(q, k_cache, v_cache, valid)
+        new_entry = dict(entry)
+        new_entry["k"] = k_cache
+        new_entry["v"] = v_cache
+        return layers.out_project(p, out[:, None], cfg), new_entry
+
+    @staticmethod
+    def _masked_dense_decode(q, k, v, valid):
+        B, n_kv, W, D = k.shape
+        g = q.shape[1] // n_kv
+        qf = q.reshape(B, n_kv, g, D).astype(jnp.float32)
+        logits = jnp.einsum("bhgd,bhsd->bhgs", qf, k.astype(jnp.float32))
+        logits = logits / jnp.sqrt(jnp.float32(D))
+        logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhgs,bhsd->bhgd", probs, v.astype(jnp.float32))
+        return out.reshape(B, q.shape[1], D).astype(q.dtype)

@@ -1,0 +1,5 @@
+"""Serving engine: continuous batching over jit'd prefill/decode steps,
+top-k/top-p sampling, page-pool admission control."""
+from repro.serving.engine import Engine, Request
+
+__all__ = ["Engine", "Request"]

@@ -1,0 +1,167 @@
+"""Continuous-batching serving engine.
+
+Slot-based batching over the jit'd model steps: the decode cache holds
+``max_batch`` sequence slots; requests are admitted into free slots (gated
+by page-pool accounting), prefilled individually (chunk-wise), scattered
+into the batch cache, then advance together through one jit'd
+``decode_step`` per engine tick.  Finished sequences retire and free their
+slot+pages immediately — new requests join mid-flight (continuous
+batching).
+
+AB-Sparse is transparent here: the decode step internally runs
+estimation -> adaptive top-k -> paged attention when the model's sparse
+config is enabled for the engine's max_context.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, ServeConfig
+from repro.cache.paged_kv import PagePool
+from repro.models import Transformer
+from repro.serving.sampler import sample
+
+
+@dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray                  # [S] int32
+    max_new_tokens: int = 32
+    eos_token: Optional[int] = None
+    prefix_emb: Optional[np.ndarray] = None
+    # filled by the engine:
+    output: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(
+        self,
+        model_cfg: ModelConfig,
+        params,
+        serve_cfg: Optional[ServeConfig] = None,
+        max_batch: int = 4,
+        max_context: int = 2048,
+        seed: int = 0,
+    ):
+        self.cfg = model_cfg
+        self.serve = serve_cfg or ServeConfig()
+        self.model = Transformer(model_cfg)
+        self.params = params
+        self.max_batch = max_batch
+        self.max_context = max_context
+        self.pool = PagePool(
+            total_pages=max_batch * (max_context // self.serve.page_size),
+            page_size=self.serve.page_size,
+        )
+        self.key = jax.random.PRNGKey(seed)
+
+        self.cache = self.model.init_cache(max_batch, max_context)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.queue: List[Request] = []
+        self._decode = jax.jit(self.model.decode_step)
+        self._tokens_buf = np.zeros((max_batch,), np.int32)
+
+    # -- admission -----------------------------------------------------------
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def _admit(self):
+        while self.queue:
+            slot = self._free_slot()
+            if slot is None:
+                return
+            req = self.queue[0]
+            total = len(req.prompt) + req.max_new_tokens
+            if not self.pool.can_admit(total):
+                return  # head-of-line blocking; FCFS admission
+            self.queue.pop(0)
+            self.pool.allocate(req.req_id, total)
+            self._prefill_into_slot(req, slot)
+
+    def _prefill_into_slot(self, req: Request, slot: int):
+        tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+        prefix = (
+            jnp.asarray(req.prefix_emb)[None]
+            if req.prefix_emb is not None
+            else None
+        )
+        logits, cache1 = self.model.prefill(
+            self.params, tokens, prefix, max_context=self.max_context
+        )
+        # scatter the single-sequence cache into this batch slot
+        def scatter(dst, src):
+            if not isinstance(dst, jnp.ndarray) or dst.ndim == 0:
+                return dst
+            # find the batch axis: prefill cache has batch=1 at the same
+            # axis position as the engine cache's max_batch axis.
+            for ax in range(dst.ndim):
+                if src.shape[ax] == 1 and dst.shape[ax] == self.max_batch:
+                    idx = [slice(None)] * dst.ndim
+                    idx[ax] = slot
+                    return dst.at[tuple(idx)].set(
+                        jnp.squeeze(src, axis=ax).astype(dst.dtype)
+                    )
+            return dst
+
+        a, b = self.cache, cache1
+        self.cache = jax.tree.map(
+            scatter, a, b,
+            is_leaf=lambda x: isinstance(x, jnp.ndarray),
+        )
+        self.slots[slot] = req
+        self.key, k = jax.random.split(self.key)
+        first = sample(
+            k, logits, self.serve.temperature, self.serve.top_k, self.serve.top_p
+        )
+        req.output.append(int(first[0]))
+        self._tokens_buf[slot] = int(first[0])
+
+    # -- decode tick -----------------------------------------------------------
+
+    def step(self) -> int:
+        """One engine tick: admit, batched decode, sample, retire.
+        Returns the number of active sequences."""
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return 0
+        tokens = jnp.asarray(self._tokens_buf)
+        logits, self.cache = self._decode(self.params, self.cache, tokens)
+        self.key, k = jax.random.split(self.key)
+        next_tokens = sample(
+            k, logits, self.serve.temperature, self.serve.top_k, self.serve.top_p
+        )
+        nt = np.asarray(next_tokens)
+        for i in active:
+            req = self.slots[i]
+            tok = int(nt[i])
+            req.output.append(tok)
+            self._tokens_buf[i] = tok
+            hit_eos = req.eos_token is not None and tok == req.eos_token
+            if len(req.output) >= req.max_new_tokens or hit_eos:
+                req.done = True
+                self.pool.free(req.req_id)
+                self.slots[i] = None
+        return len([s for s in self.slots if s is not None])
+
+    def run_until_done(self, max_ticks: int = 10_000) -> List[Request]:
+        finished: List[Request] = []
+        for _ in range(max_ticks):
+            self.step()
+            if not self.queue and all(s is None for s in self.slots):
+                break
+        return finished

@@ -1,0 +1,31 @@
+"""Top-k / top-p / temperature sampling (Qwen3 recommended defaults)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(
+    key: jax.Array,
+    logits: jax.Array,          # [B, V]
+    temperature: float = 0.6,
+    top_k: int = 20,
+    top_p: float = 0.95,
+) -> jax.Array:
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / temperature
+    V = logits.shape[-1]
+    if top_k and top_k < V:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        kth = vals[..., -1:]
+        logits = jnp.where(logits >= kth, logits, -1e30)
+    if top_p < 1.0:
+        sorted_logits = -jnp.sort(-logits, axis=-1)
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # smallest set with cumulative prob >= top_p
+        cutoff_idx = jnp.sum(cum < top_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+        logits = jnp.where(logits >= cutoff, logits, -1e30)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,2 @@
+"""Training substrate: AdamW, deterministic data pipeline, sharded atomic
+checkpoints, elastic restart, straggler watchdog, gradient compression."""

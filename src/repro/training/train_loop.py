@@ -1,0 +1,189 @@
+"""Fault-tolerant training loop.
+
+Production posture (designed for 1000+ nodes, exercised here single-host):
+
+- **train_step** is a pure jit'd function: loss (chunked CE) -> grads ->
+  AdamW; gradient accumulation over microbatches keeps the per-step
+  activation footprint constant as global batch grows.
+- **checkpoint/restart**: atomic sharded checkpoints every N steps;
+  ``run()`` auto-resumes from the latest one, and the deterministic data
+  pipeline replays the exact batch sequence.
+- **elastic scaling**: checkpoints are mesh-agnostic; a restart may change
+  the data-parallel shard count — ``DataIterator`` re-shards by (step,
+  shard) and the state is re-sharded on load.
+- **straggler watchdog**: steps slower than ``straggler_factor`` x the
+  running median are recorded; on a real fleet this triggers shard
+  re-queue / hot-spare swap-in — here it feeds the fault log and tests.
+- **simulated failures**: ``inject_failure_at`` raises mid-run to exercise
+  the restart path end-to-end in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import MeshPlan, ModelConfig, TrainConfig
+from repro.models import Transformer
+from repro.training import checkpoint as ckpt
+from repro.training.data import DataConfig, DataIterator, batch_for_step
+from repro.training.optimizer import (
+    OptState,
+    adamw_update,
+    init_opt_state,
+)
+
+
+@dataclass
+class FaultLog:
+    stragglers: List[Dict] = field(default_factory=list)
+    restarts: int = 0
+    failures: List[int] = field(default_factory=list)
+
+
+def make_train_step(
+    model: Transformer,
+    train_cfg: TrainConfig,
+    plan: MeshPlan,
+    prefix_fn: Optional[Callable] = None,
+):
+    """Build the pure train_step(params, opt_state, batch) function."""
+
+    def loss_fn(params, tokens):
+        prefix = prefix_fn(tokens) if prefix_fn is not None else None
+        return model.loss(params, tokens, prefix, remat=plan.remat)
+
+    def train_step(params, opt_state: OptState, tokens):
+        if plan.grad_accum > 1:
+            B = tokens.shape[0]
+            micro = B // plan.grad_accum
+            mb = tokens.reshape(plan.grad_accum, micro, -1)
+
+            def acc_fn(carry, tb):
+                loss_sum, grad_sum = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, tb)
+                grad_sum = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), grad_sum, grads
+                )
+                return (loss_sum + loss, grad_sum), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (loss_sum, grads), _ = jax.lax.scan(
+                acc_fn, (jnp.zeros(()), zero_g), mb
+            )
+            loss = loss_sum / plan.grad_accum
+            grads = jax.tree.map(lambda g: g / plan.grad_accum, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, tokens)
+        # constrain grads to the param shardings: GSPMD then reduce-
+        # scatters the per-layer DP reduction instead of all-reducing into
+        # a full replicated f32 grad stack (2x traffic + 12GB HBM), §Perf.
+        from repro.distributed.params import constrain_tree_like_params
+
+        grads = constrain_tree_like_params(grads)
+        params, opt_state, metrics = adamw_update(
+            train_cfg, params, grads, opt_state
+        )
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+class Trainer:
+    def __init__(
+        self,
+        model_cfg: ModelConfig,
+        train_cfg: TrainConfig,
+        data_cfg: DataConfig,
+        plan: Optional[MeshPlan] = None,
+        inject_failure_at: Optional[int] = None,
+        n_data_shards: int = 1,
+    ):
+        self.model = Transformer(model_cfg)
+        self.model_cfg = model_cfg
+        self.train_cfg = train_cfg
+        self.data_cfg = data_cfg
+        self.plan = plan or MeshPlan()
+        self.fault_log = FaultLog()
+        self.inject_failure_at = inject_failure_at
+        self.n_data_shards = n_data_shards
+        self._step_fn = jax.jit(
+            make_train_step(self.model, train_cfg, self.plan)
+        )
+        self._durations: List[float] = []
+
+    # -- state --------------------------------------------------------------
+
+    def init_state(self, seed: int = 0):
+        params = self.model.init(jax.random.PRNGKey(seed))
+        opt = init_opt_state(params, self.plan.grad_compression)
+        return {"params": params, "opt": opt}
+
+    # -- fault hooks ----------------------------------------------------------
+
+    def _watchdog(self, step: int, dt: float):
+        self._durations.append(dt)
+        if len(self._durations) >= 5:
+            med = sorted(self._durations)[len(self._durations) // 2]
+            if dt > self.train_cfg.straggler_factor * med:
+                self.fault_log.stragglers.append(
+                    {"step": step, "duration": dt, "median": med}
+                )
+
+    # -- main loop -------------------------------------------------------------
+
+    def run(self, steps: int, state=None, resume: bool = True) -> Dict[str, Any]:
+        cfg = self.train_cfg
+        if state is None:
+            state = self.init_state(cfg.seed)
+        start = 0
+        if resume:
+            got_step, got = ckpt.restore_checkpoint(cfg.checkpoint_dir, state)
+            if got is not None:
+                state, start = got, got_step
+                self.fault_log.restarts += 1
+
+        it = DataIterator(self.data_cfg, self.n_data_shards)
+        it.seek(start)
+        losses = []
+        for step in range(start, steps):
+            if self.inject_failure_at is not None and step == self.inject_failure_at:
+                self.inject_failure_at = None  # fire once
+                self.fault_log.failures.append(step)
+                raise RuntimeError(f"injected node failure at step {step}")
+            tokens = it.next()
+            t0 = time.monotonic()
+            params, opt, metrics = self._step_fn(
+                state["params"], state["opt"], tokens
+            )
+            metrics = jax.device_get(metrics)
+            dt = time.monotonic() - t0
+            self._watchdog(step, dt)
+            state = {"params": params, "opt": opt}
+            losses.append(float(metrics["loss"]))
+            if (step + 1) % cfg.checkpoint_every == 0 or step + 1 == steps:
+                ckpt.save_checkpoint(cfg.checkpoint_dir, step + 1, state)
+                ckpt.prune_checkpoints(cfg.checkpoint_dir, cfg.keep_checkpoints)
+        return {"state": state, "losses": losses, "fault_log": self.fault_log}
+
+
+def run_with_restarts(trainer: Trainer, steps: int, max_restarts: int = 3):
+    """Driver that survives (injected or real) failures by restarting from
+    the latest checkpoint — the single-host analogue of a cluster
+    supervisor."""
+    attempts = 0
+    while True:
+        try:
+            return trainer.run(steps)
+        except RuntimeError as e:
+            attempts += 1
+            if attempts > max_restarts:
+                raise
+            # loop: run() auto-resumes from the latest checkpoint

@@ -1,0 +1,19 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS device forcing here — tests see the
+real (single-CPU) device; only launch/dryrun.py forces 512 devices."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_qkv(key, B, n_q, n_kv, S, D, dtype=jnp.float32):
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, n_q, D), dtype)
+    k = jax.random.normal(kk, (B, n_kv, S, D), dtype)
+    v = jax.random.normal(kv, (B, n_kv, S, D), dtype)
+    return q, k, v

@@ -1,0 +1,67 @@
+"""Page-pool allocator property tests (cache/paged_kv.py invariants)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cache.paged_kv import PagePool, PoolExhausted
+
+
+def test_alloc_free_roundtrip():
+    pool = PagePool(64)
+    t = pool.allocate(1, 1000)  # 63 pages
+    assert t.n_pages == 63 and pool.free_pages == 1
+    pool.free(1)
+    assert pool.free_pages == 64
+
+
+def test_exhaustion_raises_cleanly():
+    pool = PagePool(4)
+    pool.allocate(1, 48)
+    assert not pool.can_admit(32)
+    with pytest.raises(PoolExhausted):
+        pool.allocate(2, 32)
+    # failed allocation must not leak pages
+    assert pool.free_pages == 1
+
+
+def test_ownership_exclusive():
+    pool = PagePool(32)
+    pool.allocate(1, 100)
+    pool.allocate(2, 200)
+    owner = pool.owner_map()
+    assert (owner >= -1).all()
+    assert (owner == 1).sum() == 7
+    assert (owner == 2).sum() == 13
+
+
+def test_physical_view_strided_mapping():
+    """Paper Fig. 9: logical block -> contiguous logical pages -> physical
+    pages via the table, no data movement."""
+    pool = PagePool(32)
+    t = pool.allocate(7, 16 * 8)  # 8 logical pages
+    logical = np.array([[0, 1], [6, 7]])
+    phys = t.physical_view(logical)
+    assert phys.shape == logical.shape
+    assert set(phys.ravel()) <= set(t.physical)
+
+
+@settings(max_examples=30, deadline=None)
+@given(ops=st.lists(st.tuples(st.integers(0, 9), st.integers(1, 300)),
+                    min_size=1, max_size=40))
+def test_pool_invariants_under_random_workload(ops):
+    pool = PagePool(128)
+    live = {}
+    for i, (sid_base, tokens) in enumerate(ops):
+        sid = 1000 + sid_base
+        if sid in live:
+            pool.free(sid)
+            del live[sid]
+        else:
+            try:
+                pool.allocate(sid, tokens)
+                live[sid] = tokens
+            except PoolExhausted:
+                pass
+        owner = pool.owner_map()  # asserts no double ownership
+        assert pool.used_pages == (owner != -1).sum()
+        assert pool.free_pages + pool.used_pages == 128

@@ -1,0 +1,130 @@
+"""Distribution-layer tests: sharding rules, param mapping, dry-run
+machinery (small forced-device mesh via subprocess so the main test
+session keeps its single-device view)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.config import MeshPlan, SHAPES_BY_NAME
+from repro.configs import get_config
+from repro.distributed import params as pshard
+
+PLAN = MeshPlan()
+
+
+def test_rules_head_alignment():
+    sh = SHAPES_BY_NAME["train_4k"]
+    r_gemma = pshard.rules_for(get_config("gemma-7b"), sh, PLAN)
+    r_nemo = pshard.rules_for(get_config("nemotron-4-340b"), sh, PLAN)
+    # gemma (7B) trains pure-FSDP: no TP at all
+    assert r_gemma["heads"] is None and r_gemma["mlp"] is None
+    assert "model" in r_gemma["batch"]
+    # nemotron (340B) keeps head-aligned TP (96 % 16 == 0)
+    assert r_nemo["heads"] == "model"
+    assert r_nemo["batch"] == ("data",)
+
+
+def test_rules_rwkv_excluded_from_pure_fsdp():
+    sh = SHAPES_BY_NAME["train_4k"]
+    r = pshard.rules_for(get_config("rwkv6-3b"), sh, PLAN)
+    assert "model" not in (r["batch"] or ()), (
+        "token-recurrent stacks must not use pure FSDP (per-timestep "
+        "weight re-gather, EXPERIMENTS.md §Perf 2.7)"
+    )
+
+
+def test_rules_decode_gqa_fallback():
+    sh = SHAPES_BY_NAME["decode_32k"]
+    r = pshard.rules_for(get_config("llama3.2-3b"), sh, PLAN)  # kv=8 < 16
+    assert r["kv_heads"] is None and r["head_dim"] == "model"
+    r2 = pshard.rules_for(get_config("gemma-7b"), sh, PLAN)    # kv=16
+    assert r2["kv_heads"] == "model"
+
+
+def test_param_logical_mapping():
+    cases = [
+        ("cycles/pos0/attn/wq/w", 3, (None, "fsdp", "heads")),
+        ("cycles/pos0/ffn/down/w", 3, (None, "mlp", "fsdp")),
+        ("embed", 2, ("vocab", "fsdp")),
+        ("cycles/pos0/ffn/up", 4, (None, "experts", "fsdp", "mlp")),
+        ("rest/0/norm1/scale", 1, (None,)),
+    ]
+    for path, ndim, want in cases:
+        got = pshard.logical_axes_for_param(path, ndim)
+        assert got == want, (path, got, want)
+
+
+def test_spec_divisibility_guard():
+    import jax
+    from jax.sharding import PartitionSpec
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # 8 kv heads on a 16-way model axis must drop to replication — emulate
+    # via explicit sizes using the pure function
+    spec = pshard.spec_from_logical(
+        mesh, {"kv_heads": "model"}, ("kv_heads",), (8,)
+    )
+    assert spec == PartitionSpec(None) or spec == PartitionSpec("model")
+    # (axis size 1 here always divides; the real guard is exercised in the
+    # dry-run subprocess test below)
+
+
+DRYRUN_SNIPPET = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, json
+    import jax.numpy as jnp
+    from repro.config import MeshPlan, ShapeConfig
+    from repro.configs import get_config, smoke_variant
+    from repro.distributed import params as pshard
+    from repro.distributed.sharding import sharding_rules
+    from repro.launch.specs import build_cell
+    import dataclasses
+
+    cfg = smoke_variant(get_config("llama3.2-3b"))
+    shape = ShapeConfig("t", 256, 8, "%KIND%")
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    plan = MeshPlan()
+    rules = pshard.rules_for(cfg, shape, plan)
+    cell = build_cell(cfg, shape, plan)
+    ins = [
+        pshard.tree_shardings(
+            t, mesh, rules,
+            kind=("param" if k in ("param", "opt") else "cache"),
+        )
+        for t, k in zip(cell["args"], cell["kinds"])
+    ]
+    with mesh, sharding_rules(mesh, rules):
+        compiled = (
+            jax.jit(cell["fn"], in_shardings=tuple(ins))
+            .lower(*cell["args"]).compile()
+        )
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    print(json.dumps({"ok": True, "flops": cost.get("flops", 0)}))
+    """
+)
+
+
+@pytest.mark.parametrize("kind", ["train", "decode", "prefill"])
+def test_dryrun_lowers_on_forced_mesh(kind):
+    """The dry-run machinery (specs -> shardings -> lower -> compile) works
+    end-to-end on a small forced-device mesh for every step kind."""
+    code = DRYRUN_SNIPPET.replace("%KIND%", kind)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src:" + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, timeout=560, cwd="/root/repo",
+        env=env,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["ok"] and res["flops"] > 0

@@ -1,0 +1,90 @@
+"""Ragged layout invariants (DESIGN.md §9, properties 1 & 3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ragged import RaggedLayout, layout_for, uniform_layout
+from repro.core.stacked import as_arrays, stack_layouts
+
+sizes = st.sampled_from([16, 32, 64])
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    bs=st.lists(sizes, min_size=1, max_size=16),
+    ctx_blocks=st.integers(2, 64),
+    budget_blocks=st.integers(1, 32),
+)
+def test_selected_pages_head_uniform(bs, ctx_blocks, budget_blocks):
+    ctx = 64 * ctx_blocks
+    budget = 64 * budget_blocks
+    lay = layout_for(tuple(bs), ctx, 16, budget)
+    # property 1: selected page count is identical for every head
+    per_head = [k * s for k, s in zip(lay.top_k, lay.pages_per_block)]
+    assert len(set(per_head)) == 1
+    assert lay.selected_pages == min(budget, ctx) // 16
+
+
+@settings(max_examples=30, deadline=None)
+@given(bs=st.lists(sizes, min_size=1, max_size=8), ctx_blocks=st.integers(2, 32))
+def test_block_page_expansion_bijection(bs, ctx_blocks):
+    """Property 3: selecting ALL blocks covers [0, n_pages) exactly once."""
+    ctx = 64 * ctx_blocks
+    lay = layout_for(tuple(bs), ctx, 16, ctx)  # budget = full context
+    for h in range(lay.n_heads):
+        s = lay.pages_per_block[h]
+        pages = []
+        for slot in range(lay.top_k[h]):
+            for w in range(s):
+                pages.append(slot * s + w)
+        # identity block order -> pages enumerate [0, n_pages)
+        assert sorted(pages) == list(range(lay.n_pages))
+
+
+def test_offsets_and_tile_maps_consistent():
+    lay = layout_for((16, 64, 32, 16), 4096, 16, 1024)
+    assert lay.offsets[-1] == lay.total_rows == lay.n_tiles * lay.tile_rows
+    th = lay.tile_head
+    # tiles are contiguous per head and ordered
+    assert (np.diff(th) >= 0).all()
+    for h in range(lay.n_heads):
+        rows = lay.padded_n_blocks[h]
+        assert rows % lay.tile_rows == 0
+        assert (th == h).sum() == rows // lay.tile_rows
+
+
+def test_memory_ratio_vs_uniform():
+    lay = layout_for((16, 16, 64, 64), 4096, 16, 1024)
+    # two heads at 16 (4x rows), two at 64 (1x rows) vs uniform 32
+    expected = (256 + 256 + 64 + 64) / (4 * 128)
+    assert abs(lay.memory_ratio_vs_uniform(32) - expected) < 1e-9
+
+
+def test_budget_not_multiple_raises():
+    with pytest.raises(AssertionError):
+        RaggedLayout((16, 64), 4096, 16, token_budget=1040)
+
+
+def test_stacked_layouts_match_per_layer():
+    lays = [
+        layout_for(bs, 2048, 16, 512)
+        for bs in [(16, 32, 64, 32), (64, 64, 16, 16), (32, 32, 32, 32)]
+    ]
+    stk = stack_layouts(lays)
+    for i, lay in enumerate(lays):
+        la = stk.layer(i)
+        single = as_arrays(lay)
+        mb = lay.max_blocks
+        np.testing.assert_array_equal(
+            np.asarray(la.scatter_rows)[:, :mb], np.asarray(single.scatter_rows)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(la.pad_mask)[:, :mb], np.asarray(single.pad_mask)
+        )
+        assert not np.asarray(la.pad_mask)[:, mb:].any()
+        np.testing.assert_array_equal(
+            np.asarray(la.slot_map), np.asarray(single.slot_map)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(la.block_sizes), np.asarray(single.block_sizes)
+        )

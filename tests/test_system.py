@@ -1,0 +1,124 @@
+"""End-to-end behaviour tests for the AB-Sparse system.
+
+These pin the paper's headline claims at system level:
+1. adaptive block sizes beat uniform at matched average block size,
+2. INT4-asym centroid quantization is recall-lossless vs BF16 while INT2 is
+   not (ablation ladder),
+3. the unified rank-key formulation reproduces Quest / ArkVale / mean
+   scoring exactly,
+4. calibration -> model config -> decode round trip works.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SparseConfig
+from repro.configs import get_config, smoke_variant
+from repro.core import calibrate, layout_for
+from repro.core.calibration import make_model_like_batch, profile_heads, assign_block_sizes
+from repro.core.centroids import (
+    build_rank_keys,
+    rank_query,
+    reference_block_score,
+)
+from repro.core.quantization import fake_quantize
+from repro.core.recall import attention_probs, recall_from_mask
+from repro.core.selection import pages_to_token_mask, select_page_table
+from repro.core import estimation
+from repro.core.ragged import uniform_layout
+from repro.models import Transformer
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_unified_rank_key_formulation_exact():
+    """dot(rank_query, rank_keys) == the paper's per-method score formulas."""
+    S, D, B = 512, 64, 32
+    keys = jax.random.normal(KEY, (S, D))
+    q = jax.random.normal(jax.random.fold_in(KEY, 1), (D,))
+    for method in ("mean", "quest", "arkvale"):
+        rk = build_rank_keys(keys[None], B, method)[0]      # [nb, Dp]
+        rq = rank_query(q[None], method, D)[0]              # [Dp]
+        got = rk @ rq
+        want = reference_block_score(q, keys, B, method)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4
+        )
+
+
+def _recall_with_quant(quant, budget=1024, S=4096, D=64):
+    """Mean recall over structured heads with quantized estimation."""
+    qs, ks, _ = make_model_like_batch(KEY, 6, S, D, budget)
+    lay = uniform_layout(1, 32, S, 16, budget)
+    recs = []
+    for h in range(6):
+        rk = build_rank_keys(ks[h][None], 32, "quest")
+        if quant != "none":
+            rk = fake_quantize(rk, quant, channel_axis=-1)
+        rq = rank_query(qs[h][None, None], "quest", D)
+        scores = estimation.estimate_scores(rq, rk, lay, 1)
+        table, valid = select_page_table(scores, lay)
+        mask = pages_to_token_mask(table, valid, lay)
+        probs = attention_probs(qs[h], ks[h])
+        recs.append(float(recall_from_mask(probs, mask[0, 0])))
+    return float(np.mean(recs))
+
+
+def test_quantization_ablation_ladder():
+    """Fig. 8/13 ordering: INT4-asym ~ INT8 ~ BF16 recall ("lossless");
+    INT2 measurably degrades.  (The magnitude of the INT2 collapse on real
+    models depends on score margins; the synthetic generator's margins are
+    wider, so we assert the ordering with a conservative gap.)"""
+    r_none = _recall_with_quant("none")
+    r_int8 = _recall_with_quant("int8_asym")
+    r_int4a = _recall_with_quant("int4_asym")
+    r_int2 = 0.5 * (
+        _recall_with_quant("int2_asym") + _recall_with_quant("int2_sym")
+    )
+    assert r_int4a >= r_none - 0.02, (r_int4a, r_none)
+    assert r_int8 >= r_none - 0.01
+    assert r_int2 <= r_int4a - 0.008, (r_int2, r_int4a)
+
+
+def test_calibration_to_decode_roundtrip():
+    """Full paper pipeline: calibrate -> install per-(layer,head) block
+    sizes in the config -> prefill/decode runs the heterogeneous layout."""
+    res = calibrate(
+        KEY, n_layers=2, n_kv_heads=2, head_dim=16,
+        seq_len=1024, token_budget=256, n_samples=1,
+    )
+    assert res.block_sizes.shape == (2, 2)
+    cfg = smoke_variant(get_config("llama3.2-3b"))
+    cfg = dataclasses.replace(
+        cfg,
+        sparse=dataclasses.replace(
+            cfg.sparse,
+            enabled=True,
+            token_budget=128,
+            block_sizes=res.as_tuple(),
+        ),
+    )
+    model = Transformer(cfg)
+    params = model.init(KEY)
+    tokens = jax.random.randint(KEY, (1, 511), 0, cfg.vocab_size)
+    logits, cache = model.prefill(params, tokens, max_context=512)
+    logits2, cache = model.decode_step(params, cache, tokens[:, 0])
+    assert bool(jnp.isfinite(logits2).all())
+    lays = model.sparse_layouts(512)
+    assert all(len(l.block_sizes) == cfg.n_kv_heads for l in lays)
+
+
+def test_adaptive_vs_uniform_system_level():
+    """Headline §2.3 number at system level with the quantized store."""
+    S, D, budget = 4096, 64, 1024
+    rec = profile_heads(KEY, 6, S, D, (16, 32, 64), budget, n_samples=2)
+    sizes = assign_block_sizes(rec, (16, 32, 64), 0.98)
+    uniform = rec[:, 1].mean()
+    adaptive = np.mean(
+        [rec[h, [16, 32, 64].index(int(sizes[h]))] for h in range(6)]
+    )
+    assert adaptive > uniform
+    assert sizes.mean() >= 32
