@@ -13,12 +13,13 @@ def run(budget=1024, S=4096, D=64, n_heads=12):
     from repro.core.calibration import assign_block_sizes, profile_heads
 
     t0 = time.monotonic()
+    # estimation routed through the backend registry (reference on CPU)
     cal = profile_heads(jax.random.PRNGKey(0), n_heads, S, D, (16, 32, 64),
-                        budget, n_samples=2)
+                        budget, n_samples=2, backend="reference")
     sizes = assign_block_sizes(cal, (16, 32, 64), 0.98)
     # evaluate on FRESH samples (generalization across inputs)
     ev = profile_heads(jax.random.PRNGKey(123), n_heads, S, D, (16, 32, 64),
-                       budget, n_samples=2)
+                       budget, n_samples=2, backend="reference")
     cands = [16, 32, 64]
     adaptive = float(
         np.mean([ev[h, cands.index(int(sizes[h]))] for h in range(n_heads)])

@@ -9,6 +9,7 @@ import numpy as np
 
 
 def run(context=1024, new_tokens=8):
+    from repro.config import ServeConfig
     from repro.configs import get_config, smoke_variant
     from repro.models import Transformer
     from repro.serving import Engine, Request
@@ -20,7 +21,7 @@ def run(context=1024, new_tokens=8):
     out = {}
     t_mean = 0.0
     for batch in (1, 2, 4):
-        eng = Engine(cfg, params, max_batch=batch, max_context=context)
+        eng = Engine(cfg, params, ServeConfig(max_batch=batch, max_context=context))
         for rid in range(batch):
             eng.submit(Request(
                 rid, rng.integers(0, cfg.vocab_size, 256).astype(np.int32),

@@ -16,7 +16,8 @@ def run(S=4096, D=64, n_heads=9):
     for frac in (0.04, 0.08, 0.16, 0.25):
         budget = max(64, int(round(S * frac / 64)) * 64)
         cal = profile_heads(jax.random.PRNGKey(1), n_heads, S, D,
-                            (16, 32, 64), budget, n_samples=2)
+                            (16, 32, 64), budget, n_samples=2,
+                            backend="reference")
         sizes = assign_block_sizes(cal, (16, 32, 64), 0.98)
         cands = [16, 32, 64]
         adaptive = float(np.mean(

@@ -20,15 +20,12 @@ def _time(fn, *args, iters=3):
 
 
 def run(D=64, n_kv=4, g=2, B=2, budget=512):
-    from repro.core.centroids import rank_query
+    from repro.backends import get_backend
     from repro.core.ragged import layout_for
-    from repro.core.sparse_attention import (
-        build_centroid_store,
-        dense_decode_attention,
-        sparse_decode_attention,
-    )
     from repro.config import SparseConfig
 
+    ref = get_backend("reference")
+    oracle = get_backend("dense")
     key = jax.random.PRNGKey(0)
     out = {}
     t_total = 0.0
@@ -39,14 +36,14 @@ def run(D=64, n_kv=4, g=2, B=2, budget=512):
         v = jax.random.normal(jax.random.fold_in(key, 1), (B, n_kv, S, D))
         q = jax.random.normal(jax.random.fold_in(key, 2), (B, n_kv * g, D))
         cfg = SparseConfig(token_budget=budget, block_sizes=(bs,) * 1)
-        store = build_centroid_store(k, lay, "quest", quant="int4_asym")
+        store = ref.build_store(k, lay, "quest", quant="int4_asym")
 
         sparse = jax.jit(
-            lambda q, k, v, st: sparse_decode_attention(
-                q, k, v, st, lay, cfg
-            )[0]
+            lambda q, k, v, st: ref.decode(q, k, v, st, lay, cfg)[0]
         )
-        dense = jax.jit(dense_decode_attention)
+        dense = jax.jit(
+            lambda q, k, v: oracle.decode(q, k, v, None, lay, cfg)[0]
+        )
         ts = _time(sparse, q, k, v, store)
         td = _time(dense, q, k, v)
         out[f"S={S}"] = {

@@ -31,23 +31,23 @@ def _time(fn, *args, iters=5):
 
 
 def run(S=8192, D=64, n_kv=8, g=2, B=2, budget=1024):
+    from repro.backends import get_backend
     from repro.core.centroids import build_rank_keys, rank_query
-    from repro.core import estimation
     from repro.core.ragged import layout_for
     from repro.core.selection import select_page_table
     from repro.core.sparse_attention import (
-        build_centroid_store,
         gather_pages,
         paged_attention_reference,
     )
 
+    backend = get_backend("reference")
     key = jax.random.PRNGKey(0)
     bs = tuple([16, 32, 64, 32] * (n_kv // 4))
     lay = layout_for(bs, S, 16, budget)
     k = jax.random.normal(key, (B, n_kv, S, D))
     v = jax.random.normal(jax.random.fold_in(key, 1), (B, n_kv, S, D))
     q = jax.random.normal(jax.random.fold_in(key, 2), (B, n_kv * g, D))
-    store = build_centroid_store(k, lay, "quest", quant="none")
+    store = backend.build_store(k, lay, "quest", quant="none")
     rq = rank_query(q, "quest", D)
 
     # ---- estimation: size-grouped batched vs per-head loop -----------------
@@ -90,7 +90,7 @@ def run(S=8192, D=64, n_kv=8, g=2, B=2, budget=1024):
     t_b = _time(est_batched, rq, grouped_rks)
     t_n = _time(est_naive, rq, *per_head_rks)
 
-    scores = estimation.estimate_scores(rq, store.rank_keys, lay, n_kv)
+    scores = backend.scores(rq, store, lay, n_kv)
     table, valid = select_page_table(scores, lay)
 
     # ---- top-k: batched single top_k vs per-head loop ----------------------

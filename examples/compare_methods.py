@@ -2,35 +2,20 @@
 ArkVale vs mean centroids, each with uniform vs AB-Sparse adaptive block
 sizes, under the INT4 quantized store (Table 1 / Fig. 6 proxy).
 
+Recall profiling runs through the unified backend API
+(:mod:`repro.backends`), so the scores come from the exact quantized store
+bytes the serving path uses.
+
     PYTHONPATH=src python examples/compare_methods.py
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import estimation
 from repro.core.calibration import (
     assign_block_sizes,
+    head_recall_at_block_size,
     make_model_like_batch,
 )
-from repro.core.centroids import build_rank_keys, rank_query
-from repro.core.quantization import fake_quantize
-from repro.core.ragged import layout_for, uniform_layout
-from repro.core.recall import attention_probs, recall_from_mask
-from repro.core.selection import pages_to_token_mask, select_page_table
-
-
-def head_recall(q, k, lay, method, quant, h_block):
-    S, D = k.shape
-    rk = build_rank_keys(k[None], h_block, method)
-    if quant != "none":
-        rk = fake_quantize(rk, quant, channel_axis=-1)
-    rq = rank_query(q[None, None], method, D)
-    lay1 = uniform_layout(1, h_block, S, 16, lay.token_budget)
-    scores = estimation.estimate_scores(rq, rk, lay1, 1)
-    table, valid = select_page_table(scores, lay1)
-    mask = pages_to_token_mask(table, valid, lay1)
-    return float(recall_from_mask(attention_probs(q, k), mask[0, 0]))
 
 
 def main():
@@ -41,15 +26,14 @@ def main():
     print(f"{'method':10s} {'scheme':10s} {'uniform32':>10s} {'adaptive':>10s} {'gain pp':>8s}")
     for method in ("quest", "arkvale", "mean"):
         for quant in ("none", "int4_asym"):
-            # per-head profiling for this method
+            # per-head profiling for this method, through the backend API
             rec = np.zeros((H, 3))
             for h in range(H):
                 for ci, b in enumerate((16, 32, 64)):
-                    rec[h, ci] = head_recall(
-                        qs[h], ks[h],
-                        uniform_layout(1, b, S, 16, budget),
-                        method, quant, b,
-                    )
+                    rec[h, ci] = float(head_recall_at_block_size(
+                        qs[h], ks[h], b, budget, method,
+                        backend="reference", quant=quant,
+                    ))
             sizes = assign_block_sizes(rec, (16, 32, 64), 0.98)
             uni = rec[:, 1].mean()
             ada = np.mean([rec[h, [16, 32, 64].index(int(sizes[h]))]

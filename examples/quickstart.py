@@ -61,12 +61,17 @@ def main():
         toks.append(int(tok[0]))
     print("greedy continuation:", toks)
 
-    # 4. what did selection look at? (instrumentation path)
-    lays = model.sparse_layouts(576)
+    # 4. what did selection look at? (instrumentation via the plan API)
+    plan = model.attention_plan(576)
+    lay0 = plan.layout(0)
     print(
-        f"layer 0 layout: block sizes {lays[0].block_sizes}, "
-        f"K_h {lays[0].top_k}, selected pages/head {lays[0].selected_pages} "
-        f"(= {lays[0].selected_pages * 16} tokens of budget per head)"
+        f"plan: backend={plan.backend!r}, budget={plan.token_budget}, "
+        f"rank-key width {plan.rank_key_width}"
+    )
+    print(
+        f"layer 0 layout: block sizes {lay0.block_sizes}, "
+        f"K_h {lay0.top_k}, selected pages/head {lay0.selected_pages} "
+        f"(= {lay0.selected_pages * 16} tokens of budget per head)"
     )
 
 

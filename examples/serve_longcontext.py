@@ -12,6 +12,7 @@ import time
 import jax
 import numpy as np
 
+from repro.config import ServeConfig
 from repro.configs import get_config, smoke_variant
 from repro.models import Transformer
 from repro.serving import Engine, Request
@@ -22,7 +23,7 @@ def main():
     model = Transformer(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
-    eng = Engine(cfg, params, max_batch=4, max_context=1024, seed=0)
+    eng = Engine(cfg, params, ServeConfig(max_batch=4, max_context=1024), seed=0)
     rng = np.random.default_rng(0)
 
     n_requests = 8

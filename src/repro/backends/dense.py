@@ -1,0 +1,31 @@
+"""Full-attention oracle backend.
+
+Keeps the exact cache/store structure of the sparse backends (store build
+and append are inherited no-op-compatible) but attends over the ENTIRE live
+context, ignoring estimation and selection.  This is the paper's
+Full Attention baseline, addressable through the same plan/execute API so
+benchmarks and parity tests swap it in with one config string.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.backends.base import CentroidStore
+from repro.backends.reference import ReferenceBackend
+from repro.core.sparse_attention import dense_decode_attention
+
+
+class DenseBackend(ReferenceBackend):
+    name = "dense"
+
+    def append(self, store, k_cache, layout, offsets, seq_len, sparse):
+        # centroids are never read on the dense path; skip the tail refresh.
+        return store
+
+    def decode(
+        self, q, k, v, store, layout, sparse, seq_len=None
+    ) -> Tuple[jax.Array, Optional[jax.Array]]:
+        out = dense_decode_attention(q, k, v, seq_len=seq_len)
+        return out, None

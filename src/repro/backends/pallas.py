@@ -1,0 +1,66 @@
+"""Pallas kernel backend: interpret mode on CPU, Mosaic lowering on TPU.
+
+Wraps the kernels in :mod:`repro.kernels` behind the backend protocol.
+Store quantization is inherited from the shared path (so page tables match
+the reference backend bit-for-bit); only the pooling / estimation /
+attention compute runs in Pallas.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.backends.base import AttentionBackend, CentroidStore
+from repro.core.ragged import RaggedLayout
+
+
+class PallasBackend(AttentionBackend):
+    name = "pallas"
+
+    def __init__(self, interpret: Optional[bool] = None):
+        #: None -> auto (interpret everywhere but TPU), resolved per call.
+        self.interpret = interpret
+
+    def _interp(self) -> bool:
+        from repro.kernels import ops
+
+        return ops.default_interpret() if self.interpret is None else self.interpret
+
+    def _pool_rank_keys(
+        self, keys: jax.Array, layout: RaggedLayout, method: str
+    ) -> List[jax.Array]:
+        from repro.kernels import block_centroid
+
+        S = keys.shape[2]
+        # heads partitioned by assigned block size (static): one pooling
+        # kernel launch per distinct size.
+        groups = {}
+        for h, b in enumerate(layout.block_sizes):
+            groups.setdefault(b, []).append(h)
+        per_head: List[Optional[jax.Array]] = [None] * layout.n_heads
+        for bsz, heads in sorted(groups.items()):
+            sub = keys[:, np.asarray(heads)]                 # [B, Hg, S, D]
+            pooled = block_centroid.pool_rank_keys(
+                sub, bsz, method, chunk=min(1024, S), interpret=self._interp()
+            )                                                # [B, Hg, nb, Dp]
+            for i, h in enumerate(heads):
+                per_head[h] = pooled[:, i]
+        return per_head
+
+    def scores(self, rank_q, store: CentroidStore, layout, n_kv):
+        from repro.kernels import ops
+
+        return ops.centroid_scores(
+            rank_q, store, layout, n_kv, interpret=self._interp()
+        )
+
+    def attend(self, q, k, v, page_table, page_valid, page_size, seq_len=None):
+        from repro.kernels import ops
+
+        return ops.paged_attention(
+            q, k, v, page_table, page_valid, page_size, seq_len,
+            interpret=self._interp(),
+        )

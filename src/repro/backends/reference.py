@@ -1,0 +1,35 @@
+"""Pure-jnp reference backend (the CPU execution path and the oracle the
+Pallas kernels are validated against)."""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.backends.base import AttentionBackend, CentroidStore
+from repro.core import estimation as est
+from repro.core.centroids import build_rank_keys
+from repro.core.ragged import RaggedLayout
+from repro.core.sparse_attention import paged_attention_reference
+
+
+class ReferenceBackend(AttentionBackend):
+    name = "reference"
+
+    def _pool_rank_keys(
+        self, keys: jax.Array, layout: RaggedLayout, method: str
+    ) -> List[jax.Array]:
+        return [
+            build_rank_keys(keys[:, h], layout.block_sizes[h], method)
+            for h in range(layout.n_heads)
+        ]
+
+    def scores(self, rank_q, store: CentroidStore, layout, n_kv):
+        rank_keys = store.dequantize(layout)
+        return est.estimate_scores(rank_q, rank_keys, layout, n_kv)
+
+    def attend(self, q, k, v, page_table, page_valid, page_size, seq_len=None):
+        return paged_attention_reference(
+            q, k, v, page_table, page_valid, page_size, seq_len
+        )

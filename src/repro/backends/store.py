@@ -1,0 +1,210 @@
+"""Scan-safe centroid-store construction and incremental maintenance.
+
+These run INSIDE the model's layer scan, where per-head block sizes are
+traced array values (per-layer heterogeneous layouts ride the scan as
+:class:`repro.core.stacked.LayoutArrays`).  Rank keys are therefore built at
+every candidate block size from page-granular pooled statistics and each
+flat store row selects its head's size — fully vectorized, static shapes.
+
+Shared by every registered backend so prefill and decode-append emit
+byte-identical stores regardless of which backend executes estimation /
+attention (backend parity of page tables depends on this).  All
+quantization math comes from :mod:`repro.core.quantization`.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SparseConfig
+from repro.core.centroids import padded_rank_key_width
+from repro.core.quantization import (
+    affine_params_from_minmax,
+    encode_affine,
+    pack_split_half,
+    store_bits,
+    store_symmetric,
+)
+from repro.core.stacked import as_arrays
+
+BIG = 1e30
+
+
+def _merge_page_stats(pmax, pmin, pmean, group: int, method: str, Dp: int):
+    """Page-granular (max, min, mean) stats -> rank keys at block size
+    ``group * page_size``, padded on the channel axis to Dp."""
+    B, n_kv, n_pages, hd = pmax.shape
+    nb = n_pages // group
+    mmax = pmax.reshape(B, n_kv, nb, group, hd).max(3)
+    mmin = pmin.reshape(B, n_kv, nb, group, hd).min(3)
+    mmean = pmean.reshape(B, n_kv, nb, group, hd).mean(3)
+    if method == "mean":
+        rk = mmean
+    elif method == "quest":
+        rk = jnp.concatenate([mmax, mmin], axis=-1)
+    else:  # arkvale approximated from page stats: center + half-diagonal
+        center = 0.5 * (mmax + mmin)
+        radius = 0.5 * jnp.linalg.norm(mmax - mmin, axis=-1)
+        rk = jnp.concatenate([center, radius[..., None]], axis=-1)
+    pad = Dp - rk.shape[-1]
+    if pad:
+        rk = jnp.pad(rk, ((0, 0),) * (rk.ndim - 1) + ((0, pad),))
+    # pad the block axis to the max candidate count (= n_pages)
+    return jnp.pad(rk, ((0, 0), (0, 0), (0, n_pages - nb), (0, 0)))
+
+
+def build_store_codes(
+    k_cache: jax.Array,
+    layout,
+    offsets: jax.Array,
+    sparse: SparseConfig,
+    quant: Optional[str] = None,
+):
+    """k_cache [B, n_kv, S_max, hd] -> :class:`CentroidStore` for ONE layer
+    in the flattened layout (scan-safe; ``layout`` is LayoutArrays)."""
+    from repro.backends.base import CentroidStore
+
+    la = as_arrays(layout)
+    quant = sparse.quant if quant is None else quant
+    bits = store_bits(quant)
+    symmetric = store_symmetric(quant)
+    if bits not in (0, 4, 8):
+        raise ValueError(
+            f"centroid store supports none/int8/int4 schemes, got {quant!r}"
+        )
+    method = sparse.centroid_method
+    B, n_kv, S_max, hd = k_cache.shape
+    Dp = padded_rank_key_width(hd, method)
+    page = sparse.page_size
+    n_pages = S_max // page
+    rows_total = la.total_rows
+    cands = sparse.candidate_block_sizes
+
+    pages = k_cache.reshape(B, n_kv, n_pages, page, hd).astype(jnp.float32)
+    pmax = pages.max(axis=3)
+    pmin = pages.min(axis=3)
+    pmean = pages.mean(axis=3)
+
+    merged = jnp.stack(
+        [_merge_page_stats(pmax, pmin, pmean, c // page, method, Dp)
+         for c in cands]
+    )                                                   # [C, B, n_kv, nP, Dp]
+    bsz = la.block_sizes                                # [n_kv] (maybe traced)
+    sel = jnp.zeros_like(merged[0])
+    nb_h = jnp.zeros((n_kv,), jnp.int32)
+    for ci, c in enumerate(cands):
+        hit = (bsz == c)
+        sel = jnp.where(hit[None, :, None, None], merged[ci], sel)
+        nb_h = jnp.where(hit, S_max // c, nb_h)
+    # sel: per head, the first nb_h[h] rows are that head's rank keys.
+
+    # per-head affine params over valid blocks only
+    blk_valid = (
+        jnp.arange(n_pages)[None, :] < nb_h[:, None]
+    )[None, :, :, None]                                 # [1, n_kv, nP, 1]
+    if bits == 0:
+        scale = jnp.ones((B, n_kv, Dp), jnp.float32)
+        zero = jnp.zeros((B, n_kv, Dp), jnp.float32)
+    else:
+        xmin = jnp.where(blk_valid, sel, BIG).min(axis=2)
+        xmax = jnp.where(blk_valid, sel, -BIG).max(axis=2)
+        scale, zero = affine_params_from_minmax(xmin, xmax, bits, symmetric)
+
+    # flat rows: row r -> (head = row_head[r], local block j = r - offset)
+    row_head = jnp.repeat(
+        la.tile_head, la.tile_rows, total_repeat_length=rows_total
+    )                                                   # [rows]
+    row_off = offsets[row_head]                         # [rows]
+    row_j = jnp.arange(rows_total, dtype=jnp.int32) - row_off
+    row_j = jnp.clip(row_j, 0, n_pages - 1)
+    rk_rows = sel[:, row_head, row_j]                   # [B, rows, Dp]
+
+    if bits == 0:
+        codes = rk_rows
+    else:
+        s_rows = scale[:, row_head]                     # [B, rows, Dp]
+        z_rows = zero[:, row_head]
+        codes = encode_affine(rk_rows, s_rows, z_rows, bits, symmetric)
+        if bits == 4:
+            codes = pack_split_half(codes)
+    return CentroidStore(codes, scale, zero, bits, symmetric)
+
+
+def refresh_tail_codes(
+    store,
+    k_cache: jax.Array,
+    layout,
+    offsets: jax.Array,
+    seq_len: jax.Array,
+    sparse: SparseConfig,
+) -> jax.Array:
+    """Recompute + requantize the rank-key row of the block containing the
+    newest token, for every head (vectorized, static shapes) -> new codes.
+
+    The max-candidate-sized window containing the token is pooled at each
+    candidate size; the row for each head is selected by its (possibly
+    layer-dynamic) block size.  Positions beyond ``seq_len`` are neutralized
+    (-inf/+inf for max/min, zero-weight for mean).
+    """
+    la = as_arrays(layout)
+    codes, scale, zero = store.codes, store.scale, store.zero
+    method = sparse.centroid_method
+    B, n_kv, S_max, hd = k_cache.shape
+    Dp = padded_rank_key_width(hd, method)
+    Wmax = max(sparse.candidate_block_sizes)
+    w0 = (seq_len // Wmax) * Wmax                        # [B]
+
+    # gather the window [B, n_kv, Wmax, hd]
+    win = jax.vmap(
+        lambda kc, s: jax.lax.dynamic_slice(kc, (0, s, 0), (n_kv, Wmax, hd))
+    )(k_cache, w0)
+    pos = w0[:, None] + jnp.arange(Wmax)[None]           # [B, Wmax]
+    ok = (pos <= seq_len[:, None])[:, None, :, None]     # include new tok
+    winf = win.astype(jnp.float32)
+
+    def pooled(c):
+        n = Wmax // c
+        wm = winf.reshape(B, n_kv, n, c, hd)
+        okm = ok.reshape(B, 1, n, c, 1)
+        mx = jnp.where(okm, wm, -BIG).max(3)
+        mn = jnp.where(okm, wm, BIG).min(3)
+        cnt = jnp.maximum(okm.sum(3), 1)
+        mean = jnp.where(okm, wm, 0.0).sum(3) / cnt
+        # slot containing the new token
+        slot = (seq_len % Wmax) // c                     # [B]
+        take = lambda a: jnp.take_along_axis(
+            a, slot[:, None, None, None], axis=2
+        )[:, :, 0]
+        mx, mn, mean = take(mx), take(mn), take(mean)    # [B, n_kv, hd]
+        if method == "mean":
+            rk = mean
+        elif method == "quest":
+            rk = jnp.concatenate([mx, mn], axis=-1)
+        else:
+            center = 0.5 * (mx + mn)
+            radius = 0.5 * jnp.linalg.norm(mx - mn, axis=-1)
+            rk = jnp.concatenate([center, radius[..., None]], axis=-1)
+        pad = Dp - rk.shape[-1]
+        if pad:
+            rk = jnp.pad(rk, ((0, 0), (0, 0), (0, pad)))
+        return rk                                        # [B, n_kv, Dp]
+
+    cands = sparse.candidate_block_sizes
+    rks = jnp.stack([pooled(c) for c in cands])          # [C, B, n_kv, Dp]
+    bsz = la.block_sizes                                 # [n_kv]
+    sel = jnp.zeros_like(rks[0])
+    for ci, c in enumerate(cands):
+        sel = jnp.where((bsz == c)[None, :, None], rks[ci], sel)
+
+    # requantize with the frozen per-head affine params
+    if store.bits == 0:
+        new_codes = sel
+    else:
+        qv = encode_affine(sel, scale, zero, store.bits, store.symmetric)
+        new_codes = pack_split_half(qv) if store.bits == 4 else qv
+
+    rows = offsets[None, :] + (seq_len[:, None] // bsz[None, :])  # [B, n_kv]
+    bidx = jnp.arange(B)[:, None]
+    return codes.at[bidx, rows].set(new_codes)

@@ -24,6 +24,10 @@ class SparseConfig:
     """AB-Sparse configuration (paper §3)."""
 
     enabled: bool = True
+    #: attention backend name resolved through the :mod:`repro.backends`
+    #: registry: "dense" (full-attention oracle) | "reference" (pure jnp) |
+    #: "pallas" (interpret on CPU, Mosaic on TPU).
+    backend: str = "reference"
     page_size: int = PAGE_SIZE
     candidate_block_sizes: Tuple[int, ...] = CANDIDATE_BLOCK_SIZES
     #: token budget T shared by all heads (paper fixes 4096 / 4% of context).

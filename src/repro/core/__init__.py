@@ -3,7 +3,10 @@
 - adaptive per-head block size allocation via calibration (§3.2)
 - lossless centroid (rank-key) quantization (§3.3)
 - static-ragged estimation / uniform page-table selection / paged attention
-  orchestration backing the Pallas kernels (§3.4)
+  primitives backing the Pallas kernels (§3.4)
+
+Execution is orchestrated through the :mod:`repro.backends` registry
+(``AttentionPlan`` / ``AttentionBackend`` / unified ``CentroidStore``).
 """
 from repro.core.calibration import (
     CalibrationResult,
@@ -15,32 +18,24 @@ from repro.core.quantization import QuantizedTensor, dequantize, fake_quantize, 
 from repro.core.ragged import RaggedLayout, layout_for, uniform_layout
 from repro.core.selection import select_page_table
 from repro.core.sparse_attention import (
-    CentroidStore,
-    build_centroid_store,
     dense_decode_attention,
-    layout_from_config,
     paged_attention_reference,
-    sparse_decode_attention,
 )
 
 __all__ = [
     "CalibrationResult",
-    "CentroidStore",
     "QuantizedTensor",
     "RaggedLayout",
     "assign_block_sizes",
-    "build_centroid_store",
     "build_rank_keys",
     "calibrate",
     "dense_decode_attention",
     "dequantize",
     "fake_quantize",
     "layout_for",
-    "layout_from_config",
     "paged_attention_reference",
     "quantize",
     "rank_query",
     "select_page_table",
-    "sparse_decode_attention",
     "uniform_layout",
 ]

@@ -24,11 +24,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.centroids import build_rank_keys, rank_query
+from repro.core.centroids import rank_query
 from repro.core.ragged import RaggedLayout, uniform_layout
 from repro.core.recall import attention_probs, recall_from_mask
 from repro.core.selection import pages_to_token_mask, select_page_table
-from repro.core import estimation
 
 
 # ---------------------------------------------------------------------------
@@ -132,14 +131,24 @@ def head_recall_at_block_size(
     page_size: int = 16,
     sink_pages: int = 1,
     local_pages: int = 4,
+    backend: str = "reference",
+    quant: str = "none",
 ) -> jax.Array:
     """Recall of one head (q ``[D]``, keys ``[S, D]``) at a block size under a
-    token budget — the quantity profiled in paper Fig. 3."""
+    token budget — the quantity profiled in paper Fig. 3.
+
+    Estimation runs through the named :mod:`repro.backends` backend, so the
+    profile can be taken against the exact (optionally quantized) store the
+    serving path will use.
+    """
+    from repro.backends import get_backend
+
     S, D = keys.shape
     layout = uniform_layout(1, block_size, S, page_size, token_budget)
-    rk = build_rank_keys(keys[None], block_size, method)        # [1, nb, Dp]
+    be = get_backend(backend)
+    store = be.build_store(keys[None, None], layout, method, quant=quant)
     rq = rank_query(q[None, None], method, D)                   # [1, 1, Dp]
-    scores = estimation.estimate_scores(rq, rk, layout, 1)      # [1, 1, max_blocks]
+    scores = be.scores(rq, store, layout, 1)                    # [1, 1, max_blocks]
     table, valid = select_page_table(
         scores, layout, sink_pages=sink_pages, local_pages=local_pages
     )
@@ -192,6 +201,8 @@ def profile_heads(
     n_samples: int = 8,
     method: str = "quest",
     profiles: Optional[Sequence[Tuple[str, float, int]]] = None,
+    backend: str = "reference",
+    quant: str = "none",
 ) -> np.ndarray:
     """-> recall [n_heads, n_candidates] averaged over calibration samples."""
     acc = np.zeros((n_heads, len(candidates)), dtype=np.float64)
@@ -207,7 +218,8 @@ def profile_heads(
         for h in range(n_heads):
             for ci, b in enumerate(candidates):
                 r = head_recall_at_block_size(
-                    qs[h], ks[h], int(b), token_budget, method
+                    qs[h], ks[h], int(b), token_budget, method,
+                    backend=backend, quant=quant,
                 )
                 acc[h, ci] += float(r)
     return acc / n_samples
@@ -224,6 +236,8 @@ def calibrate(
     tau: float = 0.98,
     n_samples: int = 4,
     method: str = "quest",
+    backend: str = "reference",
+    quant: str = "none",
 ) -> CalibrationResult:
     """Full offline calibration pass -> per-(layer, kv-head) assignments."""
     candidates = tuple(sorted(int(c) for c in candidates))
@@ -238,6 +252,8 @@ def calibrate(
             token_budget,
             n_samples=n_samples,
             method=method,
+            backend=backend,
+            quant=quant,
         )
     sizes = assign_block_sizes(recall, candidates, tau)
     return CalibrationResult(candidates, recall, sizes, tau)

@@ -39,6 +39,70 @@ def scheme_symmetric(scheme: str) -> bool:
     return _SCHEMES[scheme][1]
 
 
+def store_bits(scheme: Optional[str]) -> int:
+    """Bit width of the centroid-store codes; 0 == unquantized f32."""
+    if scheme in (None, "none"):
+        return 0
+    return _SCHEMES[scheme][0]
+
+
+def store_symmetric(scheme: Optional[str]) -> bool:
+    if scheme in (None, "none"):
+        return False
+    return _SCHEMES[scheme][1]
+
+
+def code_max(bits: int, symmetric: bool) -> float:
+    """Largest quantization step index qhi for a scheme (codes span
+    [0, qhi] asymmetric, [0, 2*qhi] symmetric-with-offset)."""
+    if symmetric:
+        return 2.0 ** (bits - 1) - 1.0
+    return 2.0**bits - 1.0
+
+
+def affine_params_from_minmax(
+    xmin: jax.Array, xmax: jax.Array, bits: int, symmetric: bool
+) -> Tuple[jax.Array, jax.Array]:
+    """(scale, zero) from per-channel min/max statistics.
+
+    This is THE store-quantization parameter formula — every backend's
+    centroid store (prefill build, decode tail refresh, offline build) runs
+    through here so their bytes agree.
+    """
+    qhi = code_max(bits, symmetric)
+    if symmetric:
+        amax = jnp.maximum(jnp.abs(xmin), jnp.abs(xmax))
+        scale = jnp.maximum(amax / qhi, 1e-8)
+        zero = jnp.zeros_like(scale)
+    else:
+        scale = jnp.maximum((xmax - xmin) / qhi, 1e-8)
+        zero = xmin
+    return scale, zero
+
+
+def encode_affine(
+    x: jax.Array, scale: jax.Array, zero: jax.Array, bits: int, symmetric: bool
+) -> jax.Array:
+    """f32 -> unpacked uint8 codes under frozen (scale, zero)."""
+    qhi = code_max(bits, symmetric)
+    if symmetric:
+        # offset-stored signed codes: code = round(x/scale) + qhi in [0, 2qhi]
+        return jnp.clip(jnp.round(x / scale) + qhi, 0, 2 * qhi).astype(jnp.uint8)
+    return jnp.clip(jnp.round((x - zero) / scale), 0, qhi).astype(jnp.uint8)
+
+
+def decode_affine(
+    codes: jax.Array, scale: jax.Array, zero: jax.Array, bits: int,
+    symmetric: bool,
+) -> jax.Array:
+    """Unpacked uint8 codes -> f32 (inverse of :func:`encode_affine`; the
+    Pallas estimation kernel fuses exactly this formula)."""
+    c = codes.astype(jnp.float32)
+    if symmetric:
+        return (c - code_max(bits, symmetric)) * scale
+    return c * scale + zero
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclass(frozen=True)
 class QuantizedTensor:

@@ -1,81 +1,21 @@
-"""End-to-end AB-Sparse decode attention (orchestrates Kernels 1-3).
+"""Reference attention primitives (pure jnp).
 
-Pipeline per decode step (paper Fig. 5):
-
-  1. estimation  — rank-query x quantized rank-key scores (Kernel 1)
-  2. selection   — adaptive Top-K_h -> uniform page table (Kernel 2)
-  3. attention   — paged attention over the selected pages only (Kernel 3)
-
-This module provides the pure-jnp reference path (used on CPU, as the
-oracle, and for the dry-run's paper-faithful baseline) and dispatches to the
-Pallas kernels when requested.  All shapes are static; the ragged layout is
-a compile-time constant.
+These are the numerics backing the ``"reference"`` and ``"dense"`` entries
+of the :mod:`repro.backends` registry — the CPU execution path, the oracle
+the Pallas kernels validate against, and the dry-run's paper-faithful
+baseline.  Orchestration (estimation -> selection -> attention) lives in
+:class:`repro.backends.AttentionBackend.decode`; store construction in
+:mod:`repro.backends`.  All shapes are static; the ragged layout is a
+compile-time constant.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Optional, Tuple, Union
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.config import SparseConfig
-from repro.core import estimation as est
-from repro.core.centroids import build_rank_keys, rank_query
-from repro.core.quantization import QuantizedTensor, fake_quantize, quantize
-from repro.core.ragged import RaggedLayout, layout_for, uniform_layout
-from repro.core.selection import select_page_table
-
 NEG_INF = -1e30
-
-
-@jax.tree_util.register_pytree_node_class
-@dataclass(frozen=True)
-class CentroidStore:
-    """Per-layer flattened rank-key store (the quantized centroid cache).
-
-    ``rank_keys``: [B, total_rows, Dp] f32 or QuantizedTensor with that
-    logical shape.  Row segments per kv head follow ``layout.offsets``.
-    """
-
-    rank_keys: Union[jax.Array, QuantizedTensor]
-
-    def tree_flatten(self):
-        return (self.rank_keys,), ()
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        return cls(children[0])
-
-
-def build_centroid_store(
-    keys: jax.Array,
-    layout: RaggedLayout,
-    method: str,
-    quant: str = "int4_asym",
-) -> CentroidStore:
-    """keys [B, n_kv, S, D] -> flattened (optionally quantized) rank keys.
-
-    Reference path; the fused Pallas cache-append kernel
-    (:mod:`repro.kernels.block_centroid`) produces the same bytes
-    incrementally during decode.
-    """
-    B, n_kv, S, D = keys.shape
-    segs = []
-    for h in range(n_kv):
-        rk = build_rank_keys(keys[:, h], layout.block_sizes[h], method)  # [B,nb,Dp]
-        pad = layout.padded_n_blocks[h] - rk.shape[1]
-        if pad:
-            rk = jnp.pad(rk, ((0, 0), (0, pad), (0, 0)))
-        segs.append(rk)
-    flat = jnp.concatenate(segs, axis=1)  # [B, total_rows, Dp]
-    if quant and quant != "none":
-        # per-channel over the block axis, per head segment is approximated
-        # by per-channel over all rows (tight per Fig. 7's column-wise
-        # clustering; per-segment scales are the kernel-level refinement).
-        qt = quantize(flat, quant, channel_axis=-1)
-        return CentroidStore(qt)
-    return CentroidStore(flat.astype(jnp.float32))
 
 
 def gather_pages(
@@ -154,68 +94,3 @@ def dense_decode_attention(
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhgs,bhsd->bhgd", probs, v.astype(jnp.float32))
     return out.reshape(B, n_q, D).astype(q.dtype)
-
-
-# ---------------------------------------------------------------------------
-# Orchestrated decode step
-# ---------------------------------------------------------------------------
-
-
-def sparse_decode_attention(
-    q: jax.Array,
-    k: jax.Array,
-    v: jax.Array,
-    store: CentroidStore,
-    layout: RaggedLayout,
-    cfg: SparseConfig,
-    seq_len: Optional[jax.Array] = None,
-    use_kernels: bool = False,
-) -> Tuple[jax.Array, jax.Array]:
-    """Full AB-Sparse decode attention.
-
-    q [B, n_q, D]; k/v [B, n_kv, S, D] (dense view of the paged pool — the
-    serving engine passes the pool + per-sequence tables instead).
-    Returns (attention output [B, n_q, D], page_table [B, H, P_sel]).
-    """
-    B, n_q, D = q.shape
-    n_kv = k.shape[1]
-
-    rq = rank_query(q, cfg.centroid_method, D)
-    if use_kernels:
-        from repro.kernels import ops
-
-        scores = ops.centroid_scores(rq, store.rank_keys, layout, n_kv)
-    else:
-        scores = est.estimate_scores(rq, store.rank_keys, layout, n_kv)
-
-    page_table, page_valid = select_page_table(
-        scores,
-        layout,
-        seq_len=seq_len,
-        sink_pages=cfg.sink_pages,
-        local_pages=cfg.local_pages,
-    )
-
-    if use_kernels:
-        from repro.kernels import ops
-
-        out = ops.paged_attention(
-            q, k, v, page_table, page_valid, cfg.page_size, seq_len
-        )
-    else:
-        out = paged_attention_reference(
-            q, k, v, page_table, page_valid, cfg.page_size, seq_len
-        )
-    return out, page_table
-
-
-def layout_from_config(
-    cfg: SparseConfig, layer: int, n_kv_heads: int, context_len: int
-) -> RaggedLayout:
-    budget = cfg.budget_for(context_len)
-    return layout_for(
-        cfg.layer_block_sizes(layer, n_kv_heads),
-        context_len,
-        cfg.page_size,
-        budget,
-    )

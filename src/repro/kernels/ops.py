@@ -1,34 +1,24 @@
 """Public jit'd wrappers around the Pallas kernels.
 
-This is the layer the serving engine / models call.  On CPU (this
-container) every kernel runs in ``interpret=True`` mode — the kernel body
-executes in Python for correctness validation; on TPU the same calls lower
-to Mosaic.
+These are the execute-stage primitives consumed by the ``"pallas"``
+attention backend (:mod:`repro.backends.pallas`).  On CPU (this container)
+every kernel runs in ``interpret=True`` mode — the kernel body executes in
+Python for correctness validation; on TPU the same calls lower to Mosaic.
 
-Also owns the *kernel-layout centroid store*: flattened ragged rank keys,
-INT4 split-half packed, with per-(sequence, head, channel) scale/zero —
-exactly the byte layout the estimation kernel DMAs.
+Store construction and orchestration live in :mod:`repro.backends`; the
+unified :class:`repro.backends.CentroidStore` byte layout (flattened ragged
+rank keys, INT4 split-half packed, per-(sequence, head, channel)
+scale/zero) is exactly what the estimation kernel DMAs.
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass
-from typing import Optional, Tuple, Union
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.centroids import padded_rank_key_width, rank_query
-from repro.core.quantization import (
-    pack_split_half,
-    scheme_bits,
-    scheme_symmetric,
-)
 from repro.core.ragged import RaggedLayout
-from repro.core.selection import select_page_table
 from repro.kernels import (
-    block_centroid,
     centroid_score,
     flash_attention as fa,
     paged_attention as pa,
@@ -43,128 +33,13 @@ def default_interpret() -> bool:
 
 
 # ---------------------------------------------------------------------------
-# Kernel-layout centroid store
-# ---------------------------------------------------------------------------
-
-
-@jax.tree_util.register_pytree_node_class
-@dataclass(frozen=True)
-class KernelCentroidStore:
-    """Flattened ragged rank-key store in kernel byte layout.
-
-    codes: [B, total_rows, Dp//2] uint8 (INT4 split-half packed)
-           or [B, total_rows, Dp] uint8 (INT8) or f32 (unquantized).
-    scale/zero: [B, n_kv, Dp] f32 per-(head, channel) affine params.
-    """
-
-    codes: jax.Array
-    scale: Optional[jax.Array]
-    zero: Optional[jax.Array]
-    bits: int          # 4, 8, or 0 (= unquantized f32)
-    symmetric: bool
-
-    def tree_flatten(self):
-        return (self.codes, self.scale, self.zero), (self.bits, self.symmetric)
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        codes, scale, zero = children
-        bits, symmetric = aux
-        return cls(codes, scale, zero, bits, symmetric)
-
-    @property
-    def bytes_per_row(self) -> int:
-        if self.bits == 0:
-            return self.codes.shape[-1] * 4
-        return self.codes.shape[-1]
-
-
-def _group_heads_by_block_size(layout: RaggedLayout):
-    groups = {}
-    for h, b in enumerate(layout.block_sizes):
-        groups.setdefault(b, []).append(h)
-    return groups
-
-
-def build_rank_keys(
-    keys: jax.Array,
-    layout: RaggedLayout,
-    method: str,
-    quant: str = "int4_asym",
-    chunk: int = 1024,
-    interpret: Optional[bool] = None,
-) -> KernelCentroidStore:
-    """keys [B, n_kv, S, D] -> kernel-layout store.
-
-    Heads are partitioned by assigned block size (static), one pooling
-    kernel launch per distinct size; segments are stitched into the
-    flattened layout, quantized per-(sequence, head, channel), packed.
-    """
-    if interpret is None:
-        interpret = default_interpret()
-    B, n_kv, S, D = keys.shape
-    Dp = padded_rank_key_width(D, method)
-    groups = _group_heads_by_block_size(layout)
-
-    per_head_rk = [None] * n_kv
-    for bsz, heads in sorted(groups.items()):
-        sub = keys[:, np.asarray(heads)]                     # [B, Hg, S, D]
-        pooled = block_centroid.pool_rank_keys(
-            sub, bsz, method, chunk=min(chunk, S), interpret=interpret
-        )                                                    # [B, Hg, nb, Dp]
-        for i, h in enumerate(heads):
-            per_head_rk[h] = pooled[:, i]                    # [B, nb, Dp]
-
-    if quant in (None, "none"):
-        segs = []
-        for h in range(n_kv):
-            rk = per_head_rk[h]
-            pad = layout.padded_n_blocks[h] - rk.shape[1]
-            segs.append(jnp.pad(rk, ((0, 0), (0, pad), (0, 0))))
-        flat = jnp.concatenate(segs, axis=1).astype(jnp.float32)
-        return KernelCentroidStore(flat, None, None, 0, False)
-
-    bits = scheme_bits(quant)
-    symmetric = scheme_symmetric(quant)
-    qhi = (2.0 ** (bits - 1) - 1.0) if symmetric else (2.0**bits - 1.0)
-
-    code_segs, scales, zeros = [], [], []
-    for h in range(n_kv):
-        rk = per_head_rk[h]                                   # [B, nb, Dp]
-        if symmetric:
-            amax = jnp.max(jnp.abs(rk), axis=1, keepdims=True)
-            scale = jnp.maximum(amax / qhi, 1e-8)
-            zero = jnp.zeros_like(scale)
-            codes = jnp.clip(jnp.round(rk / scale) + qhi, 0, 2 * qhi)
-        else:
-            xmin = jnp.min(rk, axis=1, keepdims=True)
-            xmax = jnp.max(rk, axis=1, keepdims=True)
-            scale = jnp.maximum((xmax - xmin) / qhi, 1e-8)
-            zero = xmin
-            codes = jnp.clip(jnp.round((rk - xmin) / scale), 0, qhi)
-        codes = codes.astype(jnp.uint8)
-        pad = layout.padded_n_blocks[h] - codes.shape[1]
-        codes = jnp.pad(codes, ((0, 0), (0, pad), (0, 0)))
-        code_segs.append(codes)
-        scales.append(scale[:, 0])                            # [B, Dp]
-        zeros.append(zero[:, 0])
-
-    codes = jnp.concatenate(code_segs, axis=1)                # [B, rows, Dp]
-    if bits == 4:
-        codes = pack_split_half(codes)                        # [B, rows, Dp//2]
-    scale = jnp.stack(scales, axis=1)                         # [B, n_kv, Dp]
-    zero = jnp.stack(zeros, axis=1)
-    return KernelCentroidStore(codes, scale, zero, bits, symmetric)
-
-
-# ---------------------------------------------------------------------------
 # Kernel 1: estimation
 # ---------------------------------------------------------------------------
 
 
 def centroid_scores(
     rq: jax.Array,
-    store: KernelCentroidStore,
+    store,                      # repro.backends.CentroidStore (duck-typed)
     layout,
     n_kv: int,
     interpret: Optional[bool] = None,
@@ -277,37 +152,3 @@ def flash_attention(
         q, k, v, causal=causal, block_q=block_q, block_k=block_k,
         interpret=interpret,
     )
-
-
-# ---------------------------------------------------------------------------
-# Fused sparse decode attention (kernels 1+2+3)
-# ---------------------------------------------------------------------------
-
-
-def sparse_decode_attention_kernels(
-    q: jax.Array,
-    k: jax.Array,
-    v: jax.Array,
-    store: KernelCentroidStore,
-    layout: RaggedLayout,
-    method: str,
-    seq_len: Optional[jax.Array] = None,
-    sink_pages: int = 1,
-    local_pages: int = 4,
-    interpret: Optional[bool] = None,
-) -> Tuple[jax.Array, jax.Array]:
-    """Full AB-Sparse decode step on the kernel path.
-    q [B, n_q, D]; k/v [B, n_kv, S, D] -> (out [B, n_q, D], page_table)."""
-    B, n_q, D = q.shape
-    n_kv = k.shape[1]
-    rq = rank_query(q, method, D)
-    scores = centroid_scores(rq, store, layout, n_kv, interpret=interpret)
-    page_table, page_valid = select_page_table(
-        scores, layout, seq_len=seq_len,
-        sink_pages=sink_pages, local_pages=local_pages,
-    )
-    out = paged_attention(
-        q, k, v, page_table, page_valid, layout.page_size, seq_len,
-        interpret=interpret,
-    )
-    return out, page_table

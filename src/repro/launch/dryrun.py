@@ -158,6 +158,20 @@ def run_cell(
             None, None, [f"parse-error: {e}"], None,
         )
 
+    # static attention plan for this cell (single derivation point: the
+    # same cached plan the model's cache allocator and decode path use).
+    aplan = cell["model"].attention_plan(shape.seq_len)
+    plan_info = {
+        "backend": aplan.backend,
+        "active": aplan.active,
+        "token_budget": aplan.token_budget,
+        "rank_key_width": aplan.rank_key_width if aplan.active else None,
+        "avg_block_size": (
+            float(np.mean([l.avg_block_size for l in aplan.layouts]))
+            if aplan.active else None
+        ),
+    }
+
     n_dev = mesh.devices.size
     mem_dict = {
         "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
@@ -171,6 +185,7 @@ def run_cell(
         "shape": shape_name,
         "mesh": "pod2x16x16" if multi_pod else "pod16x16",
         "n_devices": int(n_dev),
+        "attention_plan": plan_info,
         "ok": True,
         "lower_s": round(t_lower, 2),
         "compile_s": round(t_compile, 2),

@@ -12,6 +12,7 @@ import time
 import jax
 import numpy as np
 
+from repro.config import ServeConfig
 from repro.configs import get_config, smoke_variant
 from repro.models import Transformer
 from repro.serving import Engine, Request
@@ -32,8 +33,8 @@ def main():
         cfg = smoke_variant(cfg)
     model = Transformer(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    eng = Engine(cfg, params, max_batch=args.max_batch,
-                 max_context=args.max_context)
+    eng = Engine(cfg, params, ServeConfig(
+        max_batch=args.max_batch, max_context=args.max_context))
     rng = np.random.default_rng(0)
     for rid in range(args.requests):
         plen = int(rng.integers(64, args.max_context // 2))
@@ -42,17 +43,13 @@ def main():
             max_new_tokens=args.new_tokens,
         ))
     t0 = time.monotonic()
-    ticks = 0
-    while eng.queue or any(s is not None for s in eng.slots):
-        eng.step()
-        ticks += 1
-        if ticks > 10_000:
-            break
+    done = eng.run_until_done()
     dt = time.monotonic() - t0
-    total = args.requests * args.new_tokens
-    print(f"served {args.requests} requests / {total} tokens in {dt:.1f}s "
-          f"({total / dt:.1f} tok/s, {ticks} ticks); sparse path: "
-          f"{model.use_sparse(args.max_context)}")
+    total = sum(len(r.output) for r in done)
+    plan = model.attention_plan(args.max_context)
+    print(f"served {len(done)} requests / {total} tokens in {dt:.1f}s "
+          f"({total / dt:.1f} tok/s); sparse path: {plan.active} "
+          f"(backend={plan.backend})")
 
 
 if __name__ == "__main__":

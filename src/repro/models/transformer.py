@@ -25,20 +25,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.backends import AttentionPlan, CentroidStore, build_plan, get_backend
 from repro.config import ModelConfig, SparseConfig
-from repro.core import stacked as stacked_mod
-from repro.core.centroids import (
-    padded_rank_key_width,
-    rank_query,
-)
-from repro.core.quantization import pack_split_half
-from repro.core.ragged import RaggedLayout, layout_for
-from repro.core.selection import select_page_table
-from repro.core import estimation as est_mod
-from repro.core.sparse_attention import (
-    dense_decode_attention,
-    paged_attention_reference,
-)
+from repro.core.quantization import store_bits, store_symmetric
+from repro.core.ragged import RaggedLayout
+from repro.core.sparse_attention import dense_decode_attention
 from repro.distributed.sharding import constrain
 from repro.models import layers, moe as moe_mod, rglru, rwkv6
 
@@ -82,6 +73,10 @@ class Transformer:
         )
         self.dtype = jnp.dtype(cfg.dtype)
         self._context_len = context_len
+        #: attention backend resolved once through the registry; every
+        #: sparse-path stage (store build / append / scores / attend) routes
+        #: through it.
+        self.backend = get_backend(cfg.sparse.backend)
         if cfg.sparse.enabled:
             assert pattern == ("attn",), (
                 "AB-Sparse decode currently assumes a homogeneous global-"
@@ -152,27 +147,17 @@ class Transformer:
 
     # -------------------------------------------------------------- layouts
 
+    def attention_plan(self, context_len: int) -> AttentionPlan:
+        """The cached static plan (layouts / budget / rank-key width) for
+        this model at ``context_len`` — the single derivation point."""
+        return build_plan(self.cfg, context_len)
+
     def sparse_layouts(self, context_len: int) -> Optional[List[RaggedLayout]]:
-        cfg = self.cfg
-        if not cfg.sparse.enabled:
-            return None
-        budget = cfg.sparse.budget_for(context_len)
-        return [
-            layout_for(
-                cfg.sparse.layer_block_sizes(l, cfg.n_kv_heads),
-                context_len,
-                cfg.sparse.page_size,
-                budget,
-            )
-            for l in range(cfg.n_layers)
-        ]
+        plan = self.attention_plan(context_len)
+        return list(plan.layouts) if plan.active else None
 
     def use_sparse(self, context_len: int) -> bool:
-        cfg = self.cfg
-        if not cfg.sparse.enabled or self.cfg.is_attention_free:
-            return False
-        budget = cfg.sparse.budget_for(context_len)
-        return context_len >= 2 * budget
+        return self.attention_plan(context_len).active
 
     # -------------------------------------------------------------- embedding
 
@@ -351,17 +336,11 @@ class Transformer:
         nc = self.plan.n_cycles
         cache: Cache = {"seq_len": jnp.zeros((batch,), jnp.int32)}
 
-        sparse = self.use_sparse(max_context)
-        layouts = self.sparse_layouts(max_context) if sparse else None
-        if layouts is not None:
-            stk = stacked_mod.stack_layouts(layouts)
-            cache["_layouts"] = stk
-            Dp = padded_rank_key_width(hd, cfg.sparse.centroid_method)
-            W = Dp // 2 if quant == "int4_asym" or quant.startswith("int4") else Dp
-            offs = np.zeros((cfg.n_layers, cfg.n_kv_heads), np.int32)
-            for l, lay in enumerate(layouts):
-                offs[l] = lay.offsets[:-1]
-            cache["_offsets"] = jnp.asarray(offs)
+        aplan = self.attention_plan(max_context)
+        sparse = aplan.active
+        if sparse:
+            cache["_layouts"] = aplan.stacked
+            cache["_offsets"] = aplan.offsets
 
         def per_pos(i, kind):
             entry = {}
@@ -372,12 +351,13 @@ class Transformer:
                 entry["v"] = jnp.zeros_like(entry["k"])
                 if sparse:
                     stk = cache["_layouts"]
-                    Dp = padded_rank_key_width(hd, cfg.sparse.centroid_method)
-                    if quant.startswith("int4"):
+                    Dp = aplan.rank_key_width
+                    bits = store_bits(quant)
+                    if bits == 4:
                         entry["codes"] = jnp.zeros(
                             (nc, batch, stk.total_rows, Dp // 2), jnp.uint8
                         )
-                    elif quant.startswith("int8"):
+                    elif bits == 8:
                         entry["codes"] = jnp.zeros(
                             (nc, batch, stk.total_rows, Dp), jnp.uint8
                         )
@@ -463,12 +443,13 @@ class Transformer:
                         vv, ((0, 0), (0, 0), (0, pad), (0, 0))
                     )
                     if sparse:
-                        codes, scale, zero = self._build_store(
-                            new_entry["k"], layer_layout, layer_offs, quant
+                        store = self.backend.prefill_store(
+                            new_entry["k"], layer_layout, layer_offs,
+                            cfgl.sparse, quant=quant,
                         )
-                        new_entry["codes"] = codes
-                        new_entry["scale"] = scale
-                        new_entry["zero"] = zero
+                        new_entry["codes"] = store.codes
+                        new_entry["scale"] = store.scale
+                        new_entry["zero"] = store.zero
                 else:
                     # ring-buffer fill: last min(W, S) tokens at slot pos % W
                     W = entry["k"].shape[-2]
@@ -576,101 +557,6 @@ class Transformer:
         )
         return S, xprev
 
-    # ------------------------------------------------------- centroid store
-
-    def _build_store(self, k_cache, layout, offs, quant):
-        """k_cache [B, n_kv, S_max, hd] -> (codes, scale, zero) in the
-        flattened kernel layout for ONE layer.
-
-        Fully vectorized over dynamic per-head block sizes (scan-safe):
-        rank keys are built at every candidate size from page-granular
-        pooled stats, then each flat store row selects its head's size.
-        """
-        from repro.core.stacked import as_arrays
-
-        cfg = self.cfg
-        la = as_arrays(layout)
-        method = cfg.sparse.centroid_method
-        B, n_kv, S_max, hd = k_cache.shape
-        Dp = padded_rank_key_width(hd, method)
-        page = cfg.sparse.page_size
-        n_pages = S_max // page
-        rows_total = la.total_rows
-        cands = cfg.sparse.candidate_block_sizes
-
-        pages = k_cache.reshape(B, n_kv, n_pages, page, hd).astype(jnp.float32)
-        pmax = pages.max(axis=3)
-        pmin = pages.min(axis=3)
-        pmean = pages.mean(axis=3)
-
-        def merge(c):
-            s = c // page
-            nb = n_pages // s
-            mmax = pmax.reshape(B, n_kv, nb, s, hd).max(3)
-            mmin = pmin.reshape(B, n_kv, nb, s, hd).min(3)
-            mmean = pmean.reshape(B, n_kv, nb, s, hd).mean(3)
-            if method == "mean":
-                rk = mmean
-            elif method == "quest":
-                rk = jnp.concatenate([mmax, mmin], axis=-1)
-            else:  # arkvale approximated from page stats: center + half-diag
-                center = 0.5 * (mmax + mmin)
-                radius = 0.5 * jnp.linalg.norm(mmax - mmin, axis=-1)
-                rk = jnp.concatenate([center, radius[..., None]], axis=-1)
-            pad = Dp - rk.shape[-1]
-            if pad:
-                rk = jnp.pad(rk, ((0, 0),) * (rk.ndim - 1) + ((0, pad),))
-            # pad block axis to the max candidate count (= n_pages)
-            rk = jnp.pad(rk, ((0, 0), (0, 0), (0, n_pages - nb), (0, 0)))
-            return rk                                      # [B, n_kv, n_pages, Dp]
-
-        merged = jnp.stack([merge(c) for c in cands])      # [C, B, n_kv, nP, Dp]
-        bsz = la.block_sizes                               # [n_kv] (maybe traced)
-        sel = jnp.zeros_like(merged[0])
-        nb_h = jnp.zeros((n_kv,), jnp.int32)
-        for ci, c in enumerate(cands):
-            hit = (bsz == c)
-            sel = jnp.where(hit[None, :, None, None], merged[ci], sel)
-            nb_h = jnp.where(hit, S_max // c, nb_h)
-        # sel: per head, first nb_h[h] rows are that head's rank keys.
-
-        # per-head quantization params over valid blocks
-        blk_valid = (
-            jnp.arange(n_pages)[None, :] < nb_h[:, None]
-        )[None, :, :, None]                                # [1, n_kv, nP, 1]
-        if quant in ("none", None):
-            scale = jnp.ones((B, n_kv, Dp), jnp.float32)
-            zero = jnp.zeros((B, n_kv, Dp), jnp.float32)
-        else:
-            qhi = 15.0 if quant.startswith("int4") else 255.0
-            xmin = jnp.where(blk_valid, sel, 1e30).min(axis=2)
-            xmax = jnp.where(blk_valid, sel, -1e30).max(axis=2)
-            scale = jnp.maximum((xmax - xmin) / qhi, 1e-8)
-            zero = xmin
-
-        # flat rows: row r -> (head = row_head[r], local block j = r - offs)
-        row_head = jnp.repeat(
-            la.tile_head, la.tile_rows, total_repeat_length=rows_total
-        )                                                   # [rows]
-        row_off = offs[row_head]                            # [rows]
-        row_j = jnp.arange(rows_total, dtype=jnp.int32) - row_off
-        row_j = jnp.clip(row_j, 0, n_pages - 1)
-        # gather per-row rank keys: sel[B, n_kv, nP, Dp] at (row_head, row_j)
-        rk_rows = sel[:, row_head, row_j]                   # [B, rows, Dp]
-
-        if quant in ("none", None):
-            flat = rk_rows
-        else:
-            qhi = 15.0 if quant.startswith("int4") else 255.0
-            s_rows = scale[:, row_head]                     # [B, rows, Dp]
-            z_rows = zero[:, row_head]
-            flat = jnp.clip(
-                jnp.round((rk_rows - z_rows) / s_rows), 0, qhi
-            ).astype(jnp.uint8)
-            if quant.startswith("int4"):
-                flat = pack_split_half(flat)
-        return flat, scale, zero
-
     # ------------------------------------------------------------ decode step
 
     def decode_step(
@@ -678,7 +564,6 @@ class Transformer:
         params,
         cache: Cache,
         tokens: jax.Array,            # [B] next input token ids
-        use_kernels: bool = False,
     ) -> Tuple[jax.Array, Cache]:
         """One decode step for all sequences. -> (logits [B, vocab], cache)."""
         cfg = self.cfg
@@ -699,7 +584,7 @@ class Transformer:
             new_entry = dict(entry)
             if kind == "attn":
                 h, new_entry = self._attn_decode(
-                    p["attn"], h, entry, lay, offs, positions, use_kernels
+                    p["attn"], h, entry, lay, offs, positions
                 )
             elif kind == "local_attn":
                 h, new_entry = self._local_attn_decode(
@@ -757,7 +642,7 @@ class Transformer:
 
     # -- decode helpers ---------------------------------------------------
 
-    def _attn_decode(self, p, h, entry, lay, offs, positions, use_kernels):
+    def _attn_decode(self, p, h, entry, lay, offs, positions):
         cfg = self.cfg
         B = h.shape[0]
         hd = cfg.resolved_head_dim
@@ -792,150 +677,22 @@ class Transformer:
             out = dense_decode_attention(q, k_cache, v_cache, seq_len=live)
             return layers.out_project(p, out[:, None], cfg), new_entry
 
-        # --- AB-Sparse path ---
-        method = cfg.sparse.centroid_method
+        # --- AB-Sparse path: plan/execute through the attention backend ---
         quant = cfg.sparse.quant
-        # 1. refresh the centroid row of the block containing the new token
-        codes, scale, zero = entry["codes"], entry["scale"], entry["zero"]
-        codes = self._refresh_tail_centroid(
-            codes, scale, zero, k_cache, lay, offs, seq_len, method, quant
+        store = CentroidStore(
+            entry["codes"], entry["scale"], entry["zero"],
+            store_bits(quant), store_symmetric(quant),
         )
-        new_entry["codes"] = codes
-
-        # 2. estimation
-        rq = rank_query(q, method, hd)
-        if use_kernels:
-            from repro.kernels import ops as kops
-
-            store = kops.KernelCentroidStore(
-                codes, scale, zero,
-                4 if quant.startswith("int4") else (8 if quant.startswith("int8") else 0),
-                False,
-            )
-            scores = kops.centroid_scores(rq, store, lay, cfg.n_kv_heads)
-        else:
-            rk = self._dequant_store(codes, scale, zero, lay, quant)
-            scores = est_mod.estimate_scores(rq, rk, lay, cfg.n_kv_heads)
-
-        # 3. selection
-        table, valid = select_page_table(
-            scores, lay, seq_len=live,
-            sink_pages=cfg.sparse.sink_pages,
-            local_pages=cfg.sparse.local_pages,
+        # refresh the centroid row of the block containing the new token,
+        # then estimation -> adaptive top-k -> paged attention.
+        store = self.backend.append(
+            store, k_cache, lay, offs, seq_len, cfg.sparse
         )
-
-        # 4. paged attention over selected pages
-        if use_kernels:
-            out = kops.paged_attention(
-                q, k_cache, v_cache, table, valid, lay.page_size, live
-            )
-        else:
-            out = paged_attention_reference(
-                q, k_cache, v_cache, table, valid, lay.page_size, live
-            )
+        new_entry["codes"] = store.codes
+        out, _ = self.backend.decode(
+            q, k_cache, v_cache, store, lay, cfg.sparse, seq_len=live
+        )
         return layers.out_project(p, out[:, None], cfg), new_entry
-
-    def _dequant_store(self, codes, scale, zero, lay, quant):
-        """Reference dequant of the flattened store -> [B, rows, Dp] f32."""
-        from repro.core.quantization import unpack_split_half
-
-        if quant in ("none", None):
-            return codes
-        if quant.startswith("int4"):
-            u = unpack_split_half(codes).astype(jnp.float32)
-        else:
-            u = codes.astype(jnp.float32)
-        # per-row head id -> per-row scale/zero via tile map
-        row_head = jnp.repeat(lay.tile_head, lay.tile_rows)   # [rows]
-        B = codes.shape[0]
-        s = jnp.take_along_axis(
-            scale, row_head[None, :, None].repeat(B, 0), axis=1
-        )
-        z = jnp.take_along_axis(
-            zero, row_head[None, :, None].repeat(B, 0), axis=1
-        )
-        return u * s + z
-
-    def _refresh_tail_centroid(
-        self, codes, scale, zero, k_cache, lay, offs, seq_len, method, quant
-    ):
-        """Recompute + requantize the rank-key row of the block containing
-        the newest token, for every head (vectorized, static shapes).
-
-        The 64-token window (= max candidate block) containing the token is
-        pooled at each candidate size; the row for each head is selected by
-        its (possibly layer-dynamic) block size.  Positions beyond seq_len
-        are neutralized (-inf/+inf for max/min, zero-weight for mean).
-        """
-        cfg = self.cfg
-        B, n_kv, S_max, hd = k_cache.shape
-        Dp = scale.shape[-1]
-        Wmax = max(cfg.sparse.candidate_block_sizes)
-        w0 = (seq_len // Wmax) * Wmax                        # [B]
-
-        # gather the window [B, n_kv, Wmax, hd]
-        win = jax.vmap(
-            lambda kc, s: jax.lax.dynamic_slice(
-                kc, (0, s, 0), (n_kv, Wmax, hd)
-            )
-        )(k_cache, w0)
-        pos = w0[:, None] + jnp.arange(Wmax)[None]           # [B, Wmax]
-        ok = (pos <= seq_len[:, None])[:, None, :, None]     # include new tok
-        winf = win.astype(jnp.float32)
-        BIG = 1e30
-
-        def pooled(c):
-            n = Wmax // c
-            wm = winf.reshape(B, n_kv, n, c, hd)
-            okm = ok.reshape(B, 1, n, c, 1)
-            mx = jnp.where(okm, wm, -BIG).max(3)
-            mn = jnp.where(okm, wm, BIG).min(3)
-            cnt = jnp.maximum(okm.sum(3), 1)
-            mean = jnp.where(okm, wm, 0.0).sum(3) / cnt
-            # slot containing the new token
-            slot = (seq_len % Wmax) // c                      # [B]
-            take = lambda a: jnp.take_along_axis(
-                a, slot[:, None, None, None], axis=2
-            )[:, :, 0]
-            mx, mn, mean = take(mx), take(mn), take(mean)     # [B, n_kv, hd]
-            if method == "mean":
-                rk = mean
-            elif method == "quest":
-                rk = jnp.concatenate([mx, mn], axis=-1)
-            else:
-                center = 0.5 * (mx + mn)
-                radius = 0.5 * jnp.linalg.norm(mx - mn, axis=-1)
-                rk = jnp.concatenate([center, radius[..., None]], axis=-1)
-            pad = Dp - rk.shape[-1]
-            if pad:
-                rk = jnp.pad(rk, ((0, 0), (0, 0), (0, pad)))
-            return rk                                         # [B, n_kv, Dp]
-
-        cands = cfg.sparse.candidate_block_sizes
-        rks = jnp.stack([pooled(c) for c in cands])           # [C, B, n_kv, Dp]
-        bsz = lay.block_sizes                                 # [n_kv]
-        sel = jnp.zeros_like(rks[0])
-        for ci, c in enumerate(cands):
-            sel = jnp.where((bsz == c)[None, :, None], rks[ci], sel)
-
-        # quantize with the frozen per-head scale/zero
-        if quant in ("none", None):
-            new_codes = sel
-        else:
-            qhi = 15.0 if quant.startswith("int4") else 255.0
-            qv = jnp.clip(jnp.round((sel - zero) / scale), 0, qhi).astype(
-                jnp.uint8
-            )
-            if quant.startswith("int4"):
-                lo = qv[..., : Dp // 2]
-                hi = qv[..., Dp // 2 :]
-                new_codes = (lo | (hi << 4)).astype(jnp.uint8)
-            else:
-                new_codes = qv
-
-        rows = offs[None, :] + (seq_len[:, None] // bsz[None, :])  # [B, n_kv]
-        bidx = jnp.arange(B)[:, None]
-        return codes.at[bidx, rows].set(new_codes)
 
     def _local_attn_decode(self, p, h, entry, positions):
         """Sliding-window decode with a ring-buffer KV cache."""

@@ -45,28 +45,40 @@ class Engine:
         self,
         model_cfg: ModelConfig,
         params,
-        serve_cfg: Optional[ServeConfig] = None,
-        max_batch: int = 4,
-        max_context: int = 2048,
+        serve_cfg: ServeConfig,
         seed: int = 0,
     ):
+        """Batch capacity and context length come from ``serve_cfg``
+        (``ServeConfig.max_batch`` / ``ServeConfig.max_context``) — the
+        engine no longer carries shadow copies of those knobs.  The config
+        is required: ``ServeConfig()``'s production-scale defaults
+        (128 x 512k context) would allocate a colossal cache by accident.
+        """
         self.cfg = model_cfg
-        self.serve = serve_cfg or ServeConfig()
+        self.serve = serve_cfg
         self.model = Transformer(model_cfg)
         self.params = params
-        self.max_batch = max_batch
-        self.max_context = max_context
         self.pool = PagePool(
-            total_pages=max_batch * (max_context // self.serve.page_size),
+            total_pages=self.max_batch
+            * (self.max_context // self.serve.page_size),
             page_size=self.serve.page_size,
         )
         self.key = jax.random.PRNGKey(seed)
 
-        self.cache = self.model.init_cache(max_batch, max_context)
-        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.cache = self.model.init_cache(self.max_batch, self.max_context)
+        self.slots: List[Optional[Request]] = [None] * self.max_batch
         self.queue: List[Request] = []
+        self.finished: List[Request] = []
         self._decode = jax.jit(self.model.decode_step)
-        self._tokens_buf = np.zeros((max_batch,), np.int32)
+        self._tokens_buf = np.zeros((self.max_batch,), np.int32)
+
+    @property
+    def max_batch(self) -> int:
+        return self.serve.max_batch
+
+    @property
+    def max_context(self) -> int:
+        return self.serve.max_context
 
     # -- admission -----------------------------------------------------------
 
@@ -156,12 +168,16 @@ class Engine:
                 req.done = True
                 self.pool.free(req.req_id)
                 self.slots[i] = None
+                self.finished.append(req)
         return len([s for s in self.slots if s is not None])
 
     def run_until_done(self, max_ticks: int = 10_000) -> List[Request]:
-        finished: List[Request] = []
+        """Tick until queue and slots drain; -> the requests retired DURING
+        this call, in retirement order (a copy — the engine's cumulative
+        record stays in ``self.finished``)."""
+        start = len(self.finished)
         for _ in range(max_ticks):
             self.step()
             if not self.queue and all(s is None for s in self.slots):
                 break
-        return finished
+        return list(self.finished[start:])

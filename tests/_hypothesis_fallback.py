@@ -1,0 +1,85 @@
+"""Deterministic stand-in for `hypothesis` when it isn't installed.
+
+The property tests guard their import:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, strategies as st
+
+so a clean checkout (CI installs the real thing via ``pip install .[dev]``)
+still RUNS every property test — with seeded pseudo-random examples instead
+of hypothesis' adaptive search + shrinking.  Only the strategy subset used
+by this suite is implemented: ``integers``, ``sampled_from``, ``lists``,
+``tuples``.
+"""
+from __future__ import annotations
+
+import random
+import zlib
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: rng.choice(seq))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        return _Strategy(
+            lambda rng: [
+                elements.example(rng)
+                for _ in range(rng.randint(min_size, max_size))
+            ]
+        )
+
+    @staticmethod
+    def tuples(*elements):
+        return _Strategy(lambda rng: tuple(e.example(rng) for e in elements))
+
+
+strategies = _Strategies()
+st = strategies
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    """Record max_examples on the (possibly already @given-wrapped) test."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**kwargs):
+    """Run the test body over ``max_examples`` seeded random draws."""
+
+    def deco(fn):
+        def wrapper():
+            n = getattr(wrapper, "_fallback_max_examples", 20)
+            # stable per-test seed (hash() is salted per process; crc32 not)
+            rng = random.Random(zlib.crc32(fn.__name__.encode()))
+            for _ in range(n):
+                drawn = {k: s.example(rng) for k, s in kwargs.items()}
+                fn(**drawn)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco

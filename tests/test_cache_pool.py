@@ -1,7 +1,10 @@
 """Page-pool allocator property tests (cache/paged_kv.py invariants)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - fallback: deterministic examples
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.cache.paged_kv import PagePool, PoolExhausted
 

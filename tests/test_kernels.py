@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.backends import PallasBackend, get_backend
 from repro.core.centroids import rank_query
 from repro.core.quantization import unpack_split_half
 from repro.core.ragged import layout_for, uniform_layout
@@ -13,6 +14,9 @@ from repro.core.selection import select_page_table
 from repro.kernels import block_centroid, ops, ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.topk_threshold import topk_threshold
+
+#: interpret-forced pallas backend for CPU kernel validation
+PALLAS = PallasBackend(interpret=True)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -73,9 +77,9 @@ def test_centroid_scores_vs_ref(method, quant):
     lay = layout_for((16, 32, 64, 32), S, 16, 512)
     k = jax.random.normal(KEY, (B, n_kv, S, D))
     q = jax.random.normal(jax.random.fold_in(KEY, 2), (B, n_kv * g, D))
-    store = ops.build_rank_keys(k, lay, method, quant=quant, interpret=True)
+    store = PALLAS.build_store(k, lay, method, quant=quant)
     rq = rank_query(q, method, D)
-    got = ops.centroid_scores(rq, store, lay, n_kv, interpret=True)
+    got = PALLAS.scores(rq, store, lay, n_kv)
 
     # oracle: dequantize the store the slow way, score densely
     if store.bits == 0:
@@ -106,12 +110,10 @@ def test_quantized_scores_close_to_exact():
     k = jax.random.normal(KEY, (B, n_kv, S, D))
     q = jax.random.normal(jax.random.fold_in(KEY, 7), (B, n_kv * g, D))
     rq = rank_query(q, "quest", D)
-    s_exact = ops.centroid_scores(
-        rq, ops.build_rank_keys(k, lay, "quest", quant="none", interpret=True),
-        lay, n_kv, interpret=True)
-    s_q = ops.centroid_scores(
-        rq, ops.build_rank_keys(k, lay, "quest", quant="int4_asym", interpret=True),
-        lay, n_kv, interpret=True)
+    s_exact = PALLAS.scores(
+        rq, PALLAS.build_store(k, lay, "quest", quant="none"), lay, n_kv)
+    s_q = PALLAS.scores(
+        rq, PALLAS.build_store(k, lay, "quest", quant="int4_asym"), lay, n_kv)
     m = np.asarray(s_exact) > -1e29
     rel = np.abs(np.asarray(s_q)[m] - np.asarray(s_exact)[m])
     scale = np.abs(np.asarray(s_exact)[m]).mean()
@@ -177,7 +179,6 @@ def test_paged_attention_sweep(B, n_kv, g, S, D, dtype):
 
 def test_fused_kernel_pipeline_matches_reference_pipeline():
     from repro.config import SparseConfig
-    from repro.core import build_centroid_store, sparse_decode_attention
 
     B, n_kv, g, S, D = 2, 4, 2, 2048, 64
     lay = layout_for((16, 32, 64, 32), S, 16, 512)
@@ -186,14 +187,11 @@ def test_fused_kernel_pipeline_matches_reference_pipeline():
     q = jax.random.normal(jax.random.fold_in(KEY, 2), (B, n_kv * g, D))
     seq_len = jnp.array([S, S // 2], jnp.int32)
     cfg = SparseConfig(token_budget=512, block_sizes=((16, 32, 64, 32),))
-    store_ref = build_centroid_store(k, lay, "quest", quant="none")
-    store_krn = ops.build_rank_keys(k, lay, "quest", quant="none", interpret=True)
-    out_ref, tbl_ref = sparse_decode_attention(
-        q, k, v, store_ref, lay, cfg, seq_len=seq_len
-    )
-    out_krn, tbl_krn = ops.sparse_decode_attention_kernels(
-        q, k, v, store_krn, lay, "quest", seq_len=seq_len, interpret=True
-    )
+    ref_be = get_backend("reference")
+    store_ref = ref_be.build_store(k, lay, "quest", quant="none")
+    store_krn = PALLAS.build_store(k, lay, "quest", quant="none")
+    out_ref, tbl_ref = ref_be.decode(q, k, v, store_ref, lay, cfg, seq_len=seq_len)
+    out_krn, tbl_krn = PALLAS.decode(q, k, v, store_krn, lay, cfg, seq_len=seq_len)
     np.testing.assert_array_equal(np.asarray(tbl_ref), np.asarray(tbl_krn))
     np.testing.assert_allclose(
         np.asarray(out_ref), np.asarray(out_krn), atol=1e-5

@@ -114,24 +114,28 @@ def test_sparse_decode_converges_to_dense_with_budget():
     assert diffs[2] < 0.35 * diffs[0] + 1e-6, diffs
 
 
-def test_kernel_decode_path_matches_reference_decode():
-    """use_kernels=True must produce the same logits as the reference path."""
-    cfg = smoke_variant(get_config("llama3.2-3b"))
-    cfg = dataclasses.replace(
-        cfg,
-        sparse=dataclasses.replace(cfg.sparse, token_budget=128, quant="int4_asym"),
-    )
-    model = Transformer(cfg)
-    params = model.init(KEY)
+def test_pallas_backend_decode_matches_reference_decode():
+    """backend="pallas" must produce the same logits as backend="reference"
+    end-to-end through the model (store build, append, decode)."""
+    base = smoke_variant(get_config("llama3.2-3b"))
     B, S = 2, 255
-    tokens = jax.random.randint(KEY, (B, S + 1), 0, cfg.vocab_size)
-    _, cache = model.prefill(params, tokens[:, :S], max_context=S + 65)
-    logits_ref, _ = model.decode_step(
-        params, cache, tokens[:, S], use_kernels=False
-    )
-    logits_krn, _ = model.decode_step(
-        params, cache, tokens[:, S], use_kernels=True
-    )
+    tokens = jax.random.randint(KEY, (B, S + 1), 0, base.vocab_size)
+
+    def logits_with(backend):
+        cfg = dataclasses.replace(
+            base,
+            sparse=dataclasses.replace(
+                base.sparse, token_budget=128, quant="int4_asym",
+                backend=backend,
+            ),
+        )
+        model = Transformer(cfg)
+        params = model.init(KEY)  # same KEY -> identical params every call
+        _, cache = model.prefill(params, tokens[:, :S], max_context=S + 65)
+        return model.decode_step(params, cache, tokens[:, S])[0]
+
+    logits_ref = logits_with("reference")
+    logits_krn = logits_with("pallas")
     np.testing.assert_allclose(
         np.asarray(logits_ref), np.asarray(logits_krn), atol=5e-4, rtol=1e-3
     )

@@ -1,7 +1,10 @@
 """Ragged layout invariants (DESIGN.md §9, properties 1 & 3)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - fallback: deterministic examples
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.ragged import RaggedLayout, layout_for, uniform_layout
 from repro.core.stacked import as_arrays, stack_layouts

@@ -3,16 +3,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - fallback: deterministic examples
+    from _hypothesis_fallback import given, settings, strategies as st
 
+from repro.backends import get_backend
 from repro.config import SparseConfig
-from repro.core import (
-    build_centroid_store,
-    dense_decode_attention,
-    layout_for,
-    select_page_table,
-    sparse_decode_attention,
-)
+from repro.core import dense_decode_attention, layout_for, select_page_table
 from repro.core.selection import pages_to_token_mask
 from repro.core.stacked import as_arrays
 
@@ -77,10 +75,11 @@ def test_sparse_equals_dense_at_full_budget():
     k = jax.random.normal(key, (B, n_kv, S, D))
     v = jax.random.normal(jax.random.fold_in(key, 1), (B, n_kv, S, D))
     q = jax.random.normal(jax.random.fold_in(key, 2), (B, n_kv * g, D))
-    cfg = SparseConfig(token_budget=S)
+    backend = get_backend("reference")
     for method in ("mean", "quest", "arkvale"):
-        store = build_centroid_store(k, lay, method, quant="none")
-        out_s, _ = sparse_decode_attention(q, k, v, store, lay, cfg)
+        cfg = SparseConfig(token_budget=S, centroid_method=method)
+        store = backend.build_store(k, lay, method, quant="none")
+        out_s, _ = backend.decode(q, k, v, store, lay, cfg)
         out_d = dense_decode_attention(q, k, v)
         np.testing.assert_allclose(
             np.asarray(out_s), np.asarray(out_d), atol=2e-5, rtol=1e-4,

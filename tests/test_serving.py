@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.config import ServeConfig
 from repro.configs import get_config, smoke_variant
 from repro.models import Transformer
 from repro.serving import Engine, Request
@@ -22,7 +23,7 @@ def setup():
 
 def test_continuous_batching_completes_all(setup):
     cfg, params = setup
-    eng = Engine(cfg, params, max_batch=3, max_context=512)
+    eng = Engine(cfg, params, ServeConfig(max_batch=3, max_context=512))
     rng = np.random.default_rng(0)
     reqs = [
         Request(i, rng.integers(0, cfg.vocab_size, size=80).astype(np.int32),
@@ -40,9 +41,34 @@ def test_continuous_batching_completes_all(setup):
     assert eng.pool.used_pages == 0, "pages must be freed on retirement"
 
 
+def test_run_until_done_returns_finished_requests(setup):
+    cfg, params = setup
+    eng = Engine(cfg, params, ServeConfig(max_batch=2, max_context=512))
+    rng = np.random.default_rng(2)
+    reqs = [
+        Request(i, rng.integers(0, cfg.vocab_size, size=64).astype(np.int32),
+                max_new_tokens=4)
+        for i in range(3)
+    ]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run_until_done(max_ticks=200)
+    assert sorted(r.req_id for r in done) == [0, 1, 2]
+    assert all(r.done and len(r.output) == 4 for r in done)
+    assert eng.pool.used_pages == 0
+
+
+def test_engine_capacity_comes_from_serve_config(setup):
+    cfg, params = setup
+    eng = Engine(cfg, params, ServeConfig(max_batch=3, max_context=256))
+    assert eng.max_batch == 3 and eng.max_context == 256
+    assert len(eng.slots) == 3
+    assert eng.pool.total_pages == 3 * (256 // eng.serve.page_size)
+
+
 def test_admission_control_blocks_oversize(setup):
     cfg, params = setup
-    eng = Engine(cfg, params, max_batch=2, max_context=256)
+    eng = Engine(cfg, params, ServeConfig(max_batch=2, max_context=256))
     rng = np.random.default_rng(1)
     big = Request(0, rng.integers(0, cfg.vocab_size, 200).astype(np.int32),
                   max_new_tokens=8)
