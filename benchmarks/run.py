@@ -19,6 +19,7 @@ def main() -> None:
         kernel_bench,
         quant_ablation,
         sensitivity,
+        serving_bench,
     )
 
     mods = [
@@ -29,6 +30,7 @@ def main() -> None:
         kernel_bench,
         decode_latency,
         batch_throughput,
+        serving_bench,
     ]
     print("name,us_per_call,derived")
     for mod in mods:

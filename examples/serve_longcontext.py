@@ -54,9 +54,11 @@ def main():
         if ticks > 500:
             break
     dt = time.monotonic() - t0
+    cached = eng.prefix_cache.n_pages if eng.prefix_cache else 0
     print(f"done: {ticks} ticks, {12 * n_requests} tokens in {dt:.1f}s "
-          f"({12 * n_requests / dt:.1f} tok/s), pool fully freed: "
-          f"{eng.pool.used_pages == 0}")
+          f"({12 * n_requests / dt:.1f} tok/s), pool clean: "
+          f"{eng.pool.used_pages == cached} "
+          f"({cached} pages retained by the prefix cache)")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,6 @@
-"""Paged KV cache substrate: physical page pool allocator + block->page
-mapping (paper §3.4 Kernel 3 / Fig. 9)."""
-from repro.cache.paged_kv import PagePool, PageTable
+"""Paged KV cache substrate: refcounted physical page pool + block->page
+mapping (paper §3.4 Kernel 3 / Fig. 9) + radix prefix-sharing index."""
+from repro.cache.paged_kv import PagePool, PageTable, PoolExhausted
+from repro.cache.prefix_cache import PrefixCache
 
-__all__ = ["PagePool", "PageTable"]
+__all__ = ["PagePool", "PageTable", "PoolExhausted", "PrefixCache"]

@@ -294,3 +294,18 @@ class ServeConfig:
     temperature: float = 0.6
     top_k: int = 20
     top_p: float = 0.95
+    # -- scheduler policy ---------------------------------------------------
+    #: page-pool size; ``None`` -> ``max_batch * max_context / page_size``
+    #: (every slot can hold a full context — no preemption pressure).
+    #: Smaller pools oversubscribe slots and exercise preemption.
+    pool_pages: Optional[int] = None
+    #: chunked-prefill token budget per engine tick, spread FCFS over
+    #: prefilling sequences so long prompts interleave with decode instead
+    #: of stalling the running batch.
+    prefill_tokens_per_tick: int = 8192
+    #: compiled chunk-buffer length (chunks are padded to this shape);
+    #: 0 disables chunking -> monolithic per-request prefill.
+    prefill_chunk: int = 256
+    #: radix prefix cache: page-granular KV reuse across requests that
+    #: share a prompt prefix (system prompts, few-shot headers, ...).
+    enable_prefix_cache: bool = True

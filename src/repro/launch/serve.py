@@ -1,5 +1,11 @@
-"""Serving launcher: continuous-batching engine over the AB-Sparse decode
-path with synthetic request traffic.
+"""Serving launcher: scheduler-driven continuous-batching engine over the
+AB-Sparse decode path with synthetic request traffic.
+
+Requests are drawn from ``--prefix-groups`` system-prompt groups: every
+request in a group shares a ``--prefix-len``-token prompt prefix, so the
+radix prefix cache (page-granular KV reuse) and chunked prefill both get
+exercised.  The run ends with the engine's lifecycle-metrics snapshot
+(TTFT/TPOT, prefix-hit rate, preemptions) and a page-leak audit.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --smoke \
         --requests 8 --max-batch 4
@@ -26,6 +32,13 @@ def main():
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-context", type=int, default=1024)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--prefix-groups", type=int, default=2,
+                    help="distinct shared system prompts (0 disables)")
+    ap.add_argument("--prefix-len", type=int, default=128,
+                    help="shared prefix length in tokens (page-aligned)")
+    ap.add_argument("--prefill-chunk", type=int, default=256)
+    ap.add_argument("--prefill-budget", type=int, default=512,
+                    help="prefill token budget per engine tick")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -34,14 +47,22 @@ def main():
     model = Transformer(cfg)
     params = model.init(jax.random.PRNGKey(0))
     eng = Engine(cfg, params, ServeConfig(
-        max_batch=args.max_batch, max_context=args.max_context))
+        max_batch=args.max_batch,
+        max_context=args.max_context,
+        prefill_chunk=args.prefill_chunk,
+        prefill_tokens_per_tick=args.prefill_budget,
+    ))
     rng = np.random.default_rng(0)
+    prefixes = [
+        rng.integers(0, cfg.vocab_size, args.prefix_len).astype(np.int32)
+        for _ in range(args.prefix_groups)
+    ]
     for rid in range(args.requests):
         plen = int(rng.integers(64, args.max_context // 2))
-        eng.submit(Request(
-            rid, rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
-            max_new_tokens=args.new_tokens,
-        ))
+        body = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+        if prefixes:
+            body = np.concatenate([prefixes[rid % len(prefixes)], body])
+        eng.submit(Request(rid, body, max_new_tokens=args.new_tokens))
     t0 = time.monotonic()
     done = eng.run_until_done()
     dt = time.monotonic() - t0
@@ -50,6 +71,12 @@ def main():
     print(f"served {len(done)} requests / {total} tokens in {dt:.1f}s "
           f"({total / dt:.1f} tok/s); sparse path: {plan.active} "
           f"(backend={plan.backend})")
+    print(f"metrics: {eng.metrics.format_snapshot()}")
+    eng.pool.assert_consistent()
+    cached = eng.prefix_cache.n_pages if eng.prefix_cache else 0
+    assert eng.pool.used_pages == cached, "page leak at drain"
+    print(f"pool: {eng.pool.used_pages}/{eng.pool.total_pages} pages held "
+          f"({cached} prefix-cache pins), accounting clean")
 
 
 if __name__ == "__main__":

@@ -522,6 +522,149 @@ class Transformer:
         cache["seq_len"] = jnp.full((B,), S_tot, jnp.int32)
         return logits, cache
 
+    # ------------------------------------------------------- chunked prefill
+
+    def supports_chunked_prefill(self) -> bool:
+        """Chunked prefill (and therefore prefix-cache KV reuse) currently
+        targets the homogeneous global-attention stack — the only pattern
+        the AB-Sparse decode path admits anyway."""
+        return self.plan.pattern == ("attn",) and self.plan.n_rest == 0
+
+    def prefill_chunk(
+        self,
+        params,
+        cache: Cache,
+        slot,                          # scalar int32: batch slot to fill
+        tokens: jax.Array,             # [C] int32, first n_valid are real
+        offset,                        # scalar int32: position of tokens[0]
+        n_valid,                       # scalar int32: real tokens in buffer
+    ) -> Tuple[jax.Array, Cache]:
+        """Process one prompt chunk of a single batch slot in place.
+
+        Writes the chunk's KV into rows ``[offset, offset + n_valid)`` of
+        the slot's cache and attends each chunk query to the already-written
+        prefix plus the causal part of the chunk — so a prompt can be
+        prefilled across many engine ticks, interleaved with decode steps
+        for the rest of the batch.  Padding rows (``>= n_valid``) produce
+        out-of-bounds scatter indices and are dropped; chunk buffers keep a
+        single compiled shape.  Centroid-store rows are NOT maintained here:
+        call :meth:`refresh_slot_store` once after the final chunk.
+
+        -> ``(logits [vocab] at the last valid position, cache)``.
+        Chunk boundaries don't change per-position numerics: attention
+        reduces over the full cache row axis whatever the chunking, so a
+        prefix installed from the cache + suffix chunks reproduces a
+        monolithic chunked run bit-for-bit (the prefix-sharing acceptance
+        property).
+        """
+        assert self.supports_chunked_prefill()
+        cfg = self.cfg
+        C = tokens.shape[0]
+        x = params["embed"][tokens][None]                 # [1, C, d]
+        rel = jnp.arange(C)
+        positions = (offset + rel)[None]                  # [1, C]
+        valid = rel < n_valid
+        S_max = cache["pos0"]["k"].shape[3]
+        # invalid rows scatter out of bounds -> dropped (JAX semantics).
+        write_pos = jnp.where(valid, offset + rel, S_max)
+
+        def run_layer(p, x, entry):
+            h = layers.rms_norm(p["norm1"], x, cfg.norm_eps)
+            q, k, v = layers.qkv_project(p["attn"], h, cfg, positions)
+            new_entry = dict(entry)
+            # mixed scalar/array advanced indices around the head slice put
+            # the broadcast (chunk) axis first: updates are [C, n_kv, hd].
+            k_cache = entry["k"].at[slot, :, write_pos].set(
+                k[0].astype(entry["k"].dtype)
+            )
+            v_cache = entry["v"].at[slot, :, write_pos].set(
+                v[0].astype(entry["v"].dtype)
+            )
+            new_entry["k"] = k_cache
+            new_entry["v"] = v_cache
+            # masked dense attention over the slot's rows: prefix + causal
+            # chunk.  Rows beyond offset+i are masked, so stale garbage
+            # past the live span never contributes.
+            kf = k_cache[slot].astype(jnp.float32)        # [n_kv, S, hd]
+            vf = v_cache[slot].astype(jnp.float32)
+            g = cfg.n_heads // cfg.n_kv_heads
+            hd = cfg.resolved_head_dim
+            qf = jnp.moveaxis(q, 1, 2)[0].reshape(
+                cfg.n_kv_heads, g, C, hd
+            ).astype(jnp.float32)
+            logits = jnp.einsum("hgcd,hsd->hgcs", qf, kf) / jnp.sqrt(
+                jnp.float32(hd)
+            )
+            mask = jnp.arange(S_max)[None, :] <= (offset + rel)[:, None]
+            logits = jnp.where(mask[None, None], logits, -1e30)
+            probs = jax.nn.softmax(logits, axis=-1)
+            attn = jnp.einsum("hgcs,hsd->hgcd", probs, vf)
+            attn = attn.reshape(cfg.n_heads, C, hd).astype(x.dtype)
+            h = layers.out_project(p["attn"], jnp.moveaxis(attn, 0, 1)[None], cfg)
+            x = x + h
+            h = layers.rms_norm(p["norm2"], x, cfg.norm_eps)
+            if cfg.moe is not None:
+                h, _ = moe_mod.moe_ffn(p["ffn"], h, cfg)
+            else:
+                h = layers.mlp(p["ffn"], h, cfg.activation)
+            return x + h, new_entry
+
+        def cycle_fn(x, xs):
+            cyc_params, cyc_cache, _ = xs
+            x, new_entry = run_layer(cyc_params["pos0"], x, cyc_cache["pos0"])
+            return x, {"pos0": new_entry}
+
+        cache = dict(cache)
+        if self.plan.n_cycles > 0:
+            x, new_cyc = jax.lax.scan(
+                cycle_fn,
+                x,
+                (
+                    params["cycles"],
+                    {"pos0": cache["pos0"]},
+                    jnp.arange(self.plan.n_cycles),
+                ),
+            )
+            cache["pos0"] = new_cyc["pos0"]
+        x = layers.rms_norm(params["final_norm"], x, cfg.norm_eps)
+        h_last = jnp.take(x[0], n_valid - 1, axis=0)      # last valid row
+        logits = self.unembed(params, h_last)
+        return logits, cache
+
+    def refresh_slot_store(self, cache: Cache, slot) -> Cache:
+        """Rebuild one slot's centroid-store rows from its K cache.
+
+        Chunked prefill writes K incrementally without maintaining the
+        store; this derives codes/scale/zero for the whole slot in one pass
+        once the prompt is complete (same ``prefill_store`` builder as
+        monolithic prefill, so the bytes are identical)."""
+        stk = cache.get("_layouts")
+        if stk is None:
+            return cache
+        cfg = self.cfg
+        offs_all = cache["_offsets"]
+        entry = cache["pos0"]
+        k_slot = entry["k"][:, slot]                      # [nc, n_kv, S, hd]
+
+        def one(carry, xs):
+            k_cyc, idx = xs
+            store = self.backend.prefill_store(
+                k_cyc[None], stk.layer(idx), offs_all[idx],
+                cfg.sparse, quant=cfg.sparse.quant,
+            )
+            return carry, (store.codes[0], store.scale[0], store.zero[0])
+
+        _, (codes, scale, zero) = jax.lax.scan(
+            one, None, (k_slot, jnp.arange(self.plan.n_cycles))
+        )
+        entry = dict(entry)
+        entry["codes"] = entry["codes"].at[:, slot].set(codes)
+        entry["scale"] = entry["scale"].at[:, slot].set(scale)
+        entry["zero"] = entry["zero"].at[:, slot].set(zero)
+        cache = dict(cache)
+        cache["pos0"] = entry
+        return cache
+
     def _rglru_final_state(self, p, h_in):
         """Final (h, conv-tail) after a full-sequence pass (for decode)."""
         gate = jax.nn.gelu(layers.dense(p["in_gelu"], h_in), approximate=True)

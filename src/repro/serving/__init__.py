@@ -1,5 +1,15 @@
-"""Serving engine: continuous batching over jit'd prefill/decode steps,
-top-k/top-p sampling, page-pool admission control."""
-from repro.serving.engine import Engine, Request
+"""Serving subsystem: scheduler (chunked prefill, prefix-sharing admission,
+preemption), continuous-batching engine, sampling, lifecycle metrics."""
+from repro.serving.engine import Engine, EngineStalled
+from repro.serving.metrics import RequestMetrics, ServingMetrics
+from repro.serving.scheduler import Request, Scheduler, SeqState
 
-__all__ = ["Engine", "Request"]
+__all__ = [
+    "Engine",
+    "EngineStalled",
+    "Request",
+    "RequestMetrics",
+    "Scheduler",
+    "SeqState",
+    "ServingMetrics",
+]

@@ -1,12 +1,24 @@
 """Continuous-batching serving engine.
 
-Slot-based batching over the jit'd model steps: the decode cache holds
-``max_batch`` sequence slots; requests are admitted into free slots (gated
-by page-pool accounting), prefilled individually (chunk-wise), scattered
-into the batch cache, then advance together through one jit'd
-``decode_step`` per engine tick.  Finished sequences retire and free their
-slot+pages immediately — new requests join mid-flight (continuous
-batching).
+The engine owns the device state (batched decode cache, jit'd model steps,
+sampling) and executes what the :class:`~repro.serving.scheduler.Scheduler`
+decides each tick:
+
+1. **admit** waiting requests into free slots (page-pool gated); a prompt
+   whose page-aligned prefix hits the radix prefix cache gets the cached KV
+   pages installed directly into its slot — that span is never prefilled.
+2. **prefill chunks** — ``prefill_tokens_per_tick`` worth of prompt tokens,
+   written straight into the batch cache via ``Transformer.prefill_chunk``
+   so long prompts interleave with decode instead of stalling the batch.
+   When a prompt completes, its centroid store is rebuilt in one pass and
+   its full prompt pages are inserted into the prefix cache.
+3. **decode** — one jit'd ``decode_step`` over the whole batch; only slots
+   in the decode state consume the sampled tokens.  The host-side sequence
+   lengths are authoritative: prefilling slots ignore the batched step's
+   garbage writes (their rows are overwritten by the next chunk).
+4. **retire / preempt** — finished sequences free their pages (shared
+   prefix pages survive in the cache); on pool exhaustion the newest
+   running sequence is preempted and re-queued with its output preserved.
 
 AB-Sparse is transparent here: the decode step internally runs
 estimation -> adaptive top-k -> paged attention when the model's sparse
@@ -14,9 +26,8 @@ config is enabled for the engine's max_context.
 """
 from __future__ import annotations
 
-import itertools
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+import time
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,20 +35,23 @@ import numpy as np
 
 from repro.config import ModelConfig, ServeConfig
 from repro.cache.paged_kv import PagePool
+from repro.cache.prefix_cache import PrefixCache
 from repro.models import Transformer
+from repro.serving.metrics import ServingMetrics
 from repro.serving.sampler import sample
+from repro.serving.scheduler import (
+    AdmitDecision,
+    ChunkPlan,
+    DECODE,
+    PREFILL,
+    Request,
+    Scheduler,
+    SeqState,
+)
 
 
-@dataclass
-class Request:
-    req_id: int
-    prompt: np.ndarray                  # [S] int32
-    max_new_tokens: int = 32
-    eos_token: Optional[int] = None
-    prefix_emb: Optional[np.ndarray] = None
-    # filled by the engine:
-    output: List[int] = field(default_factory=list)
-    done: bool = False
+class EngineStalled(RuntimeError):
+    """``run_until_done`` exhausted its tick budget with work still queued."""
 
 
 class Engine:
@@ -47,6 +61,7 @@ class Engine:
         params,
         serve_cfg: ServeConfig,
         seed: int = 0,
+        clock: Callable[[], float] = time.monotonic,
     ):
         """Batch capacity and context length come from ``serve_cfg``
         (``ServeConfig.max_batch`` / ``ServeConfig.max_context``) — the
@@ -58,19 +73,39 @@ class Engine:
         self.serve = serve_cfg
         self.model = Transformer(model_cfg)
         self.params = params
+        default_pages = self.max_batch * (
+            self.max_context // self.serve.page_size
+        )
         self.pool = PagePool(
-            total_pages=self.max_batch
-            * (self.max_context // self.serve.page_size),
+            total_pages=serve_cfg.pool_pages or default_pages,
             page_size=self.serve.page_size,
         )
         self.key = jax.random.PRNGKey(seed)
 
         self.cache = self.model.init_cache(self.max_batch, self.max_context)
-        self.slots: List[Optional[Request]] = [None] * self.max_batch
-        self.queue: List[Request] = []
+        self.slots: List[Optional[SeqState]] = [None] * self.max_batch
         self.finished: List[Request] = []
+        self.metrics = ServingMetrics(clock=clock)
+        self._chunkable = (
+            serve_cfg.prefill_chunk > 0
+            and self.model.supports_chunked_prefill()
+        )
+        self.prefix_cache = (
+            PrefixCache(self.pool)
+            if (serve_cfg.enable_prefix_cache and self._chunkable)
+            else None
+        )
+        self.scheduler = Scheduler(
+            serve_cfg, self.pool, self.prefix_cache, self.metrics,
+            chunkable=self._chunkable,
+        )
         self._decode = jax.jit(self.model.decode_step)
+        self._chunk = jax.jit(self.model.prefill_chunk)
+        self._refresh = jax.jit(self.model.refresh_slot_store)
+        self._chunk_len = min(serve_cfg.prefill_chunk, self.max_context)
         self._tokens_buf = np.zeros((self.max_batch,), np.int32)
+        #: authoritative per-slot sequence lengths (tokens with KV in cache).
+        self._seq_len = np.zeros((self.max_batch,), np.int32)
 
     @property
     def max_batch(self) -> int:
@@ -80,32 +115,73 @@ class Engine:
     def max_context(self) -> int:
         return self.serve.max_context
 
+    @property
+    def queue(self) -> List[Request]:
+        """Waiting requests (scheduler view), oldest first."""
+        return [s.req for s in self.scheduler.waiting]
+
     # -- admission -----------------------------------------------------------
 
     def submit(self, req: Request):
-        self.queue.append(req)
+        if len(req.prompt) + req.max_new_tokens > self.max_context:
+            raise ValueError(
+                f"request {req.req_id}: prompt {len(req.prompt)} + "
+                f"{req.max_new_tokens} new tokens exceeds max_context "
+                f"{self.max_context}"
+            )
+        self.scheduler.submit(req)
 
-    def _free_slot(self) -> Optional[int]:
-        for i, s in enumerate(self.slots):
-            if s is None:
-                return i
-        return None
+    def _install(self, adm: AdmitDecision):
+        """Occupy the slot; copy prefix-cache KV pages into its rows."""
+        seq = adm.seq
+        self.slots[adm.slot] = seq
+        self._seq_len[adm.slot] = adm.prefix_tokens
+        self._tokens_buf[adm.slot] = 0
+        if adm.prefix_tokens:
+            entry = dict(self.cache["pos0"])
+            k = jnp.asarray(
+                np.concatenate([kv["k"] for kv in adm.prefix_kv], axis=2)
+            )
+            v = jnp.asarray(
+                np.concatenate([kv["v"] for kv in adm.prefix_kv], axis=2)
+            )
+            L = adm.prefix_tokens
+            entry["k"] = entry["k"].at[:, adm.slot, :, :L].set(
+                k.astype(entry["k"].dtype)
+            )
+            entry["v"] = entry["v"].at[:, adm.slot, :, :L].set(
+                v.astype(entry["v"].dtype)
+            )
+            self.cache = dict(self.cache)
+            self.cache["pos0"] = entry
 
-    def _admit(self):
-        while self.queue:
-            slot = self._free_slot()
-            if slot is None:
-                return
-            req = self.queue[0]
-            total = len(req.prompt) + req.max_new_tokens
-            if not self.pool.can_admit(total):
-                return  # head-of-line blocking; FCFS admission
-            self.queue.pop(0)
-            self.pool.allocate(req.req_id, total)
-            self._prefill_into_slot(req, slot)
+    # -- prefill -------------------------------------------------------------
 
-    def _prefill_into_slot(self, req: Request, slot: int):
-        tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+    def _run_chunk(self, ch: ChunkPlan):
+        seq = ch.seq
+        if seq.state != PREFILL:      # preempted after planning
+            return
+        if not self.scheduler._seq_chunkable(seq):
+            self._prefill_monolithic(seq)
+            return
+        n = len(ch.tokens)
+        buf = np.zeros((self._chunk_len,), np.int32)
+        buf[:n] = ch.tokens
+        logits, self.cache = self._chunk(
+            self.params, self.cache, np.int32(seq.slot), buf,
+            np.int32(ch.offset), np.int32(n),
+        )
+        self._seq_len[seq.slot] = ch.offset + n
+        self.metrics.on_prefill(n)
+        if ch.is_last:
+            self._finish_prefill(seq, logits[None])
+
+    def _prefill_monolithic(self, seq: SeqState):
+        """Fallback for models without chunked-prefill support (recurrent /
+        local-attention stacks) and prefix-embedding requests: single-shot
+        prefill, scattered into the batch slot."""
+        req = seq.req
+        tokens = jnp.asarray(seq.prefill_tokens, jnp.int32)[None]
         prefix = (
             jnp.asarray(req.prefix_emb)[None]
             if req.prefix_emb is not None
@@ -114,6 +190,8 @@ class Engine:
         logits, cache1 = self.model.prefill(
             self.params, tokens, prefix, max_context=self.max_context
         )
+        slot = seq.slot
+
         # scatter the single-sequence cache into this batch slot
         def scatter(dst, src):
             if not isinstance(dst, jnp.ndarray) or dst.ndim == 0:
@@ -129,55 +207,152 @@ class Engine:
                     )
             return dst
 
-        a, b = self.cache, cache1
         self.cache = jax.tree.map(
-            scatter, a, b,
+            scatter, self.cache, cache1,
             is_leaf=lambda x: isinstance(x, jnp.ndarray),
         )
-        self.slots[slot] = req
-        self.key, k = jax.random.split(self.key)
-        first = sample(
-            k, logits, self.serve.temperature, self.serve.top_k, self.serve.top_p
-        )
-        req.output.append(int(first[0]))
-        self._tokens_buf[slot] = int(first[0])
+        self._seq_len[slot] = seq.n_prefill
+        self.metrics.on_prefill(seq.n_prefill)
+        self._finish_prefill(seq, logits)
+
+    def _finish_prefill(self, seq: SeqState, logits: jax.Array):
+        """Prompt complete: rebuild the slot's centroid store, publish the
+        prompt's pages to the prefix cache, emit the first token."""
+        if self.scheduler._seq_chunkable(seq):
+            if self.model.use_sparse(self.max_context):
+                self.cache = self._refresh(
+                    self.cache, np.int32(seq.slot)
+                )
+            if self.prefix_cache is not None:
+                tokens = seq.prefill_tokens
+                n_pages = len(tokens) // self.pool.page_size
+                if n_pages:
+                    pages = self.pool.table(seq.seq_id).physical[:n_pages]
+                    self.prefix_cache.insert(
+                        tokens, pages, self._page_snapshot_fn(seq.slot, n_pages)
+                    )
+        if seq.resume_token is not None:
+            tok = seq.resume_token          # resumed: replay, don't re-sample
+            seq.resume_token = None
+        else:
+            self.key, k = jax.random.split(self.key)
+            first = sample(
+                k, logits, self.serve.temperature,
+                self.serve.top_k, self.serve.top_p,
+            )
+            tok = int(first[0])
+            seq.req.output.append(tok)
+            self.metrics.on_first_token(seq.seq_id)
+            self.metrics.on_decode_token(seq.seq_id)
+        self._tokens_buf[seq.slot] = tok
+        seq.state = DECODE
+        if self._is_finished(seq):
+            self._retire(seq)
+
+    def _page_snapshot_fn(self, slot: int, n_pages: int):
+        """Lazy host snapshot of one slot's prompt-span KV, sliced per page
+        (pulled from device once, only if the insert adds new chunks)."""
+        ps = self.pool.page_size
+        memo = {}
+
+        def fn(i: int):
+            if not memo:
+                entry = self.cache["pos0"]
+                memo["k"] = np.asarray(entry["k"][:, slot, :, : n_pages * ps])
+                memo["v"] = np.asarray(entry["v"][:, slot, :, : n_pages * ps])
+            return {
+                "k": memo["k"][:, :, i * ps : (i + 1) * ps],
+                "v": memo["v"][:, :, i * ps : (i + 1) * ps],
+            }
+
+        return fn
 
     # -- decode tick -----------------------------------------------------------
 
-    def step(self) -> int:
-        """One engine tick: admit, batched decode, sample, retire.
-        Returns the number of active sequences."""
-        self._admit()
-        active = [i for i, s in enumerate(self.slots) if s is not None]
+    def _is_finished(self, seq: SeqState) -> bool:
+        out = seq.req.output
+        hit_eos = (
+            seq.req.eos_token is not None
+            and out
+            and out[-1] == seq.req.eos_token
+        )
+        return len(out) >= seq.req.max_new_tokens or bool(hit_eos)
+
+    def _retire(self, seq: SeqState):
+        self.scheduler.retire(seq)
+        self.slots[seq.slot] = None
+        self._seq_len[seq.slot] = 0
+        seq.req.done = True
+        self.finished.append(seq.req)
+        seq.slot = -1
+
+    def _decode_tick(self):
+        active = [
+            s for s in self.slots if s is not None and s.state == DECODE
+        ]
         if not active:
-            return 0
-        tokens = jnp.asarray(self._tokens_buf)
-        logits, self.cache = self._decode(self.params, self.cache, tokens)
+            return
+        self.cache = dict(self.cache)
+        self.cache["seq_len"] = jnp.asarray(self._seq_len)
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self._tokens_buf)
+        )
         self.key, k = jax.random.split(self.key)
         next_tokens = sample(
-            k, logits, self.serve.temperature, self.serve.top_k, self.serve.top_p
+            k, logits, self.serve.temperature,
+            self.serve.top_k, self.serve.top_p,
         )
         nt = np.asarray(next_tokens)
-        for i in active:
-            req = self.slots[i]
-            tok = int(nt[i])
-            req.output.append(tok)
-            self._tokens_buf[i] = tok
-            hit_eos = req.eos_token is not None and tok == req.eos_token
-            if len(req.output) >= req.max_new_tokens or hit_eos:
-                req.done = True
-                self.pool.free(req.req_id)
-                self.slots[i] = None
-                self.finished.append(req)
+        for seq in active:
+            slot = seq.slot
+            tok = int(nt[slot])
+            seq.req.output.append(tok)
+            self._tokens_buf[slot] = tok
+            self._seq_len[slot] += 1
+            self.metrics.on_decode_token(seq.seq_id)
+            if self._is_finished(seq):
+                self._retire(seq)
+        # host lengths are authoritative (the batched step incremented
+        # every slot, including ones still prefilling).
+        self.cache = dict(self.cache)
+        self.cache["seq_len"] = jnp.asarray(self._seq_len)
+
+    def step(self) -> int:
+        """One engine tick: admit, prefill chunks, decode, retire.
+        Returns the number of occupied slots."""
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        plan = self.scheduler.plan_tick(free)
+        for adm in plan.admitted:
+            self._install(adm)
+        for ch in plan.chunks:
+            self._run_chunk(ch)
+        decoding = [
+            s for s in self.slots if s is not None and s.state == DECODE
+        ]
+        for seq in self.scheduler.prepare_decode(decoding):
+            self.slots[seq.slot] = None
+            self._seq_len[seq.slot] = 0
+            seq.slot = -1
+        self._decode_tick()
+        self.metrics.ticks += 1
         return len([s for s in self.slots if s is not None])
 
     def run_until_done(self, max_ticks: int = 10_000) -> List[Request]:
         """Tick until queue and slots drain; -> the requests retired DURING
         this call, in retirement order (a copy — the engine's cumulative
-        record stays in ``self.finished``)."""
+        record stays in ``self.finished``).  Raises :class:`EngineStalled`
+        if ``max_ticks`` elapse with work still pending — a partial result
+        must not masquerade as success."""
         start = len(self.finished)
         for _ in range(max_ticks):
             self.step()
-            if not self.queue and all(s is None for s in self.slots):
+            if not self.scheduler.has_work:
                 break
+        else:
+            if self.scheduler.has_work:
+                raise EngineStalled(
+                    f"max_ticks={max_ticks} exhausted with "
+                    f"{len(self.scheduler.waiting)} queued and "
+                    f"{len(self.scheduler.running)} running requests"
+                )
         return list(self.finished[start:])

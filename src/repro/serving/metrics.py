@@ -1,0 +1,166 @@
+"""Request-lifecycle metrics for the serving scheduler.
+
+Per-request timeline (submit -> admit -> first token -> finish) plus fleet
+counters (prefill tokens computed vs. skipped via the prefix cache,
+preemptions, decode tokens).  The clock is injectable so engine tests can
+drive a deterministic virtual clock; production uses ``time.monotonic``.
+
+Latency definitions (the standard serving ones):
+- TTFT  = first-token time - submit time (includes queueing),
+- TPOT  = (finish - first token) / (output tokens - 1),
+- queue = first admission time - submit time.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+
+@dataclass
+class RequestMetrics:
+    req_id: int
+    prompt_tokens: int = 0
+    output_tokens: int = 0
+    #: prompt tokens whose prefill was skipped via the prefix cache
+    #: (accumulated across re-admissions after preemption).
+    prefix_hit_tokens: int = 0
+    preemptions: int = 0
+    t_submit: Optional[float] = None
+    t_admit: Optional[float] = None          # first admission
+    t_first_token: Optional[float] = None
+    t_finish: Optional[float] = None
+
+    @property
+    def queue_time(self) -> Optional[float]:
+        if self.t_admit is None or self.t_submit is None:
+            return None
+        return self.t_admit - self.t_submit
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.t_first_token is None or self.t_submit is None:
+            return None
+        return self.t_first_token - self.t_submit
+
+    @property
+    def tpot(self) -> Optional[float]:
+        if self.t_finish is None or self.t_first_token is None:
+            return None
+        if self.output_tokens <= 1:
+            return 0.0
+        return (self.t_finish - self.t_first_token) / (self.output_tokens - 1)
+
+
+def _pct(xs: List[float], q: float) -> float:
+    """Nearest-rank percentile (no numpy dependency for a hot-path-free
+    bookkeeping module would be overkill — keep it simple)."""
+    xs = sorted(xs)
+    idx = min(len(xs) - 1, max(0, int(round(q * (len(xs) - 1)))))
+    return xs[idx]
+
+
+class ServingMetrics:
+    """Engine-level metrics recorder + aggregate snapshot."""
+
+    def __init__(self, clock: Callable[[], float] = time.monotonic):
+        self.clock = clock
+        self.requests: Dict[int, RequestMetrics] = {}
+        self.ticks = 0
+        self.prefill_tokens_computed = 0
+        self.prefix_hit_tokens = 0
+        self.decode_tokens = 0
+        self.preemptions = 0
+
+    def _req(self, req_id: int) -> RequestMetrics:
+        return self.requests.setdefault(req_id, RequestMetrics(req_id))
+
+    # -- lifecycle events ----------------------------------------------------
+
+    def on_submit(self, req_id: int, prompt_tokens: int):
+        r = self._req(req_id)
+        r.prompt_tokens = prompt_tokens
+        if r.t_submit is None:
+            r.t_submit = self.clock()
+
+    def on_admit(self, req_id: int, prefix_hit_tokens: int = 0):
+        r = self._req(req_id)
+        if r.t_admit is None:
+            r.t_admit = self.clock()
+        r.prefix_hit_tokens += prefix_hit_tokens
+        self.prefix_hit_tokens += prefix_hit_tokens
+
+    def on_prefill(self, n_tokens: int):
+        self.prefill_tokens_computed += n_tokens
+
+    def on_first_token(self, req_id: int):
+        r = self._req(req_id)
+        if r.t_first_token is None:
+            r.t_first_token = self.clock()
+
+    def on_decode_token(self, req_id: int):
+        self._req(req_id).output_tokens += 1
+        self.decode_tokens += 1
+
+    def on_preempt(self, req_id: int):
+        self._req(req_id).preemptions += 1
+        self.preemptions += 1
+
+    def on_finish(self, req_id: int):
+        self._req(req_id).t_finish = self.clock()
+
+    # -- aggregation ---------------------------------------------------------
+
+    def snapshot(self) -> Dict[str, float]:
+        """Aggregate view over finished requests (plus fleet counters)."""
+        done = [r for r in self.requests.values() if r.t_finish is not None]
+        ttfts = [r.ttft for r in done if r.ttft is not None]
+        tpots = [r.tpot for r in done if r.tpot is not None]
+        queues = [r.queue_time for r in done if r.queue_time is not None]
+        # hit rate over the same fleet counters as the token fields, so a
+        # mid-run snapshot is self-consistent: every prompt token either
+        # came from the prefix cache or was prefill-computed.
+        processed = self.prefix_hit_tokens + self.prefill_tokens_computed
+        snap: Dict[str, float] = {
+            "requests_finished": len(done),
+            "ticks": self.ticks,
+            "prefill_tokens_computed": self.prefill_tokens_computed,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "decode_tokens": self.decode_tokens,
+            "preemptions": self.preemptions,
+            "prefix_hit_rate": (
+                self.prefix_hit_tokens / processed if processed else 0.0
+            ),
+        }
+        if ttfts:
+            snap["ttft_mean"] = sum(ttfts) / len(ttfts)
+            snap["ttft_p50"] = _pct(ttfts, 0.50)
+            snap["ttft_p95"] = _pct(ttfts, 0.95)
+        if tpots:
+            snap["tpot_mean"] = sum(tpots) / len(tpots)
+            snap["tpot_p95"] = _pct(tpots, 0.95)
+        if queues:
+            snap["queue_time_mean"] = sum(queues) / len(queues)
+        return snap
+
+    def format_snapshot(self) -> str:
+        snap = self.snapshot()
+        parts = [
+            f"finished={snap['requests_finished']:.0f}",
+            f"ticks={snap['ticks']:.0f}",
+            f"prefill_computed={snap['prefill_tokens_computed']:.0f}tok",
+            f"prefix_hits={snap['prefix_hit_tokens']:.0f}tok "
+            f"({100 * snap['prefix_hit_rate']:.1f}%)",
+            f"decode={snap['decode_tokens']:.0f}tok",
+            f"preemptions={snap['preemptions']:.0f}",
+        ]
+        if "ttft_p50" in snap:
+            parts.append(
+                f"ttft p50/p95={snap['ttft_p50'] * 1e3:.0f}/"
+                f"{snap['ttft_p95'] * 1e3:.0f}ms"
+            )
+        if "tpot_mean" in snap:
+            parts.append(f"tpot={snap['tpot_mean'] * 1e3:.1f}ms")
+        if "queue_time_mean" in snap:
+            parts.append(f"queue={snap['queue_time_mean'] * 1e3:.0f}ms")
+        return "  ".join(parts)

@@ -1,0 +1,286 @@
+"""Serving scheduler: admission, chunked prefill, preemption.
+
+The :class:`Scheduler` owns the request lifecycle
+(``queued -> prefill -> decode -> finished``, with ``preempted`` looping
+back to ``queued``) and all policy; the :class:`~repro.serving.engine.Engine`
+executes its decisions against the jit'd model steps.  Per tick it emits a
+:class:`TickPlan`:
+
+- **admission** — FCFS over the waiting queue into free batch slots, gated
+  by page-pool accounting.  Prompts are matched against the radix prefix
+  cache first: the shared page-aligned prefix is ``fork``'d (refcounted,
+  zero prefill compute) and only the divergent suffix needs fresh pages
+  (prefix-cache eviction is tried before giving up).
+- **chunked prefill** — a token budget per tick
+  (``ServeConfig.prefill_tokens_per_tick``) is spread FCFS over prefilling
+  sequences in ``prefill_chunk``-sized chunks, so a long prompt no longer
+  stalls the running decode batch between chunks.
+- **preemption** — before each decode tick every decoding sequence gets a
+  page reservation for its next token; on exhaustion the latest-arrival
+  running sequence is preempted: pages freed, generated output preserved,
+  and the request re-queued (its continuation is re-prefilled — and
+  typically re-matched against the prefix cache — on re-admission).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.cache.paged_kv import PagePool, PoolExhausted
+from repro.cache.prefix_cache import PrefixCache
+from repro.config import ServeConfig
+from repro.serving.metrics import ServingMetrics
+
+
+@dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray                  # [S] int32
+    max_new_tokens: int = 32
+    eos_token: Optional[int] = None
+    prefix_emb: Optional[np.ndarray] = None
+    # filled by the engine:
+    output: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+QUEUED, PREFILL, DECODE, FINISHED = "queued", "prefill", "decode", "finished"
+
+
+@dataclass
+class SeqState:
+    """Scheduler-side bookkeeping for one request."""
+
+    req: Request
+    arrival: int                        # admission priority (FCFS)
+    state: str = QUEUED
+    slot: int = -1
+    #: the token span to prefill this admission: the prompt, extended with
+    #: already-generated output after a preemption (recompute-style resume).
+    prefill_tokens: np.ndarray = None   # type: ignore[assignment]
+    #: tokens of ``prefill_tokens`` whose KV is in the cache slot.
+    prefilled: int = 0
+    #: prefix-cache tokens installed at this admission (skipped compute).
+    prefix_tokens: int = 0
+    #: pending next input token after a resume (the last sampled token,
+    #: whose KV is not in the cache yet) — replaces first-token sampling.
+    resume_token: Optional[int] = None
+
+    def __post_init__(self):
+        if self.prefill_tokens is None:
+            self.prefill_tokens = np.asarray(self.req.prompt, np.int32)
+
+    @property
+    def seq_id(self) -> int:
+        return self.req.req_id
+
+    @property
+    def n_prefill(self) -> int:
+        return len(self.prefill_tokens)
+
+    @property
+    def prefill_done(self) -> bool:
+        return self.prefilled >= self.n_prefill
+
+
+@dataclass
+class AdmitDecision:
+    seq: SeqState
+    slot: int
+    prefix_tokens: int                  # page-aligned prefix-cache hit span
+    prefix_kv: List[Any]                # host KV snapshots, one per page
+
+
+@dataclass
+class ChunkPlan:
+    seq: SeqState
+    offset: int                         # absolute position of tokens[0]
+    tokens: np.ndarray                  # [n] the chunk (unpadded)
+    is_last: bool                       # prefill completes with this chunk
+
+
+@dataclass
+class TickPlan:
+    admitted: List[AdmitDecision]
+    chunks: List[ChunkPlan]
+
+
+class Scheduler:
+    def __init__(
+        self,
+        serve: ServeConfig,
+        pool: PagePool,
+        prefix_cache: Optional[PrefixCache],
+        metrics: ServingMetrics,
+        chunkable: bool = True,
+    ):
+        self.serve = serve
+        self.pool = pool
+        self.prefix_cache = prefix_cache
+        self.metrics = metrics
+        #: model supports incremental (chunked) prefill into a batch slot;
+        #: without it prompts prefill monolithically and prefix reuse is off.
+        self.chunkable = chunkable
+        self.waiting: List[SeqState] = []
+        self.running: Dict[int, SeqState] = {}
+        self._arrival = itertools.count()
+
+    # -- intake --------------------------------------------------------------
+
+    def submit(self, req: Request) -> SeqState:
+        worst = self.pool.pages_for(len(req.prompt) + req.max_new_tokens)
+        if worst > self.pool.total_pages:
+            raise ValueError(
+                f"request {req.req_id} can never fit: needs {worst} pages, "
+                f"pool has {self.pool.total_pages}"
+            )
+        seq = SeqState(req, next(self._arrival))
+        self.waiting.append(seq)
+        self.metrics.on_submit(req.req_id, len(req.prompt))
+        return seq
+
+    def _requeue(self, seq: SeqState):
+        """Re-insert preserving arrival (FCFS) order."""
+        i = 0
+        while i < len(self.waiting) and self.waiting[i].arrival < seq.arrival:
+            i += 1
+        self.waiting.insert(i, seq)
+
+    def _seq_chunkable(self, seq: SeqState) -> bool:
+        return self.chunkable and seq.req.prefix_emb is None
+
+    # -- per-tick planning ---------------------------------------------------
+
+    def plan_tick(self, free_slots: Sequence[int]) -> TickPlan:
+        return TickPlan(self._admit(list(free_slots)), self._plan_chunks())
+
+    def _admit(self, free_slots: List[int]) -> List[AdmitDecision]:
+        out: List[AdmitDecision] = []
+        while self.waiting and free_slots:
+            seq = self.waiting[0]
+            tokens = seq.prefill_tokens
+            matched, pages, kvs = 0, [], []
+            if self.prefix_cache is not None and self._seq_chunkable(seq):
+                # leave >= 1 suffix token so prefill produces logits for
+                # the first sampled token.
+                matched, pages, kvs = self.prefix_cache.match(
+                    tokens, max_tokens=len(tokens) - 1
+                )
+            need_fresh = self.pool.pages_for(len(tokens)) - len(pages)
+            if need_fresh > self.pool.free_pages:
+                ok = self.prefix_cache is not None and (
+                    self.prefix_cache.evict_for(need_fresh, protect=pages)
+                )
+                if not ok:
+                    break  # FCFS head-of-line admission control
+            self.pool.fork(seq.seq_id, pages, len(tokens))
+            self.waiting.pop(0)
+            seq.state = PREFILL
+            seq.slot = free_slots.pop(0)
+            seq.prefilled = matched
+            seq.prefix_tokens = matched
+            self.running[seq.seq_id] = seq
+            self.metrics.on_admit(seq.seq_id, matched)
+            out.append(AdmitDecision(seq, seq.slot, matched, kvs))
+        return out
+
+    def _plan_chunks(self) -> List[ChunkPlan]:
+        budget = self.serve.prefill_tokens_per_tick
+        chunks: List[ChunkPlan] = []
+        prefilling = sorted(
+            (s for s in self.running.values() if s.state == PREFILL),
+            key=lambda s: s.arrival,
+        )
+        for seq in prefilling:
+            if not self._seq_chunkable(seq):
+                # monolithic fallback: the whole remaining prompt as one
+                # chunk (still budget-charged so it throttles later peers).
+                if budget <= 0:
+                    break
+                n = seq.n_prefill - seq.prefilled
+                chunks.append(ChunkPlan(
+                    seq, seq.prefilled,
+                    seq.prefill_tokens[seq.prefilled:], True,
+                ))
+                seq.prefilled = seq.n_prefill
+                budget -= n
+                continue
+            while budget > 0 and not seq.prefill_done:
+                n = min(
+                    self.serve.prefill_chunk,
+                    seq.n_prefill - seq.prefilled,
+                    budget,
+                )
+                chunks.append(ChunkPlan(
+                    seq, seq.prefilled,
+                    seq.prefill_tokens[seq.prefilled : seq.prefilled + n],
+                    seq.prefilled + n >= seq.n_prefill,
+                ))
+                seq.prefilled += n
+                budget -= n
+            if budget <= 0:
+                break
+        return chunks
+
+    # -- decode capacity / preemption ----------------------------------------
+
+    def prepare_decode(self, decode: Sequence[SeqState]) -> List[SeqState]:
+        """Reserve one more token of page capacity for every decoding
+        sequence (oldest first); preempt latest arrivals on exhaustion.
+        -> the preempted sequences (engine must clear their slots)."""
+        preempted: List[SeqState] = []
+        for seq in sorted(decode, key=lambda s: s.arrival):
+            if seq.state != DECODE:      # preempted by an earlier iteration
+                continue
+            while True:
+                try:
+                    self.pool.extend(seq.seq_id, 1)
+                    break
+                except PoolExhausted:
+                    if self.prefix_cache is not None and (
+                        self.prefix_cache.evict_for(1)
+                    ):
+                        continue
+                    victim = max(
+                        self.running.values(), key=lambda s: s.arrival
+                    )
+                    self._preempt(victim)
+                    preempted.append(victim)
+                    if victim is seq:
+                        break
+        return preempted
+
+    def _preempt(self, seq: SeqState):
+        self.pool.free(seq.seq_id)
+        del self.running[seq.seq_id]
+        out = seq.req.output
+        if out:
+            # KV exists for prompt + output[:-1]; the last sampled token is
+            # the pending next input — replay it on resume, don't re-sample.
+            seq.prefill_tokens = np.concatenate(
+                [np.asarray(seq.req.prompt, np.int32),
+                 np.asarray(out[:-1], np.int32)]
+            )
+            seq.resume_token = int(out[-1])
+        seq.state = QUEUED
+        seq.prefilled = 0
+        seq.prefix_tokens = 0
+        self._requeue(seq)
+        self.metrics.on_preempt(seq.seq_id)
+
+    # -- retirement ----------------------------------------------------------
+
+    def retire(self, seq: SeqState):
+        self.pool.free(seq.seq_id)
+        del self.running[seq.seq_id]
+        seq.state = FINISHED
+        self.metrics.on_finish(seq.seq_id)
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)

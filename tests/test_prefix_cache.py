@@ -1,0 +1,230 @@
+"""Radix prefix index + refcounted page-pool sharing invariants."""
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - fallback: deterministic examples
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.cache.paged_kv import PagePool, PoolExhausted
+from repro.cache.prefix_cache import PrefixCache
+
+PS = 16
+
+
+def _tokens(*chunks):
+    """Build a prompt from per-page chunk ids: chunk c -> tokens [c*PS..)."""
+    out = []
+    for c in chunks:
+        out.extend(range(c * PS, c * PS + PS))
+    return np.asarray(out, np.int32)
+
+
+def _kv(i):
+    return {"page": i}
+
+
+def test_match_empty_cache_misses():
+    pool = PagePool(16)
+    cache = PrefixCache(pool)
+    n, pages, kvs = cache.match(_tokens(1, 2))
+    assert n == 0 and pages == [] and kvs == []
+
+
+def test_insert_then_match_longest_prefix():
+    pool = PagePool(16)
+    cache = PrefixCache(pool)
+    t = pool.allocate(1, 4 * PS)
+    cache.insert(_tokens(0, 1, 2), t.physical[:3], _kv)
+    assert cache.n_pages == 3
+    # full hit
+    n, pages, _ = cache.match(_tokens(0, 1, 2))
+    assert n == 3 * PS and pages == t.physical[:3]
+    # partial hit: diverges at chunk 2
+    n, pages, _ = cache.match(_tokens(0, 1, 9))
+    assert n == 2 * PS and pages == t.physical[:2]
+    # divergence at chunk 0
+    n, _, _ = cache.match(_tokens(5))
+    assert n == 0
+
+
+def test_match_respects_max_tokens_cap():
+    pool = PagePool(16)
+    cache = PrefixCache(pool)
+    t = pool.allocate(1, 3 * PS)
+    cache.insert(_tokens(0, 1, 2), t.physical, _kv)
+    # cap below a full match: leaves the last chunk unmatched
+    n, pages, _ = cache.match(_tokens(0, 1, 2), max_tokens=3 * PS - 1)
+    assert n == 2 * PS and len(pages) == 2
+
+
+def test_insert_existing_chunks_no_double_pin():
+    pool = PagePool(16)
+    cache = PrefixCache(pool)
+    t1 = pool.allocate(1, 2 * PS)
+    cache.insert(_tokens(0, 1), t1.physical, _kv)
+    # a second sequence with the same prefix re-inserts: no new pins
+    t2 = pool.fork(2, t1.physical, 3 * PS)
+    rc_before = [pool.refcount(p) for p in t1.physical]
+    added = cache.insert(_tokens(0, 1, 7), t2.physical, _kv)
+    assert added == 1                      # only the divergent third chunk
+    assert [pool.refcount(p) for p in t1.physical] == rc_before
+    pool.assert_consistent()
+
+
+def test_shared_prefix_fork_and_release_order():
+    """Freeing donor, sharer and cache in any order releases pages exactly
+    when their refcount hits 0."""
+    pool = PagePool(16)
+    cache = PrefixCache(pool)
+    t1 = pool.allocate(1, 4 * PS)          # 4 pages
+    cache.insert(_tokens(0, 1, 2, 3), t1.physical, _kv)
+    shared = list(t1.physical[:2])
+    t2 = pool.fork(2, shared, 3 * PS)      # shares 2, allocs 1
+    assert [pool.refcount(p) for p in shared] == [3, 3]
+    pool.free(1)
+    pool.assert_consistent()
+    assert [pool.refcount(p) for p in shared] == [2, 2]
+    assert pool.used_pages == 4 + 1        # cache keeps donor's 4 alive
+    pool.free(2)
+    pool.assert_consistent()
+    assert [pool.refcount(p) for p in shared] == [1, 1]
+    assert pool.used_pages == 4            # only cache pins remain
+    cache.clear()
+    assert pool.used_pages == 0
+    pool.assert_consistent()
+
+
+def test_eviction_lru_leaves_only():
+    pool = PagePool(4)
+    cache = PrefixCache(pool)
+    t1 = pool.allocate(1, 2 * PS)
+    cache.insert(_tokens(0, 1), t1.physical, _kv)
+    pool.free(1)                           # pages now cache-only (rc 1)
+    assert pool.free_pages == 2
+    # need 3 free -> must evict; only the LEAF (chunk 1) is evictable
+    # first, then its parent becomes a leaf.
+    assert cache.evict_for(3)
+    assert pool.free_pages >= 3 and cache.n_pages == 1
+    assert cache.evict_for(4)
+    assert cache.n_pages == 0 and pool.free_pages == 4
+    pool.assert_consistent()
+
+
+def test_eviction_skips_pages_shared_with_live_sequences():
+    pool = PagePool(2)
+    cache = PrefixCache(pool)
+    t1 = pool.allocate(1, 2 * PS)
+    cache.insert(_tokens(0, 1), t1.physical, _kv)
+    # donor still alive: rc == 2 everywhere -> eviction frees nothing
+    assert not cache.evict_for(1)
+    assert cache.n_pages == 2
+    pool.free(1)
+    assert cache.evict_for(1)
+    pool.assert_consistent()
+
+
+def test_eviction_respects_protect_set():
+    pool = PagePool(2)
+    cache = PrefixCache(pool)
+    t1 = pool.allocate(1, 2 * PS)
+    cache.insert(_tokens(0, 1), t1.physical, _kv)
+    pool.free(1)
+    protected = list(cache.match(_tokens(0, 1))[1])
+    assert not cache.evict_for(1, protect=protected)
+    assert cache.n_pages == 2
+    pool.assert_consistent()
+
+
+def test_cow_fork_never_mutates_donor():
+    pool = PagePool(8)
+    t1 = pool.allocate(1, 2 * PS)
+    donor_pages = list(t1.physical)
+    t2 = pool.fork(2, donor_pages, 2 * PS)
+    old, new = pool.ensure_owned(2, 0)     # shared -> migrates
+    assert old == donor_pages[0] and new != old
+    assert t1.physical == donor_pages      # donor untouched
+    assert t2.physical[0] == new
+    assert pool.refcount(donor_pages[0]) == 1
+    # already exclusive -> no-op
+    again_old, again_new = pool.ensure_owned(2, 0)
+    assert (again_old, again_new) == (new, new)
+    pool.assert_consistent()
+
+
+def test_extend_uses_partial_last_page():
+    pool = PagePool(8)
+    pool.allocate(1, 20)                   # 2 pages, 12 free slots in page 2
+    assert pool.table(1).n_pages == 2
+    pool.extend(1, 12)                     # absorbed by the last page
+    assert pool.table(1).n_pages == 2 and pool.free_pages == 6
+    pool.extend(1, 1)                      # crosses the boundary
+    assert pool.table(1).n_pages == 3 and pool.free_pages == 5
+    pool.assert_consistent()
+
+
+def test_extend_exhaustion_keeps_state():
+    pool = PagePool(2)
+    pool.allocate(1, 2 * PS)
+    with pytest.raises(PoolExhausted):
+        pool.extend(1, 1)
+    assert pool.seq_tokens(1) == 2 * PS    # failed extend left tokens alone
+    pool.assert_consistent()
+
+
+@settings(max_examples=40, deadline=None)
+@given(ops=st.lists(
+    st.tuples(st.integers(0, 5), st.integers(0, 3), st.integers(1, 6)),
+    min_size=1, max_size=60,
+))
+def test_sharing_invariants_under_random_workload(ops):
+    """Interleaved admit (with prefix fork) / extend / free / insert / evict
+    keep refcounts, owner accounting and the free list consistent, and
+    refcounts never go negative (``assert_consistent`` audits all of it)."""
+    pool = PagePool(48)
+    cache = PrefixCache(pool)
+    live = {}
+    prompts = {}
+    for step_i, (sid_base, kind, arg) in enumerate(ops):
+        sid = 100 + sid_base
+        if sid in live:
+            if kind == 0:
+                # retire: publish the prompt's full pages, then free
+                toks = prompts[sid]
+                n_pages = len(toks) // PS
+                cache.insert(
+                    toks, pool.table(sid).physical[:n_pages], _kv
+                )
+                pool.free(sid)
+                del live[sid]
+            elif kind == 1:
+                try:
+                    pool.extend(sid, arg * 7)
+                except PoolExhausted:
+                    pass
+            elif kind == 2 and pool.table(sid).n_pages:
+                pool.ensure_owned(
+                    sid, arg % pool.table(sid).n_pages
+                ) if pool.free_pages else None
+            else:
+                cache.evict_for(arg)
+        else:
+            toks = _tokens(*range(sid_base, sid_base + arg))
+            matched, pages, _ = cache.match(toks, max_tokens=len(toks) - 1)
+            need = pool.pages_for(len(toks)) - len(pages)
+            if need > pool.free_pages:
+                cache.evict_for(need, protect=pages)
+            try:
+                pool.fork(sid, pages, len(toks))
+                live[sid] = True
+                prompts[sid] = toks
+            except PoolExhausted:
+                pass
+        pool.assert_consistent()
+        owner = pool.owner_map()
+        assert pool.used_pages == (owner != -1).sum()
+    for sid in list(live):
+        pool.free(sid)
+    cache.clear()
+    assert pool.used_pages == 0
+    pool.assert_consistent()

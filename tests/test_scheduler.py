@@ -1,0 +1,246 @@
+"""Scheduler policy unit tests (no model: pool + metrics only) and
+engine-level lifecycle tests (chunked prefill interleaving, preemption,
+metrics, stall detection)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.cache.paged_kv import PagePool
+from repro.cache.prefix_cache import PrefixCache
+from repro.config import ServeConfig
+from repro.configs import get_config, smoke_variant
+from repro.models import Transformer
+from repro.serving import Engine, EngineStalled, Request
+from repro.serving.metrics import ServingMetrics
+from repro.serving.scheduler import DECODE, PREFILL, QUEUED, Scheduler
+
+
+def _sched(pool_pages=64, prefix=True, **serve_kw):
+    serve = ServeConfig(
+        max_batch=4, max_context=512, pool_pages=pool_pages, **serve_kw
+    )
+    pool = PagePool(pool_pages)
+    cache = PrefixCache(pool) if prefix else None
+    clock = iter(range(10_000))
+    metrics = ServingMetrics(clock=lambda: float(next(clock)))
+    return Scheduler(serve, pool, cache, metrics), pool, metrics
+
+
+def _req(rid, n=64, max_new=8):
+    rng = np.random.default_rng(rid)
+    return Request(rid, rng.integers(0, 200, n).astype(np.int32),
+                   max_new_tokens=max_new)
+
+
+def test_submit_rejects_impossible_request():
+    sched, _, _ = _sched(pool_pages=4)
+    with pytest.raises(ValueError):
+        sched.submit(_req(0, n=200, max_new=100))  # 19 pages > 4
+
+
+def test_admission_fcfs_and_page_gated():
+    sched, pool, _ = _sched(pool_pages=8)
+    for rid in range(3):
+        sched.submit(_req(rid, n=48))              # 3 pages each
+    plan = sched.plan_tick(free_slots=[0, 1, 2])
+    # 8 pages admit only the first two (3 + 3); head-of-line blocks #2
+    assert [a.seq.seq_id for a in plan.admitted] == [0, 1]
+    assert len(sched.waiting) == 1
+    assert pool.free_pages == 2
+
+
+def test_chunk_budget_interleaves_prompts():
+    sched, _, _ = _sched(
+        pool_pages=64, prefill_tokens_per_tick=96, prefill_chunk=64
+    )
+    sched.submit(_req(0, n=160))
+    plan = sched.plan_tick(free_slots=[0])
+    # 96-token budget -> chunks of 64 + 32; prompt finishes next tick
+    assert [(c.offset, len(c.tokens), c.is_last) for c in plan.chunks] == [
+        (0, 64, False), (64, 32, False)
+    ]
+    plan2 = sched.plan_tick(free_slots=[1])
+    assert [(c.offset, len(c.tokens), c.is_last) for c in plan2.chunks] == [
+        (96, 64, True)
+    ]
+
+
+def test_chunk_budget_shared_fcfs_across_sequences():
+    sched, _, _ = _sched(
+        pool_pages=64, prefill_tokens_per_tick=128, prefill_chunk=64
+    )
+    sched.submit(_req(0, n=96))
+    sched.submit(_req(1, n=96))
+    plan = sched.plan_tick(free_slots=[0, 1])
+    owners = [(c.seq.seq_id, len(c.tokens)) for c in plan.chunks]
+    # oldest first: seq 0 finishes (64+32), the rest goes to seq 1
+    assert owners == [(0, 64), (0, 32), (1, 32)]
+
+
+def test_prepare_decode_preempts_latest_arrival():
+    sched, pool, metrics = _sched(pool_pages=8)
+    a = sched.submit(_req(0, n=64, max_new=64))    # 4 pages
+    b = sched.submit(_req(1, n=64, max_new=64))    # 4 pages
+    plan = sched.plan_tick(free_slots=[0, 1])
+    assert len(plan.admitted) == 2
+    for s in (a, b):
+        s.prefilled = s.n_prefill
+        s.state = DECODE
+        s.req.output.append(7)                     # first sampled token
+    # pool is full (8/8): reserving the next token forces a preemption
+    preempted = sched.prepare_decode([a, b])
+    assert preempted == [b]
+    assert b.state == QUEUED and sched.waiting == [b]
+    assert b.resume_token == 7 and len(b.prefill_tokens) == 64
+    assert metrics.preemptions == 1
+    assert pool.seq_tokens(0) == 65                # a got its reservation
+
+
+def test_preempted_resume_prefill_includes_output():
+    sched, pool, _ = _sched(pool_pages=8)
+    a = sched.submit(_req(0, n=64, max_new=64))
+    sched.plan_tick(free_slots=[0])
+    a.prefilled = a.n_prefill
+    a.state = DECODE
+    a.req.output.extend([3, 4, 5])
+    sched._preempt(a)
+    # KV spans prompt + output[:-1]; the last token replays on resume
+    assert len(a.prefill_tokens) == 64 + 2
+    assert list(a.prefill_tokens[-2:]) == [3, 4]
+    assert a.resume_token == 5
+    assert pool.used_pages == 0
+
+
+def test_requeue_preserves_arrival_order():
+    sched, _, _ = _sched(pool_pages=64)
+    a = sched.submit(_req(0))
+    b = sched.submit(_req(1))
+    c = sched.submit(_req(2))
+    sched.plan_tick(free_slots=[0, 1])             # admits a, b; c waits
+    b.state = DECODE
+    sched._preempt(b)
+    assert [s.seq_id for s in sched.waiting] == [1, 2]
+
+
+# -- engine-level lifecycle ---------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_variant(get_config("llama3.2-3b"))
+    model = Transformer(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_chunked_prefill_does_not_stall_decode(setup):
+    """A long prompt prefills across ticks while the running batch keeps
+    decoding — the head-of-line stall the scheduler exists to remove."""
+    cfg, params = setup
+    eng = Engine(cfg, params, ServeConfig(
+        max_batch=2, max_context=512,
+        prefill_tokens_per_tick=64, prefill_chunk=64,
+    ))
+    rng = np.random.default_rng(0)
+    short = Request(0, rng.integers(0, cfg.vocab_size, 32).astype(np.int32),
+                    max_new_tokens=12)
+    long = Request(1, rng.integers(0, cfg.vocab_size, 320).astype(np.int32),
+                   max_new_tokens=4)
+    eng.submit(short)
+    eng.step()                      # short admitted + fully prefilled
+    eng.submit(long)
+    progressed = []
+    for _ in range(4):              # long needs 5 ticks of prefill
+        before = len(short.output)
+        eng.step()
+        progressed.append(len(short.output) > before)
+    assert not long.done and len(long.output) == 0, "long still prefilling"
+    assert all(progressed), "decode must advance during chunked prefill"
+    eng.run_until_done(max_ticks=100)
+    assert short.done and long.done
+    assert len(short.output) == 12 and len(long.output) == 4
+
+
+def test_preemption_end_to_end_preserves_output(setup):
+    cfg, params = setup
+    eng = Engine(cfg, params, ServeConfig(
+        max_batch=2, max_context=512, pool_pages=14, temperature=0.0,
+    ))
+    rng = np.random.default_rng(3)
+    reqs = [
+        Request(i, rng.integers(0, cfg.vocab_size, 96).astype(np.int32),
+                max_new_tokens=40)
+        for i in range(2)
+    ]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run_until_done(max_ticks=500)
+    assert eng.metrics.preemptions >= 1, "14 pages must force preemption"
+    assert sorted(r.req_id for r in done) == [0, 1]
+    assert all(len(r.output) == 40 for r in reqs)
+    # preserved output: a preempted request resumed, not restarted — its
+    # greedy continuation matches an unconstrained run of the same request.
+    solo = Engine(cfg, params, ServeConfig(
+        max_batch=1, max_context=512, temperature=0.0,
+    ))
+    ref = Request(0, reqs[0].prompt, max_new_tokens=40)
+    solo.submit(ref)
+    solo.run_until_done(max_ticks=200)
+    assert ref.output == reqs[0].output
+    eng.pool.assert_consistent()
+
+
+def test_lifecycle_metrics_recorded(setup):
+    cfg, params = setup
+    ticker = iter(range(100_000))
+    eng = Engine(cfg, params,
+                 ServeConfig(max_batch=2, max_context=256),
+                 clock=lambda: float(next(ticker)))
+    rng = np.random.default_rng(1)
+    for i in range(3):
+        eng.submit(Request(
+            i, rng.integers(0, cfg.vocab_size, 64).astype(np.int32),
+            max_new_tokens=5,
+        ))
+    eng.run_until_done(max_ticks=100)
+    snap = eng.metrics.snapshot()
+    assert snap["requests_finished"] == 3
+    assert snap["decode_tokens"] == 15
+    assert snap["prefill_tokens_computed"] == 3 * 64
+    assert snap["ttft_p50"] > 0 and snap["tpot_mean"] > 0
+    r2 = eng.metrics.requests[2]    # queued behind the first two
+    assert r2.queue_time > 0 and r2.ttft >= r2.queue_time
+
+
+def test_run_until_done_raises_on_stall(setup):
+    cfg, params = setup
+    eng = Engine(cfg, params, ServeConfig(max_batch=1, max_context=256))
+    rng = np.random.default_rng(5)
+    eng.submit(Request(0, rng.integers(0, cfg.vocab_size, 64).astype(np.int32),
+                       max_new_tokens=30))
+    with pytest.raises(EngineStalled):
+        eng.run_until_done(max_ticks=3)
+
+
+def test_monolithic_fallback_for_recurrent_stacks():
+    cfg = smoke_variant(get_config("rwkv6-3b"))
+    cfg = dataclasses.replace(
+        cfg, sparse=dataclasses.replace(cfg.sparse, enabled=False)
+    )
+    model = Transformer(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, ServeConfig(max_batch=2, max_context=256))
+    assert not eng._chunkable and eng.prefix_cache is None
+    rng = np.random.default_rng(2)
+    reqs = [
+        Request(i, rng.integers(0, cfg.vocab_size, 40).astype(np.int32),
+                max_new_tokens=4)
+        for i in range(2)
+    ]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done(max_ticks=100)
+    assert all(r.done and len(r.output) == 4 for r in reqs)
+    assert eng.pool.used_pages == 0
