@@ -1,13 +1,22 @@
 """Paper Fig. 10: decode attention latency vs context length — AB-Sparse
 (budgeted, INT4 store) vs full attention.  CPU wall clock at reduced scale;
 the crossover/scaling trend is the reproduced object (sparse cost is
-~flat in context, dense grows linearly)."""
+~flat in context, dense grows linearly).
+
+Also benchmarks the FUSED single-launch decode kernel against the staged
+three-kernel Pallas pipeline (both interpret mode — the launch/overhead
+structure is the measured object) and persists the result to
+``BENCH_decode.json`` as the perf baseline for future PRs."""
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import jax
 import jax.numpy as jnp
+
+BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_decode.json"
 
 
 def _time(fn, *args, iters=3):
@@ -17,6 +26,50 @@ def _time(fn, *args, iters=3):
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.monotonic() - t0) / iters
+
+
+def run_fused_vs_staged(B=4, S=2048, D=64, n_kv=4, g=2, budget=512, iters=2):
+    """Per-step decode wall clock: fused single-launch vs staged pipeline.
+
+    Both paths execute the SAME pallas backend in interpret mode at B>=4;
+    the fused kernel collapses per-layer launches from 3+ (pooled
+    estimation + top-k/expansion + paged attention) to 1 and drops the
+    padded-score materialization between them."""
+    from repro.backends import PallasBackend
+    from repro.config import SparseConfig
+    from repro.core.ragged import layout_for
+
+    be = PallasBackend(interpret=True)
+    key = jax.random.PRNGKey(0)
+    bs = tuple([16, 32, 64, 32] * (n_kv // 4))
+    lay = layout_for(bs, S, 16, budget)
+    k = jax.random.normal(key, (B, n_kv, S, D))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (B, n_kv, S, D))
+    q = jax.random.normal(jax.random.fold_in(key, 2), (B, n_kv * g, D))
+    seq_len = jnp.full((B,), S, jnp.int32)
+    store = be.build_store(k, lay, "quest", quant="int4_asym")
+    staged_cfg = SparseConfig(token_budget=budget)
+    fused_cfg = SparseConfig(token_budget=budget, fused_decode=True)
+
+    staged = jax.jit(
+        lambda q, k, v, st, sl: be.decode(q, k, v, st, lay, staged_cfg, sl)[0]
+    )
+    fused = jax.jit(
+        lambda q, k, v, st, sl: be.decode(q, k, v, st, lay, fused_cfg, sl)[0]
+    )
+    t_staged = _time(staged, q, k, v, store, seq_len, iters=iters)
+    t_fused = _time(fused, q, k, v, store, seq_len, iters=iters)
+    return {
+        "B": B,
+        "context": S,
+        "staged_ms_per_step": round(t_staged * 1e3, 2),
+        "fused_ms_per_step": round(t_fused * 1e3, 2),
+        "fused_speedup": round(t_staged / t_fused, 2),
+        "fused_reduction_pct": round(100 * (1 - t_fused / t_staged), 1),
+        # static launch structure per layer per decode step
+        "launches_per_layer_staged": 3,
+        "launches_per_layer_fused": 1,
+    }
 
 
 def run(D=64, n_kv=4, g=2, B=2, budget=512):
@@ -52,6 +105,8 @@ def run(D=64, n_kv=4, g=2, B=2, budget=512):
             "speedup": round(td / ts, 2),
         }
         t_total += ts
+    out["fused_vs_staged"] = fused = run_fused_vs_staged()
+    BENCH_PATH.write_text(json.dumps(fused, indent=2) + "\n")
     return {
         "name": "fig10_decode_latency",
         "us_per_call": t_total / 4 * 1e6,
@@ -62,3 +117,4 @@ def run(D=64, n_kv=4, g=2, B=2, budget=512):
 if __name__ == "__main__":
     for k, v in run()["derived"].items():
         print(k, v)
+    print("baseline written to", BENCH_PATH)

@@ -347,7 +347,9 @@ class AttentionBackend:
         seq_len: Optional[jax.Array] = None,
     ) -> Tuple[jax.Array, Optional[jax.Array]]:
         """Full AB-Sparse decode step: estimation -> adaptive top-k ->
-        paged attention.  q [B, n_q, D]; k/v [B, n_kv, S, D] ->
+        paged attention.  q [B, n_q, D]; k/v paged
+        ``[B, n_kv, n_pages, page, D]`` (the cache's native layout) or
+        dense ``[B, n_kv, S, D]`` ->
         (out [B, n_q, D], page_table [B, H, P_sel])."""
         la = as_arrays(layout)
         n_kv = k.shape[1]

@@ -14,7 +14,7 @@ import jax
 
 from repro.backends.base import CentroidStore
 from repro.backends.reference import ReferenceBackend
-from repro.core.sparse_attention import dense_decode_attention
+from repro.core.sparse_attention import as_dense, dense_decode_attention
 
 
 class DenseBackend(ReferenceBackend):
@@ -27,5 +27,5 @@ class DenseBackend(ReferenceBackend):
     def decode(
         self, q, k, v, store, layout, sparse, seq_len=None
     ) -> Tuple[jax.Array, Optional[jax.Array]]:
-        out = dense_decode_attention(q, k, v, seq_len=seq_len)
+        out = dense_decode_attention(q, as_dense(k), as_dense(v), seq_len=seq_len)
         return out, None

@@ -4,16 +4,27 @@ Wraps the kernels in :mod:`repro.kernels` behind the backend protocol.
 Store quantization is inherited from the shared path (so page tables match
 the reference backend bit-for-bit); only the pooling / estimation /
 attention compute runs in Pallas.
+
+Two decode modes, selected by ``SparseConfig.fused_decode``:
+
+- **staged** (default): three launches per layer — estimation kernel,
+  XLA top-k + page-table expansion, paged-attention kernel.  This is the
+  parity oracle and the fallback.
+- **fused**: ONE ragged-grid launch per layer
+  (:mod:`repro.kernels.fused_decode`) that scores the quantized store,
+  selects, and attends without materializing the padded score tensor or
+  the page table between stages.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.backends.base import AttentionBackend, CentroidStore
+from repro.core.centroids import rank_query
 from repro.core.ragged import RaggedLayout
 
 
@@ -64,3 +75,23 @@ class PallasBackend(AttentionBackend):
             q, k, v, page_table, page_valid, page_size, seq_len,
             interpret=self._interp(),
         )
+
+    def decode(
+        self, q, k, v, store, layout, sparse, seq_len=None
+    ) -> Tuple[jax.Array, Optional[jax.Array]]:
+        """Fused single-launch decode when ``sparse.fused_decode`` is set;
+        otherwise the shared staged pipeline (the parity oracle)."""
+        if not sparse.fused_decode:
+            return super().decode(q, k, v, store, layout, sparse, seq_len)
+        from repro.kernels import ops
+
+        rq = rank_query(q, sparse.centroid_method, q.shape[-1])
+        out, table, _ = ops.fused_decode(
+            q, rq, k, v, store, layout,
+            sink_pages=sparse.sink_pages,
+            local_pages=sparse.local_pages,
+            seq_len=seq_len,
+            max_pages_per_block=sparse.max_block_size // sparse.page_size,
+            interpret=self._interp(),
+        )
+        return out, table

@@ -62,8 +62,10 @@ def build_store_codes(
     sparse: SparseConfig,
     quant: Optional[str] = None,
 ):
-    """k_cache [B, n_kv, S_max, hd] -> :class:`CentroidStore` for ONE layer
-    in the flattened layout (scan-safe; ``layout`` is LayoutArrays)."""
+    """k_cache — paged ``[B, n_kv, n_pages, page, hd]`` (the decode cache's
+    native layout) or dense ``[B, n_kv, S_max, hd]`` — ->
+    :class:`CentroidStore` for ONE layer in the flattened layout (scan-safe;
+    ``layout`` is LayoutArrays)."""
     from repro.backends.base import CentroidStore
 
     la = as_arrays(layout)
@@ -75,14 +77,17 @@ def build_store_codes(
             f"centroid store supports none/int8/int4 schemes, got {quant!r}"
         )
     method = sparse.centroid_method
-    B, n_kv, S_max, hd = k_cache.shape
-    Dp = padded_rank_key_width(hd, method)
     page = sparse.page_size
-    n_pages = S_max // page
+    if k_cache.ndim == 4:
+        B, n_kv, S_max, hd = k_cache.shape
+        k_cache = k_cache.reshape(B, n_kv, S_max // page, page, hd)
+    B, n_kv, n_pages, _, hd = k_cache.shape
+    S_max = n_pages * page
+    Dp = padded_rank_key_width(hd, method)
     rows_total = la.total_rows
     cands = sparse.candidate_block_sizes
 
-    pages = k_cache.reshape(B, n_kv, n_pages, page, hd).astype(jnp.float32)
+    pages = k_cache.astype(jnp.float32)
     pmax = pages.max(axis=3)
     pmin = pages.min(axis=3)
     pmean = pages.mean(axis=3)
@@ -151,15 +156,23 @@ def refresh_tail_codes(
     la = as_arrays(layout)
     codes, scale, zero = store.codes, store.scale, store.zero
     method = sparse.centroid_method
-    B, n_kv, S_max, hd = k_cache.shape
+    page = sparse.page_size
+    if k_cache.ndim == 4:
+        B, n_kv, S_max, hd = k_cache.shape
+        k_cache = k_cache.reshape(B, n_kv, S_max // page, page, hd)
+    B, n_kv, n_pages, _, hd = k_cache.shape
     Dp = padded_rank_key_width(hd, method)
     Wmax = max(sparse.candidate_block_sizes)
     w0 = (seq_len // Wmax) * Wmax                        # [B]
 
-    # gather the window [B, n_kv, Wmax, hd]
+    # gather the window [B, n_kv, Wmax, hd] — Wmax is page-aligned, so the
+    # slice runs over whole pages of the paged cache.
+    wp = Wmax // page
     win = jax.vmap(
-        lambda kc, s: jax.lax.dynamic_slice(kc, (0, s, 0), (n_kv, Wmax, hd))
-    )(k_cache, w0)
+        lambda kc, p0: jax.lax.dynamic_slice(
+            kc, (0, p0, 0, 0), (n_kv, wp, page, hd)
+        )
+    )(k_cache, w0 // page).reshape(B, n_kv, Wmax, hd)
     pos = w0[:, None] + jnp.arange(Wmax)[None]           # [B, Wmax]
     ok = (pos <= seq_len[:, None])[:, None, :, None]     # include new tok
     winf = win.astype(jnp.float32)

@@ -28,6 +28,11 @@ class SparseConfig:
     #: registry: "dense" (full-attention oracle) | "reference" (pure jnp) |
     #: "pallas" (interpret on CPU, Mosaic on TPU).
     backend: str = "reference"
+    #: fuse the whole decode step (estimation -> adaptive top-k -> paged
+    #: attention) into ONE ragged-grid Pallas launch per layer instead of the
+    #: staged three-kernel pipeline.  Only honoured by the "pallas" backend;
+    #: the staged path remains the fallback and the parity oracle.
+    fused_decode: bool = False
     page_size: int = PAGE_SIZE
     candidate_block_sizes: Tuple[int, ...] = CANDIDATE_BLOCK_SIZES
     #: token budget T shared by all heads (paper fixes 4096 / 4% of context).
@@ -62,6 +67,16 @@ class SparseConfig:
         row = self.block_sizes[layer]
         assert len(row) == n_kv_heads
         return tuple(row)
+
+    @property
+    def max_block_size(self) -> int:
+        """Static upper bound on any assigned block size — sizes the fused
+        decode kernel's per-slot DMA window at trace time."""
+        sizes = set(self.candidate_block_sizes) | {self.uniform_block_size}
+        if self.block_sizes is not None:
+            for row in self.block_sizes:
+                sizes |= set(row)
+        return max(sizes)
 
     def budget_for(self, context_len: int) -> int:
         if self.budget_frac is not None:

@@ -197,6 +197,24 @@ class RaggedLayout:
     def pages_per_block_arr(self) -> np.ndarray:
         return np.asarray(self.pages_per_block, dtype=np.int32)
 
+    # -- fused-decode ragged grid descriptor ---------------------------------
+
+    @cached_property
+    def row_offsets_arr(self) -> np.ndarray:
+        """[n_heads] flat-row offset of each head's centroid segment — the
+        per-(kv-head) grid-cell base address of the fused decode kernel."""
+        return np.asarray(self.offsets[:-1], dtype=np.int32)
+
+    @cached_property
+    def n_blocks_arr(self) -> np.ndarray:
+        """[n_heads] real (unpadded) block count per head."""
+        return np.asarray(self.n_blocks, dtype=np.int32)
+
+    @cached_property
+    def top_k_arr(self) -> np.ndarray:
+        """[n_heads] K_h — blocks each head selects in the fused kernel."""
+        return np.asarray(self.top_k, dtype=np.int32)
+
     # -- stats ----------------------------------------------------------------
 
     @property

@@ -18,16 +18,33 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
+def as_paged(kv: jax.Array, page_size: int) -> jax.Array:
+    """Normalize KV to the paged ``[B, n_kv, n_pages, page, D]`` layout (the
+    decode cache's native storage — dense 4-D inputs are reshaped once)."""
+    if kv.ndim == 5:
+        assert kv.shape[3] == page_size, (kv.shape, page_size)
+        return kv
+    B, n_kv, S, D = kv.shape
+    return kv.reshape(B, n_kv, S // page_size, page_size, D)
+
+
+def as_dense(kv: jax.Array) -> jax.Array:
+    """Paged ``[B, n_kv, n_pages, page, D]`` -> dense ``[B, n_kv, S, D]``."""
+    if kv.ndim == 4:
+        return kv
+    B, n_kv, n_pages, page, D = kv.shape
+    return kv.reshape(B, n_kv, n_pages * page, D)
+
+
 def gather_pages(
     kv: jax.Array, page_table: jax.Array, page_size: int
 ) -> jax.Array:
-    """kv [B, n_kv, S, D], page_table [B, H, P_sel] -> [B, H, P_sel*page, D].
+    """kv paged (or dense), page_table [B, H, P_sel] -> [B, H, P_sel*page, D].
 
     Reference gather — the Pallas paged-attention kernel never materializes
     this (it DMAs pages straight from the pool)."""
-    B, n_kv, S, D = kv.shape
-    n_pages = S // page_size
-    paged = kv.reshape(B, n_kv, n_pages, page_size, D)
+    paged = as_paged(kv, page_size)
+    B, n_kv, _, _, D = paged.shape
     return jnp.take_along_axis(
         paged, page_table[..., None, None], axis=2
     ).reshape(B, n_kv, -1, D)
@@ -43,14 +60,18 @@ def paged_attention_reference(
     seq_len: Optional[jax.Array] = None,
     context_len: Optional[int] = None,
 ) -> jax.Array:
-    """q [B, n_q, D]; k/v [B, n_kv, S, D] -> out [B, n_q, D].
+    """q [B, n_q, D]; k/v paged ``[B, n_kv, n_pages, page, D]`` (or dense
+    ``[B, n_kv, S, D]``) -> out [B, n_q, D].
 
     Softmax runs over the selected tokens only (standard block-sparse
     semantics).  Tokens of invalid pages, and positions >= seq_len inside a
     partially-live page, are masked.
     """
     B, n_q, D = q.shape
+    k = as_paged(k, page_size)
+    v = as_paged(v, page_size)
     n_kv = k.shape[1]
+    S = k.shape[2] * page_size
     g = n_q // n_kv
     sel_k = gather_pages(k, page_table, page_size)  # [B, n_kv, L, D]
     sel_v = gather_pages(v, page_table, page_size)
@@ -60,7 +81,7 @@ def paged_attention_reference(
     pos = page_table[..., None] * page_size + jnp.arange(page_size)  # [B,H,P,ps]
     pos = pos.reshape(B, n_kv, L)
     if seq_len is None:
-        seq_len = jnp.int32(context_len if context_len is not None else k.shape[2])
+        seq_len = jnp.int32(context_len if context_len is not None else S)
     seq_len = jnp.asarray(seq_len, jnp.int32)
     if seq_len.ndim == 1:
         seq_len = seq_len[:, None, None]

@@ -39,6 +39,10 @@ class LayoutArrays:
     pages_per_block: jax.Array   # [.., H] int32
     tile_head: jax.Array         # [.., n_tiles] int32
     topk_valid: jax.Array        # [.., H, max_top_k] bool
+    # fused-decode ragged grid descriptor (scalar-prefetched per grid cell)
+    row_offsets: jax.Array       # [.., H] int32 flat-row offset per head
+    n_blocks: jax.Array          # [.., H] int32 real block count per head
+    top_k: jax.Array             # [.., H] int32 K_h per head
     # static dims (uniform across the stack)
     page_size: int
     tile_rows: int
@@ -54,6 +58,7 @@ class LayoutArrays:
             self.scatter_rows, self.pad_mask, self.block_starts,
             self.block_sizes, self.slot_map, self.within_map,
             self.pages_per_block, self.tile_head, self.topk_valid,
+            self.row_offsets, self.n_blocks, self.top_k,
         )
         aux = (
             self.page_size, self.tile_rows, self.max_top_k,
@@ -100,6 +105,9 @@ def as_arrays(layout: Union[RaggedLayout, LayoutArrays]) -> LayoutArrays:
         pages_per_block=jnp.asarray(layout.pages_per_block_arr, jnp.int32),
         tile_head=jnp.asarray(layout.tile_head, jnp.int32),
         topk_valid=jnp.asarray(layout.topk_valid),
+        row_offsets=jnp.asarray(layout.row_offsets_arr, jnp.int32),
+        n_blocks=jnp.asarray(layout.n_blocks_arr, jnp.int32),
+        top_k=jnp.asarray(layout.top_k_arr, jnp.int32),
         page_size=layout.page_size,
         tile_rows=layout.tile_rows,
         max_top_k=layout.max_top_k,
@@ -148,6 +156,9 @@ def stack_layouts(layouts: Sequence[RaggedLayout]) -> LayoutArrays:
     ppb = np.ones((L, H), np.int32)
     tiles = np.zeros((L, n_tiles), np.int32)
     tkv = np.zeros((L, H, max_top_k), bool)
+    roff = np.zeros((L, H), np.int32)
+    nblk = np.zeros((L, H), np.int32)
+    topk = np.zeros((L, H), np.int32)
 
     from repro.core.selection import _block_starts
 
@@ -162,6 +173,9 @@ def stack_layouts(layouts: Sequence[RaggedLayout]) -> LayoutArrays:
         ppb[i] = l.pages_per_block_arr
         tiles[i, : l.n_tiles] = l.tile_head
         tkv[i, :, : l.max_top_k] = l.topk_valid
+        roff[i] = l.row_offsets_arr
+        nblk[i] = l.n_blocks_arr
+        topk[i] = l.top_k_arr
 
     return LayoutArrays(
         scatter_rows=jnp.asarray(scat),
@@ -173,6 +187,9 @@ def stack_layouts(layouts: Sequence[RaggedLayout]) -> LayoutArrays:
         pages_per_block=jnp.asarray(ppb),
         tile_head=jnp.asarray(tiles),
         topk_valid=jnp.asarray(tkv),
+        row_offsets=jnp.asarray(roff),
+        n_blocks=jnp.asarray(nblk),
+        top_k=jnp.asarray(topk),
         page_size=layouts[0].page_size,
         tile_rows=layouts[0].tile_rows,
         max_top_k=max_top_k,

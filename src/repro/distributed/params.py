@@ -203,8 +203,12 @@ def logical_axes_for_param(path_str: str, ndim: int) -> Tuple[Optional[str], ...
 
 _CACHE_RULES = [
     ("seq_len", ("batch",)),
+    # dense KV [nc, B, n_kv, S, hd] and paged [nc, B, n_kv, nP, page, hd]
+    # (the sparse-active decode cache's native layout)
     ("/k", (None, "batch", "kv_heads", "kv_pages", "head_dim")),
     ("/v", (None, "batch", "kv_heads", "kv_pages", "head_dim")),
+    ("/k", (None, "batch", "kv_heads", "kv_pages", None, "head_dim")),
+    ("/v", (None, "batch", "kv_heads", "kv_pages", None, "head_dim")),
     ("/codes", (None, "batch", "kv_pages", None)),
     ("/scale", (None, "batch", None, None)),
     ("/zero", (None, "batch", None, None)),
@@ -218,12 +222,17 @@ _CACHE_RULES = [
 def logical_axes_for_cache(path_str: str, ndim: int) -> Tuple[Optional[str], ...]:
     if path_str.startswith("_layouts") or path_str.startswith("_offsets"):
         return (None,) * ndim
+    # rest-layer entries have no leading cycle axis: match against the rule
+    # minus its leading cycle dim so a paged rest KV entry (ndim 5) never
+    # collides with the cycle-stacked dense rule of the same length.
+    rest = path_str.startswith("rest")
     for suffix, axes in _CACHE_RULES:
         if path_str.endswith(suffix) or (suffix == "seq_len" and path_str == "seq_len"):
-            if len(axes) == ndim:
+            if rest:
+                if len(axes) == ndim + 1 and axes[0] is None:
+                    return tuple(axes[1:])
+            elif len(axes) == ndim:
                 return axes
-            if len(axes) == ndim - 1 and path_str.startswith("rest"):
-                return tuple(axes[1:]) if axes[0] is None else axes[:ndim]
     return (None,) * ndim
 
 

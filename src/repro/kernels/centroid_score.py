@@ -32,6 +32,26 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def dequant_rows(codes, scale, zero, bits: int, symmetric: bool):
+    """In-register dequant of packed store rows ``[R, Cw]`` -> f32 rank keys
+    ``[R, Dp]`` — the ONE definition of the store's wire format on the
+    kernel side (INT4 split-half: byte ``j`` holds channels ``j`` and
+    ``j + Dp/2``), shared by the staged estimation kernel and the fused
+    decode kernel so their numerics cannot drift apart."""
+    if bits == 0:
+        return codes.astype(jnp.float32)
+    if bits == 4:
+        lo = (codes & jnp.uint8(0xF)).astype(jnp.float32)
+        hi = ((codes >> 4) & jnp.uint8(0xF)).astype(jnp.float32)
+        q = jnp.concatenate([lo, hi], axis=-1)             # [R, Dp]
+    else:
+        q = codes.astype(jnp.float32)
+    if symmetric:
+        half = 2.0 ** (bits - 1) - 1.0
+        return (q - half) * scale
+    return q * scale + zero
+
+
 def _score_kernel_int4(
     tile_head_ref,            # scalar prefetch [n_tiles]
     codes_ref,                # [1, R, Dp//2] uint8
@@ -41,17 +61,9 @@ def _score_kernel_int4(
     out_ref,                  # [1, R]
     *, symmetric: bool, bits: int,
 ):
-    codes = codes_ref[0]                                   # [R, Dp//2] uint8
-    lo = (codes & jnp.uint8(0xF)).astype(jnp.float32)
-    hi = ((codes >> 4) & jnp.uint8(0xF)).astype(jnp.float32)
-    q = jnp.concatenate([lo, hi], axis=-1)                 # [R, Dp]
-    scale = scale_ref[0]                                   # [1, Dp]
-    zero = zero_ref[0]
-    if symmetric:
-        half = 2.0 ** (bits - 1) - 1.0
-        rk = (q - half) * scale
-    else:
-        rk = q * scale + zero                              # [R, Dp]
+    rk = dequant_rows(
+        codes_ref[0], scale_ref[0], zero_ref[0], bits, symmetric
+    )                                                      # [R, Dp]
     rq = rq_ref[0, 0]                                      # [g, Dp]
     scores = jax.lax.dot_general(
         rk, rq, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
@@ -74,14 +86,9 @@ def _score_kernel_int8(
     tile_head_ref, codes_ref, scale_ref, zero_ref, rq_ref, out_ref,
     *, symmetric: bool, bits: int,
 ):
-    q = codes_ref[0].astype(jnp.float32)                   # [R, Dp]
-    scale = scale_ref[0]
-    zero = zero_ref[0]
-    if symmetric:
-        half = 2.0 ** (bits - 1) - 1.0
-        rk = (q - half) * scale
-    else:
-        rk = q * scale + zero
+    rk = dequant_rows(
+        codes_ref[0], scale_ref[0], zero_ref[0], bits, symmetric
+    )
     rq = rq_ref[0, 0]
     scores = jax.lax.dot_general(
         rk, rq, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32

@@ -1,0 +1,357 @@
+"""Fused variable-block-size decode: estimation -> selection -> paged
+attention in ONE Pallas launch (the staged pipeline's three kernels plus the
+padded-score scatter, collapsed).
+
+Per ``(batch, kv-head)`` grid cell the kernel:
+
+1. **Scores** the head's quantized centroid segment in-register: the packed
+   INT8/INT4 codes are DMA'd straight from the flattened ragged store (Dp/2
+   bytes per centroid for INT4), dequantized in VREGs with the per-(head,
+   channel) affine params, and hit the MXU against the GQA rank-query group.
+   Neither a dequantized store nor the padded ``[B, n_kv, max_blocks]``
+   score tensor is ever materialized in HBM.
+2. **Selects** the head's top ``K_h`` blocks in-register via the exact
+   k-th-value threshold (32-step binary search over the sortable-integer
+   encoding of f32 — same math as :mod:`repro.kernels.topk_threshold`),
+   with the staged path's causal masking and sink/local pinning applied to
+   the scores first.  Tie handling (index order) reproduces ``lax.top_k``'s
+   selected SET exactly, so the fused and staged paths attend over
+   identical tokens.
+3. **Attends** flash-style over ONLY the selected blocks: a double-buffered
+   DMA loop streams each block's pages from the paged KV pool in HBM into
+   VMEM while the previous block is on the MXU; the running (m, l, acc)
+   softmax state lives in registers.
+
+Raggedness rides a precomputed grid descriptor — per-head flat-row offsets,
+real block counts, ``K_h``, block sizes and pages-per-block — delivered via
+scalar prefetch (``RaggedLayout.row_offsets_arr`` & co., stacked per layer
+in :class:`repro.core.stacked.LayoutArrays`), so heterogeneous head groups
+share one launch instead of one per distinct block size.
+
+Interpret mode on CPU (this container) validates the numerics; the same
+call lowers to Mosaic on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.centroid_score import dequant_rows
+from repro.kernels.topk_threshold import _to_sortable
+
+NEG_INF = -1e30
+POS_INF = 1e30
+
+
+def _fused_decode_kernel(
+    # -- scalar prefetch: the ragged grid descriptor + live lengths
+    row_off_ref,               # [H] int32 flat-row offset of the head segment
+    n_blocks_ref,              # [H] int32 real blocks per head
+    k_sel_ref,                 # [H] int32 K_h per head
+    bsz_ref,                   # [H] int32 block size (tokens)
+    ppb_ref,                   # [H] int32 pages per block
+    seq_len_ref,               # [B] int32
+    # -- array inputs
+    codes_ref,                 # [B, R, Cw] store codes (HBM/ANY)
+    scale_ref,                 # [1, 1, Dp] f32
+    zero_ref,                  # [1, 1, Dp] f32
+    rq_ref,                    # [1, 1, g, Dp] f32 rank queries
+    q_ref,                     # [1, 1, g, D]
+    k_ref,                     # [B, H, n_pages, ps, D] paged pool (HBM/ANY)
+    v_ref,                     # [B, H, n_pages, ps, D] (HBM/ANY)
+    # -- outputs
+    o_ref,                     # [1, 1, g, D]
+    tbl_ref,                   # [1, 1, P_sel] int32
+    vld_ref,                   # [1, 1, P_sel] int32
+    # -- scratch
+    codes_scr,                 # VMEM [SEG, Cw]
+    kbuf, vbuf,                # VMEM [2, ppb_max, ps, D] double buffers
+    slot_scr,                  # VMEM [K_max, 128] int32 per-slot descriptors
+    csem,                      # DMA sem (codes)
+    sem,                       # DMA sems [2, 2] (k/v double buffer)
+    *,
+    bits: int, symmetric: bool, seg: int, k_max: int, p_sel: int,
+    page_size: int, ppb_max: int, n_pages: int, total_rows: int,
+    sink_pages: int, local_pages: int, scale_qk: float,
+):
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    row_off = row_off_ref[h]
+    nblk = n_blocks_ref[h]
+    k_sel = k_sel_ref[h]
+    bsz = bsz_ref[h]
+    ppb = ppb_ref[h]
+    sl = seq_len_ref[b]
+
+    # ---- phase 1: score the head's centroid segment ------------------------
+    # SEG-row window (static size) with a dynamic start; when the segment is
+    # shorter than SEG the window is clamped left, and rows before the
+    # segment (adj) belong to the previous head and are masked below.
+    start = jnp.minimum(row_off, total_rows - seg)
+    adj = row_off - start
+    cdma = pltpu.make_async_copy(
+        codes_ref.at[b, pl.ds(start, seg)], codes_scr, csem
+    )
+    cdma.start()
+    cdma.wait()
+    rk = dequant_rows(
+        codes_scr[...], scale_ref[0], zero_ref[0], bits, symmetric
+    )                                                      # [SEG, Dp]
+    rq = rq_ref[0, 0]                                      # [g, Dp]
+    s = jnp.max(
+        jax.lax.dot_general(
+            rk, rq, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ),
+        axis=-1,
+    )                                                      # [SEG]
+
+    jloc = jnp.arange(seg, dtype=jnp.int32) - adj          # block id in head
+    starts_tok = jloc * bsz
+    in_seg = (jloc >= 0) & (jloc < nblk)
+    valid = in_seg & (starts_tok < sl)
+    s = jnp.where(valid, s, NEG_INF)
+    # sink / local pinning — same semantics as mask_and_pin_scores
+    if sink_pages > 0:
+        pin = in_seg & (starts_tok < jnp.minimum(sink_pages * page_size, sl))
+        s = jnp.where(pin, POS_INF, s)
+    if local_pages > 0:
+        lo = jnp.maximum(sl - local_pages * page_size, 0)
+        pin = valid & (starts_tok + bsz > lo)
+        s = jnp.where(pin, POS_INF, s)
+
+    # ---- phase 2: exact top-K_h selection in-register ----------------------
+    u = _to_sortable(s)                                    # [SEG] uint32
+
+    def bit_step(i, t):
+        cand = t | (jnp.uint32(1) << (jnp.uint32(31) - jnp.uint32(i)))
+        cnt = jnp.sum((u >= cand).astype(jnp.int32))
+        return jnp.where(cnt >= k_sel, cand, t)
+
+    thr = jax.lax.fori_loop(0, 32, bit_step, jnp.uint32(0))
+    n_gt = jnp.sum((u > thr).astype(jnp.int32))
+    is_tie = (u == thr).astype(jnp.int32)
+    tie_rank = jnp.cumsum(is_tie) - is_tie                 # exclusive
+    selected = (u > thr) | (
+        (is_tie > 0) & (tie_rank < k_sel - n_gt)
+    )                                                      # exactly K_h set
+    sel_rank = jnp.cumsum(selected.astype(jnp.int32))      # inclusive
+
+    # compact the selected block ids into K_max slots (one-hot expansion —
+    # slot i holds the (i+1)-th selected block in index order)
+    slot_ids = jnp.arange(k_max, dtype=jnp.int32)
+    onehot = selected[None, :] & (sel_rank[None, :] == slot_ids[:, None] + 1)
+    blk = jnp.sum(jnp.where(onehot, jloc[None, :], 0), axis=1)      # [K_max]
+    s_sel = jnp.sum(jnp.where(onehot, s[None, :], 0.0), axis=1)
+    slot_live = (slot_ids < k_sel) & (s_sel > NEG_INF / 2)
+
+    # per-slot DMA descriptors: page start (clamped so a full ppb_max-page
+    # window stays in bounds) and the block's token start for masking
+    pstart = jnp.clip(blk * ppb, 0, n_pages - ppb_max)
+    tok0 = blk * bsz
+    slot_scr[...] = jnp.concatenate(
+        [
+            pstart[:, None],
+            tok0[:, None],
+            jnp.zeros((k_max, 126), jnp.int32),
+        ],
+        axis=1,
+    )
+
+    # ---- emit the page table (parity instrumentation / staged interop) ----
+    pg_ids = jnp.arange(p_sel, dtype=jnp.int32)
+    pg_slot = pg_ids // ppb                                # [P_sel]
+    within = pg_ids - pg_slot * ppb
+    oh2 = pg_slot[:, None] == slot_ids[None, :]            # [P_sel, K_max]
+    blk_of = jnp.sum(jnp.where(oh2, blk[None, :], 0), axis=1)
+    live_of = jnp.sum(jnp.where(oh2, slot_live[None, :], False), axis=1)
+    tbl_ref[0, 0] = jnp.clip(blk_of * ppb + within, 0, n_pages - 1)
+    vld_ref[0, 0] = live_of.astype(jnp.int32)
+
+    # ---- phase 3: flash attention over the selected blocks -----------------
+    q = q_ref[0, 0].astype(jnp.float32)                    # [g, D]
+    g, D = q.shape
+    W = ppb_max * page_size
+
+    def kv_dma(slot, pg):
+        return (
+            pltpu.make_async_copy(
+                k_ref.at[b, h, pl.ds(pg, ppb_max)], kbuf.at[slot],
+                sem.at[slot, 0],
+            ),
+            pltpu.make_async_copy(
+                v_ref.at[b, h, pl.ds(pg, ppb_max)], vbuf.at[slot],
+                sem.at[slot, 1],
+            ),
+        )
+
+    # warm-up: first block's pages in flight before the loop
+    dk0, dv0 = kv_dma(0, slot_scr[0, 0])
+    dk0.start()
+    dv0.start()
+
+    def body(i, carry):
+        m, l, acc = carry
+        slot = i % 2
+        pg_i = slot_scr[i, 0]
+        t0 = slot_scr[i, 1]
+
+        @pl.when(i + 1 < k_sel)
+        def _prefetch_next():
+            nslot = (i + 1) % 2
+            pg_n = slot_scr[jnp.minimum(i + 1, k_max - 1), 0]
+            dk, dv = kv_dma(nslot, pg_n)
+            dk.start()
+            dv.start()
+
+        dk, dv = kv_dma(slot, pg_i)
+        dk.wait()
+        dv.wait()
+        kf = kbuf[slot].reshape(W, D).astype(jnp.float32)
+        vf = vbuf[slot].reshape(W, D).astype(jnp.float32)
+
+        pos = pg_i * page_size + jnp.arange(W, dtype=jnp.int32)
+        ok = (pos >= t0) & (pos < t0 + bsz) & (pos < sl)
+        logits = jax.lax.dot_general(
+            q, kf, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale_qk                                       # [g, W]
+        logits = jnp.where(ok[None, :], logits, NEG_INF)
+
+        m_cur = jnp.max(logits, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m, m_cur)
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * alpha + jax.lax.dot_general(
+            p, vf, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((g, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((g, 1), jnp.float32)
+    acc0 = jnp.zeros((g, D), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, k_sel, body, (m0, l0, acc0))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "page_size", "ppb_max", "bits", "symmetric",
+        "sink_pages", "local_pages", "seg", "k_max", "p_sel", "interpret",
+    ),
+)
+def fused_decode(
+    q: jax.Array,              # [B, n_q, D]
+    rq: jax.Array,             # [B, n_q, Dp] rank queries
+    k_pages: jax.Array,        # [B, n_kv, n_pages, page, D]
+    v_pages: jax.Array,        # [B, n_kv, n_pages, page, D]
+    codes: jax.Array,          # [B, total_rows, Cw] store codes
+    scale: jax.Array,          # [B, n_kv, Dp] f32
+    zero: jax.Array,           # [B, n_kv, Dp] f32
+    row_off: jax.Array,        # [H] int32 descriptor arrays ----------------
+    n_blocks: jax.Array,       # [H] int32
+    top_k: jax.Array,          # [H] int32
+    bsz: jax.Array,            # [H] int32
+    ppb: jax.Array,            # [H] int32
+    seq_len: jax.Array,        # [B] int32
+    *,
+    page_size: int,
+    ppb_max: int,
+    bits: int,
+    symmetric: bool,
+    sink_pages: int,
+    local_pages: int,
+    seg: int,
+    k_max: int,
+    p_sel: int,
+    interpret: bool = False,
+):
+    """-> (out [B, n_q, D], page_table [B, H, P_sel] i32, page_valid bool).
+
+    One launch covers every (sequence, kv head) cell of the ragged grid;
+    the selected SET of blocks per head is identical to the staged
+    estimation -> ``lax.top_k`` -> expansion pipeline.
+    """
+    B, n_q, D = q.shape
+    n_kv = k_pages.shape[1]
+    n_pages = k_pages.shape[2]
+    g = n_q // n_kv
+    Dp = rq.shape[-1]
+    total_rows = codes.shape[1]
+    rq4 = rq.astype(jnp.float32).reshape(B, n_kv, g, Dp)
+    q4 = q.reshape(B, n_kv, g, D)
+
+    kernel = functools.partial(
+        _fused_decode_kernel,
+        bits=bits,
+        symmetric=symmetric,
+        seg=seg,
+        k_max=k_max,
+        p_sel=p_sel,
+        page_size=page_size,
+        ppb_max=ppb_max,
+        n_pages=n_pages,
+        total_rows=total_rows,
+        sink_pages=sink_pages,
+        local_pages=local_pages,
+        scale_qk=1.0 / float(np.sqrt(D)),
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=6,
+        grid=(B, n_kv),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),          # codes
+            pl.BlockSpec((1, 1, Dp), lambda b, h, *_: (b, h, 0)),
+            pl.BlockSpec((1, 1, Dp), lambda b, h, *_: (b, h, 0)),
+            pl.BlockSpec((1, 1, g, Dp), lambda b, h, *_: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, g, D), lambda b, h, *_: (b, h, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),          # k pages
+            pl.BlockSpec(memory_space=pltpu.ANY),          # v pages
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, D), lambda b, h, *_: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, p_sel), lambda b, h, *_: (b, h, 0)),
+            pl.BlockSpec((1, 1, p_sel), lambda b, h, *_: (b, h, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((seg, codes.shape[-1]), codes.dtype),
+            pltpu.VMEM((2, ppb_max, page_size, D), k_pages.dtype),
+            pltpu.VMEM((2, ppb_max, page_size, D), v_pages.dtype),
+            pltpu.VMEM((k_max, 128), jnp.int32),
+            pltpu.SemaphoreType.DMA(()),
+            pltpu.SemaphoreType.DMA((2, 2)),
+        ],
+    )
+    out, table, valid = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n_kv, g, D), q.dtype),
+            jax.ShapeDtypeStruct((B, n_kv, p_sel), jnp.int32),
+            jax.ShapeDtypeStruct((B, n_kv, p_sel), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        row_off.astype(jnp.int32),
+        n_blocks.astype(jnp.int32),
+        top_k.astype(jnp.int32),
+        bsz.astype(jnp.int32),
+        ppb.astype(jnp.int32),
+        seq_len.astype(jnp.int32),
+        codes,
+        scale.astype(jnp.float32),
+        zero.astype(jnp.float32),
+        rq4,
+        q4,
+        k_pages,
+        v_pages,
+    )
+    return out.reshape(B, n_q, D), table, valid > 0

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.ragged import RaggedLayout
+from repro.core.sparse_attention import as_paged
 from repro.kernels import (
     centroid_score,
     flash_attention as fa,
@@ -67,15 +68,18 @@ def centroid_scores(
 
 
 def flat_to_padded(flat: jax.Array, layout) -> jax.Array:
-    """[B, total_rows] -> [B, n_heads, max_blocks] with -inf pads."""
+    """[B, total_rows] -> [B, n_heads, max_blocks] with -inf pads.
+
+    ``scatter_rows``/``pad_mask`` are precomputed static layout arrays
+    (:class:`repro.core.ragged.RaggedLayout` cached properties) consumed
+    directly as gather indices — one batched ``take`` per call instead of
+    re-materializing a ``[B, H, max_blocks]`` broadcast index tensor every
+    decode step."""
     from repro.core.stacked import as_arrays
 
     la = as_arrays(layout)
-    B = flat.shape[0]
     rows, mask = la.scatter_rows, la.pad_mask                 # [H, M]
-    picked = jnp.take_along_axis(
-        flat[:, None, :], jnp.broadcast_to(rows[None], (B,) + rows.shape), axis=2
-    )
+    picked = jnp.take(flat, rows, axis=1)                     # [B, H, M]
     return jnp.where(mask[None], picked, NEG_INF)
 
 
@@ -115,19 +119,103 @@ def paged_attention(
     seq_len: Optional[jax.Array] = None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """q [B, n_q, D]; k/v dense [B, n_kv, S, D] viewed as pages."""
+    """q [B, n_q, D]; k/v either a pre-paged ``[B, n_kv, n_pages, page, D]``
+    view (the decode cache's native layout — no per-call reshape) or dense
+    ``[B, n_kv, S, D]`` (reshaped here once for offline callers)."""
     if interpret is None:
         interpret = default_interpret()
-    B, n_kv, S, D = k.shape
-    n_pages = S // page_size
-    k_pages = k.reshape(B, n_kv, n_pages, page_size, D)
-    v_pages = v.reshape(B, n_kv, n_pages, page_size, D)
+    k_pages, v_pages = as_paged(k, page_size), as_paged(v, page_size)
+    B = k_pages.shape[0]
     if seq_len is None:
+        S = k_pages.shape[2] * page_size
         seq_len = jnp.full((B,), S, jnp.int32)
     else:
         seq_len = jnp.broadcast_to(jnp.asarray(seq_len, jnp.int32), (B,))
     return pa.paged_attention(
         q, k_pages, v_pages, page_table, page_valid, seq_len, page_size,
+        interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fused decode: kernels 1+2+3 in one launch
+# ---------------------------------------------------------------------------
+
+
+def fused_decode(
+    q: jax.Array,               # [B, n_q, D]
+    rq: jax.Array,              # [B, n_q, Dp] rank queries
+    k: jax.Array,               # paged [B, n_kv, nP, page, D] or dense 4-D
+    v: jax.Array,
+    store,                      # repro.backends.CentroidStore (duck-typed)
+    layout,                     # RaggedLayout or LayoutArrays
+    sink_pages: int = 1,
+    local_pages: int = 4,
+    seq_len: Optional[jax.Array] = None,
+    max_pages_per_block: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-launch AB-Sparse decode (estimation -> top-k -> attention).
+
+    ``max_pages_per_block`` is the static DMA window (pages) of the fused
+    inner loop; it defaults to the layout's own maximum, which requires the
+    layout arrays to be concrete — inside a layer scan pass it explicitly
+    (e.g. from ``SparseConfig.candidate_block_sizes``).
+    -> (out [B, n_q, D], page_table [B, H, P_sel], page_valid [B, H, P_sel]).
+    """
+    from repro.core.stacked import as_arrays
+    from repro.kernels import fused_decode as fd
+
+    if interpret is None:
+        interpret = default_interpret()
+    la = as_arrays(layout)
+    kp = as_paged(k, la.page_size)
+    vp = as_paged(v, la.page_size)
+    B = q.shape[0]
+    if seq_len is None:
+        seq_len = jnp.full((B,), la.context_len, jnp.int32)
+    else:
+        seq_len = jnp.broadcast_to(jnp.asarray(seq_len, jnp.int32), (B,))
+    # Reconcile the static DMA window with the layout's true maximum
+    # wherever that is statically known — a window smaller than the largest
+    # assigned block would silently truncate its attention span.
+    layout_max: Optional[int] = None
+    if isinstance(layout, RaggedLayout):
+        layout_max = max(layout.pages_per_block)
+    else:
+        import numpy as np
+
+        try:
+            layout_max = int(np.max(jax.device_get(la.pages_per_block)))
+        except jax.errors.ConcretizationTypeError:
+            pass                      # traced (layer scan): caller must size it
+    if layout_max is not None:
+        max_pages_per_block = max(max_pages_per_block or 0, layout_max)
+    elif max_pages_per_block is None:
+        raise ValueError(
+            "fused_decode needs a static max_pages_per_block when the "
+            "layout arrays are traced (e.g. inside a layer scan); pass it "
+            "explicitly"
+        )
+    Dp = rq.shape[-1]
+    if store.bits == 0:
+        scale = jnp.ones((B, la.n_heads, Dp), jnp.float32)
+        zero = jnp.zeros((B, la.n_heads, Dp), jnp.float32)
+    else:
+        scale, zero = store.scale, store.zero
+    return fd.fused_decode(
+        q, rq, kp, vp, store.codes, scale, zero,
+        la.row_offsets, la.n_blocks, la.top_k,
+        la.block_sizes, la.pages_per_block, seq_len,
+        page_size=la.page_size,
+        ppb_max=max_pages_per_block,
+        bits=store.bits,
+        symmetric=store.symmetric,
+        sink_pages=sink_pages,
+        local_pages=local_pages,
+        seg=la.max_blocks,
+        k_max=la.max_top_k,
+        p_sel=la.selected_pages,
         interpret=interpret,
     )
 

@@ -171,6 +171,17 @@ def run_cell(
             if aplan.active else None
         ),
     }
+    if aplan.active:
+        # fused-decode ragged grid descriptor (one launch covers all heads)
+        stk = aplan.stacked
+        plan_info["ragged_grid"] = {
+            "centroid_rows": int(stk.total_rows),
+            "top_k_min": int(np.min(np.asarray(stk.top_k))),
+            "top_k_max": int(np.max(np.asarray(stk.top_k))),
+            "pages_per_block_max": int(
+                np.max(np.asarray(stk.pages_per_block))
+            ),
+        }
 
     n_dev = mesh.devices.size
     mem_dict = {

@@ -339,15 +339,28 @@ class Transformer:
         aplan = self.attention_plan(max_context)
         sparse = aplan.active
         if sparse:
-            cache["_layouts"] = aplan.stacked
-            cache["_offsets"] = aplan.offsets
+            # private copies: the engine donates the cache to its jit'd steps,
+            # and donating the plan's own (LRU-cached, shared) descriptor
+            # buffers would invalidate them for every other plan consumer.
+            cache["_layouts"] = jax.tree.map(jnp.array, aplan.stacked)
+            cache["_offsets"] = jnp.array(aplan.offsets)
 
         def per_pos(i, kind):
             entry = {}
             if kind == "attn":
-                entry["k"] = jnp.zeros(
-                    (nc, batch, cfg.n_kv_heads, max_context, hd), self.dtype
-                )
+                if sparse:
+                    # the sparse decode path holds the KV cache in its paged
+                    # [.., n_pages, page, hd] form — reshaped ONCE here at
+                    # allocation instead of on every paged-attention call.
+                    ps = cfg.sparse.page_size
+                    entry["k"] = jnp.zeros(
+                        (nc, batch, cfg.n_kv_heads, max_context // ps, ps, hd),
+                        self.dtype,
+                    )
+                else:
+                    entry["k"] = jnp.zeros(
+                        (nc, batch, cfg.n_kv_heads, max_context, hd), self.dtype
+                    )
                 entry["v"] = jnp.zeros_like(entry["k"])
                 if sparse:
                     stk = cache["_layouts"]
@@ -436,20 +449,25 @@ class Transformer:
                 vv = jnp.moveaxis(v, 1, 2)
                 if kind == "attn":
                     pad = max_context - S_tot
-                    new_entry["k"] = jnp.pad(
-                        kk, ((0, 0), (0, 0), (0, pad), (0, 0))
-                    )
-                    new_entry["v"] = jnp.pad(
-                        vv, ((0, 0), (0, 0), (0, pad), (0, 0))
-                    )
+                    kk = jnp.pad(kk, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                    vv = jnp.pad(vv, ((0, 0), (0, 0), (0, pad), (0, 0)))
                     if sparse:
+                        # cache holds the paged view; reshaped once here.
+                        ps = cfgl.sparse.page_size
+                        kk = kk.reshape(
+                            B, cfgl.n_kv_heads, max_context // ps, ps,
+                            cfgl.resolved_head_dim,
+                        )
+                        vv = vv.reshape(kk.shape)
                         store = self.backend.prefill_store(
-                            new_entry["k"], layer_layout, layer_offs,
+                            kk, layer_layout, layer_offs,
                             cfgl.sparse, quant=quant,
                         )
                         new_entry["codes"] = store.codes
                         new_entry["scale"] = store.scale
                         new_entry["zero"] = store.zero
+                    new_entry["k"] = kk
+                    new_entry["v"] = vv
                 else:
                     # ring-buffer fill: last min(W, S) tokens at slot pos % W
                     W = entry["k"].shape[-2]
@@ -564,7 +582,12 @@ class Transformer:
         rel = jnp.arange(C)
         positions = (offset + rel)[None]                  # [1, C]
         valid = rel < n_valid
-        S_max = cache["pos0"]["k"].shape[3]
+        paged = cache["pos0"]["k"].ndim == 6              # sparse-active cache
+        ps = cfg.sparse.page_size
+        if paged:
+            S_max = cache["pos0"]["k"].shape[3] * ps
+        else:
+            S_max = cache["pos0"]["k"].shape[3]
         # invalid rows scatter out of bounds -> dropped (JAX semantics).
         write_pos = jnp.where(valid, offset + rel, S_max)
 
@@ -574,19 +597,31 @@ class Transformer:
             new_entry = dict(entry)
             # mixed scalar/array advanced indices around the head slice put
             # the broadcast (chunk) axis first: updates are [C, n_kv, hd].
-            k_cache = entry["k"].at[slot, :, write_pos].set(
-                k[0].astype(entry["k"].dtype)
-            )
-            v_cache = entry["v"].at[slot, :, write_pos].set(
-                v[0].astype(entry["v"].dtype)
-            )
+            if paged:
+                k_cache = entry["k"].at[
+                    slot, :, write_pos // ps, write_pos % ps
+                ].set(k[0].astype(entry["k"].dtype))
+                v_cache = entry["v"].at[
+                    slot, :, write_pos // ps, write_pos % ps
+                ].set(v[0].astype(entry["v"].dtype))
+            else:
+                k_cache = entry["k"].at[slot, :, write_pos].set(
+                    k[0].astype(entry["k"].dtype)
+                )
+                v_cache = entry["v"].at[slot, :, write_pos].set(
+                    v[0].astype(entry["v"].dtype)
+                )
             new_entry["k"] = k_cache
             new_entry["v"] = v_cache
             # masked dense attention over the slot's rows: prefix + causal
             # chunk.  Rows beyond offset+i are masked, so stale garbage
             # past the live span never contributes.
-            kf = k_cache[slot].astype(jnp.float32)        # [n_kv, S, hd]
-            vf = v_cache[slot].astype(jnp.float32)
+            kf = k_cache[slot].reshape(
+                cfg.n_kv_heads, S_max, -1
+            ).astype(jnp.float32)                         # [n_kv, S, hd]
+            vf = v_cache[slot].reshape(
+                cfg.n_kv_heads, S_max, -1
+            ).astype(jnp.float32)
             g = cfg.n_heads // cfg.n_kv_heads
             hd = cfg.resolved_head_dim
             qf = jnp.moveaxis(q, 1, 2)[0].reshape(
@@ -644,7 +679,7 @@ class Transformer:
         cfg = self.cfg
         offs_all = cache["_offsets"]
         entry = cache["pos0"]
-        k_slot = entry["k"][:, slot]                      # [nc, n_kv, S, hd]
+        k_slot = entry["k"][:, slot]                      # [nc, n_kv, nP, ps, hd]
 
         def one(carry, xs):
             k_cyc, idx = xs
@@ -803,17 +838,31 @@ class Transformer:
         q = constrain(q, "batch", None, "head_dim")
         k_new = constrain(k_new, "batch", "kv_heads", "head_dim")
         v_new = constrain(v_new, "batch", "kv_heads", "head_dim")
-        k_cache = entry["k"]                              # [B, n_kv, S_max, hd]
+        k_cache = entry["k"]     # dense [B, n_kv, S, hd] or paged [.., nP, ps, hd]
         v_cache = entry["v"]
         bidx = jnp.arange(B)
-        k_cache = k_cache.at[bidx, :, seq_len].set(k_new.astype(k_cache.dtype))
-        v_cache = v_cache.at[bidx, :, seq_len].set(v_new.astype(v_cache.dtype))
-        k_cache = constrain(k_cache, "batch", "kv_heads", "kv_pages", "head_dim")
-        v_cache = constrain(v_cache, "batch", "kv_heads", "kv_pages", "head_dim")
+        if k_cache.ndim == 5:    # paged (sparse-active) cache
+            ps = k_cache.shape[3]
+            k_cache = k_cache.at[bidx, :, seq_len // ps, seq_len % ps].set(
+                k_new.astype(k_cache.dtype)
+            )
+            v_cache = v_cache.at[bidx, :, seq_len // ps, seq_len % ps].set(
+                v_new.astype(v_cache.dtype)
+            )
+            k_cache = constrain(
+                k_cache, "batch", "kv_heads", "kv_pages", None, "head_dim"
+            )
+            v_cache = constrain(
+                v_cache, "batch", "kv_heads", "kv_pages", None, "head_dim"
+            )
+        else:
+            k_cache = k_cache.at[bidx, :, seq_len].set(k_new.astype(k_cache.dtype))
+            v_cache = v_cache.at[bidx, :, seq_len].set(v_new.astype(v_cache.dtype))
+            k_cache = constrain(k_cache, "batch", "kv_heads", "kv_pages", "head_dim")
+            v_cache = constrain(v_cache, "batch", "kv_heads", "kv_pages", "head_dim")
         new_entry = dict(entry)
         new_entry["k"] = k_cache
         new_entry["v"] = v_cache
-        S_max = k_cache.shape[2]
         live = seq_len + 1
 
         if lay is None:

@@ -99,9 +99,15 @@ class Engine:
             serve_cfg, self.pool, self.prefix_cache, self.metrics,
             chunkable=self._chunkable,
         )
-        self._decode = jax.jit(self.model.decode_step)
-        self._chunk = jax.jit(self.model.prefill_chunk)
-        self._refresh = jax.jit(self.model.refresh_slot_store)
+        # the cache argument is donated: every jit'd step updates the cache
+        # functionally, and without donation XLA materializes a full copy of
+        # the KV pool per tick.  The engine never reuses a pre-step cache
+        # reference (it reassigns ``self.cache`` from each step's result),
+        # and ``init_cache`` gives the cache private copies of the shared
+        # plan descriptors, so donation is safe.
+        self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
+        self._chunk = jax.jit(self.model.prefill_chunk, donate_argnums=(1,))
+        self._refresh = jax.jit(self.model.refresh_slot_store, donate_argnums=(0,))
         self._chunk_len = min(serve_cfg.prefill_chunk, self.max_context)
         self._tokens_buf = np.zeros((self.max_batch,), np.int32)
         #: authoritative per-slot sequence lengths (tokens with KV in cache).
@@ -146,12 +152,24 @@ class Engine:
                 np.concatenate([kv["v"] for kv in adm.prefix_kv], axis=2)
             )
             L = adm.prefix_tokens
-            entry["k"] = entry["k"].at[:, adm.slot, :, :L].set(
-                k.astype(entry["k"].dtype)
-            )
-            entry["v"] = entry["v"].at[:, adm.slot, :, :L].set(
-                v.astype(entry["v"].dtype)
-            )
+            if entry["k"].ndim == 6:      # paged (sparse-active) cache
+                ps = entry["k"].shape[4]
+                nP = L // ps              # prefix spans are page-aligned
+                kp = k.reshape(k.shape[0], k.shape[1], nP, ps, k.shape[-1])
+                vp = v.reshape(kp.shape)
+                entry["k"] = entry["k"].at[:, adm.slot, :, :nP].set(
+                    kp.astype(entry["k"].dtype)
+                )
+                entry["v"] = entry["v"].at[:, adm.slot, :, :nP].set(
+                    vp.astype(entry["v"].dtype)
+                )
+            else:
+                entry["k"] = entry["k"].at[:, adm.slot, :, :L].set(
+                    k.astype(entry["k"].dtype)
+                )
+                entry["v"] = entry["v"].at[:, adm.slot, :, :L].set(
+                    v.astype(entry["v"].dtype)
+                )
             self.cache = dict(self.cache)
             self.cache["pos0"] = entry
 
@@ -258,8 +276,16 @@ class Engine:
         def fn(i: int):
             if not memo:
                 entry = self.cache["pos0"]
-                memo["k"] = np.asarray(entry["k"][:, slot, :, : n_pages * ps])
-                memo["v"] = np.asarray(entry["v"][:, slot, :, : n_pages * ps])
+                if entry["k"].ndim == 6:  # paged cache: slice whole pages
+                    memo["k"] = np.asarray(entry["k"][:, slot, :, :n_pages])
+                    memo["v"] = np.asarray(entry["v"][:, slot, :, :n_pages])
+                    memo["paged"] = True
+                else:
+                    memo["k"] = np.asarray(entry["k"][:, slot, :, : n_pages * ps])
+                    memo["v"] = np.asarray(entry["v"][:, slot, :, : n_pages * ps])
+                    memo["paged"] = False
+            if memo["paged"]:
+                return {"k": memo["k"][:, :, i], "v": memo["v"][:, :, i]}
             return {
                 "k": memo["k"][:, :, i * ps : (i + 1) * ps],
                 "v": memo["v"][:, :, i * ps : (i + 1) * ps],
