@@ -196,16 +196,22 @@ class AttentionPlan:
 
     @cached_property
     def stacked(self) -> LayoutArrays:
-        """All layer layouts as one ``[L, ...]`` array stack (scan-ready)."""
+        """All layer layouts as one ``[L, ...]`` array stack (scan-ready).
+
+        Host numpy children: this property is cached on the shared
+        (lru-cached) plan and its first access may occur under a trace, so
+        jnp constants here would leak tracers into every later consumer.
+        """
         return stack_layouts(list(self.layouts))
 
     @cached_property
-    def offsets(self) -> jax.Array:
-        """[n_layers, n_kv_heads] int32 flat-row offset of each head segment."""
+    def offsets(self) -> np.ndarray:
+        """[n_layers, n_kv_heads] int32 flat-row offset of each head segment
+        (host numpy — see :attr:`stacked` for why)."""
         offs = np.zeros((self.n_layers, self.n_kv_heads), np.int32)
         for l, lay in enumerate(self.layouts):
             offs[l] = lay.offsets[:-1]
-        return jnp.asarray(offs)
+        return offs
 
     def get_backend(self) -> "AttentionBackend":
         return get_backend(self.backend)

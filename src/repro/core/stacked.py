@@ -28,7 +28,12 @@ from repro.core.ragged import RaggedLayout
 @jax.tree_util.register_pytree_node_class
 @dataclass(frozen=True)
 class LayoutArrays:
-    """Array form of one layer's ragged layout (or a [L, ...] stack)."""
+    """Array form of one layer's ragged layout (or a [L, ...] stack).
+
+    Children may be host numpy arrays (plan-cached stacks from
+    :func:`stack_layouts`) or jax arrays (runtime views) — both are valid
+    pytree leaves for jit; device placement happens at the use site.
+    """
 
     scatter_rows: jax.Array      # [.., H, max_blocks] int32 flat-row gather idx
     pad_mask: jax.Array          # [.., H, max_blocks] bool
@@ -126,6 +131,13 @@ def stack_layouts(layouts: Sequence[RaggedLayout]) -> LayoutArrays:
     point at row 0 with ``pad_mask=False``; extra tiles map to head 0
     (their scores are garbage but never gathered); slot maps of layers with
     fewer top-k slots never reference the padded slots.
+
+    Children are host-side numpy arrays: the result is cached on the shared
+    :class:`~repro.backends.base.AttentionPlan`, and its first access may
+    happen under a trace (``jax.eval_shape`` over ``init_cache``) — jnp
+    constants created there would be tracers and poison the cache for every
+    later consumer.  Convert at the device use site (the model's cache
+    allocator already does ``jax.tree.map(jnp.array, ...)``).
     """
     assert layouts, "need at least one layout"
     ps = {l.page_size for l in layouts}
@@ -178,18 +190,18 @@ def stack_layouts(layouts: Sequence[RaggedLayout]) -> LayoutArrays:
         topk[i] = l.top_k_arr
 
     return LayoutArrays(
-        scatter_rows=jnp.asarray(scat),
-        pad_mask=jnp.asarray(mask),
-        block_starts=jnp.asarray(starts),
-        block_sizes=jnp.asarray(bsz),
-        slot_map=jnp.asarray(slot),
-        within_map=jnp.asarray(within),
-        pages_per_block=jnp.asarray(ppb),
-        tile_head=jnp.asarray(tiles),
-        topk_valid=jnp.asarray(tkv),
-        row_offsets=jnp.asarray(roff),
-        n_blocks=jnp.asarray(nblk),
-        top_k=jnp.asarray(topk),
+        scatter_rows=scat,
+        pad_mask=mask,
+        block_starts=starts,
+        block_sizes=bsz,
+        slot_map=slot,
+        within_map=within,
+        pages_per_block=ppb,
+        tile_head=tiles,
+        topk_valid=tkv,
+        row_offsets=roff,
+        n_blocks=nblk,
+        top_k=topk,
         page_size=layouts[0].page_size,
         tile_rows=layouts[0].tile_rows,
         max_top_k=max_top_k,

@@ -240,8 +240,18 @@ def main():
             for mp in meshes:
                 out = cell_path(arch, shape, mp)
                 if os.path.exists(out) and not args.force:
-                    print(f"skip {arch} {shape} mp={mp} (cached)")
-                    continue
+                    # only an ok:true artifact counts as cached — failure
+                    # records (and unreadable files) are retried, so one
+                    # crash can't permanently suppress a cell.
+                    try:
+                        with open(out) as f:
+                            prev = json.load(f)
+                    except (OSError, ValueError):
+                        prev = {}
+                    if prev.get("ok") is True:
+                        print(f"skip {arch} {shape} mp={mp} (cached)")
+                        continue
+                    print(f"retry {arch} {shape} mp={mp} (previous run failed)")
                 plan = MeshPlan(multi_pod=mp, remat=args.remat)
                 try:
                     res = run_cell(arch, shape, mp, plan)
