@@ -16,7 +16,6 @@ Traffic model per op (ring algorithms, per participating device):
 """
 from __future__ import annotations
 
-import json
 import re
 from typing import Dict, List, Tuple
 

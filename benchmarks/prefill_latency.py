@@ -1,0 +1,131 @@
+"""Sparse-vs-dense prefill: the TTFT term of long-context serving.
+
+Benchmarks the query-block sparse flash prefill kernel
+(:mod:`repro.kernels.sparse_prefill`) against the DENSE flash prefill
+kernel it replaces, both in Pallas interpret mode at a few context lengths
+— kernel vs kernel, so the wall clock reflects the work actually skipped
+rather than interpreter overhead.  Also records the structural win that is
+hardware-independent: the fraction of causal KV blocks each query block
+actually attends (dense == 1.0 by definition).
+
+Persists ``BENCH_prefill.json`` as the perf baseline the CI bench-gate
+checks (see ``benchmarks/check_regression.py``).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_prefill.json"
+
+
+def _time(fn, *args, iters=2):
+    jax.block_until_ready(fn(*args))
+    t0 = time.monotonic()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.monotonic() - t0) / iters
+
+
+def run_sparse_vs_dense(
+    B=1, D=64, n_kv=4, g=2, budget=256, block_q=64, contexts=(1024, 2048)
+):
+    from repro.backends import CentroidStore
+    from repro.backends.store import build_score_rows
+    from repro.config import SparseConfig
+    from repro.core.centroids import rank_query
+    from repro.core.ragged import layout_for
+    from repro.core.stacked import as_arrays
+    from repro.core.quantization import store_bits, store_symmetric
+    from repro.kernels import ops
+
+    key = jax.random.PRNGKey(0)
+    quant = "int4_asym"
+    out = {}
+    for S in contexts:
+        bs = tuple([16, 32, 64, 32] * (n_kv // 4))
+        lay = layout_for(bs, S, 16, budget)
+        la = as_arrays(lay)
+        cfg = SparseConfig(
+            token_budget=budget, sparse_prefill=True, prefill_block_q=block_q
+        )
+        q = jax.random.normal(key, (B, n_kv * g, S, D))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, n_kv, S, D))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, n_kv, S, D))
+        kp = k.reshape(B, n_kv, S // 16, 16, D)
+        vp = v.reshape(B, n_kv, S // 16, 16, D)
+        offs = jnp.asarray(lay.offsets[:-1], jnp.int32)
+        codes, scale, zero = build_score_rows(kp, la, offs, cfg, quant=quant)
+        ss = CentroidStore(
+            codes, scale, zero, store_bits(quant), store_symmetric(quant)
+        )
+        rq = rank_query(q, cfg.centroid_method, D)
+
+        sparse_fn = jax.jit(
+            lambda q, rq, kp, vp, ss: ops.sparse_prefill(
+                q, rq, kp, vp, ss, lay, block_q=block_q, interpret=True
+            )[0]
+        )
+        dense_fn = jax.jit(
+            lambda q, k, v: ops.flash_attention(
+                q, k, v, causal=True, interpret=True
+            )
+        )
+        t_sparse = _time(sparse_fn, q, rq, kp, vp, ss)
+        t_dense = _time(dense_fn, q, k, v)
+
+        _, nsel = ops.sparse_prefill(
+            q, rq, kp, vp, ss, lay, block_q=block_q, interpret=True
+        )
+        # causal block count per (head, query block) for the dense baseline
+        nQB = S // block_q
+        q_end = (np.arange(nQB) + 1) * block_q - 1
+        causal = np.stack(
+            [
+                np.minimum(q_end // b + 1, S // b)
+                for b in lay.block_sizes
+            ]
+        )                                                # [H, nQB]
+        frac = float(np.sum(np.asarray(nsel)[0]) / np.sum(causal))
+        out[f"S={S}"] = {
+            "sparse_ms": round(t_sparse * 1e3, 2),
+            "dense_ms": round(t_dense * 1e3, 2),
+            "speedup": round(t_dense / t_sparse, 2),
+            "blocks_attended_frac": round(frac, 4),
+        }
+    largest = out[f"S={contexts[-1]}"]
+    return {
+        "B": B,
+        "contexts": list(contexts),
+        "block_q": block_q,
+        "token_budget": budget,
+        "per_context": out,
+        "blocks_attended_frac": largest["blocks_attended_frac"],
+        "sparse_ms": largest["sparse_ms"],
+        "dense_ms": largest["dense_ms"],
+        "speedup": largest["speedup"],
+        "launches_per_layer_sparse": 1,
+    }
+
+
+def run(**kw):
+    res = run_sparse_vs_dense(**kw)
+    BENCH_PATH.write_text(json.dumps(res, indent=2) + "\n")
+    t = sum(v["sparse_ms"] for v in res["per_context"].values())
+    return {
+        "name": "prefill_latency",
+        "us_per_call": t * 1e3 / max(len(res["per_context"]), 1),
+        "derived": res["per_context"],
+    }
+
+
+if __name__ == "__main__":
+    for k, v in run()["derived"].items():
+        print(k, v)
+    print("baseline written to", BENCH_PATH)

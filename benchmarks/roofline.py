@@ -24,7 +24,6 @@ dominant term, and the headline roofline fraction:
 """
 from __future__ import annotations
 
-import glob
 import json
 import os
 from dataclasses import dataclass

@@ -7,7 +7,6 @@ else executes at CPU smoke scale.
 from __future__ import annotations
 
 import json
-import sys
 
 
 def main() -> None:
@@ -17,6 +16,7 @@ def main() -> None:
         budget_sweep,
         decode_latency,
         kernel_bench,
+        prefill_latency,
         quant_ablation,
         sensitivity,
         serving_bench,
@@ -29,6 +29,7 @@ def main() -> None:
         budget_sweep,
         kernel_bench,
         decode_latency,
+        prefill_latency,
         batch_throughput,
         serving_bench,
     ]
@@ -50,7 +51,7 @@ def main() -> None:
             worst = min(rows, key=lambda r: r.fraction)
             collbound = max(rows, key=lambda r: r.collective_s / max(r.bound_s, 1e-12))
             print(
-                f"roofline_summary,0,"
+                "roofline_summary,0,"
                 + json.dumps(
                     {
                         "cells": len(rows),

@@ -9,7 +9,6 @@ from __future__ import annotations
 import time
 
 import jax
-import numpy as np
 
 
 def run(budget=1024, S=4096, D=64, n_heads=12, samples=2):

@@ -9,7 +9,6 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, smoke_variant
 from repro.core import calibrate

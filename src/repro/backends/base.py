@@ -213,6 +213,23 @@ class AttentionPlan:
             offs[l] = lay.offsets[:-1]
         return offs
 
+    @cached_property
+    def prefill_max_slots(self) -> int:
+        """Static per-(query-block, head) slot bound of the sparse prefill
+        kernel (max over layers) — sized once here so the layer scan can
+        pass it as a compile-time constant."""
+        sp = self.sparse
+        return max(
+            (
+                lay.prefill_max_slots(
+                    sp.prefill_block_q, sp.sink_pages, sp.local_pages,
+                    sp.prefill_topk_scale,
+                )
+                for lay in self.layouts
+            ),
+            default=0,
+        )
+
     def get_backend(self) -> "AttentionBackend":
         return get_backend(self.backend)
 
@@ -321,6 +338,74 @@ class AttentionBackend:
             codes, store.scale, store.zero, store.bits, store.symmetric
         )
 
+    def prefill_score_rows(
+        self,
+        k_cache: jax.Array,
+        layout,                               # LayoutArrays (scan-safe)
+        offsets: jax.Array,
+        sparse: SparseConfig,
+        quant: Optional[str] = None,
+        sel_nb=None,
+    ) -> "CentroidStore":
+        """Full-sequence prefill scoring segment (per-ROW affine codes —
+        a row's bytes depend only on its own block's keys, the invariant
+        chunked sparse prefill relies on).  Shared across backends."""
+        from repro.backends.store import build_score_rows
+
+        codes, scale, zero = build_score_rows(
+            k_cache, layout, offsets, sparse, quant, sel_nb=sel_nb
+        )
+        q = sparse.quant if quant is None else quant
+        return CentroidStore(codes, scale, zero, store_bits(q), store_symmetric(q))
+
+    def prefill_stores(
+        self,
+        k_cache: jax.Array,
+        layout,
+        offsets: jax.Array,
+        sparse: SparseConfig,
+        quant: Optional[str] = None,
+    ) -> Tuple["CentroidStore", "CentroidStore"]:
+        """(decode store, prefill scoring segment) from ONE page-stats pass
+        over the K cache — sparse prefill needs both per layer."""
+        from repro.backends.store import _selected_rank_keys, build_store_codes
+
+        from repro.core.stacked import as_arrays
+
+        la = as_arrays(layout)
+        sel_nb = _selected_rank_keys(k_cache, la, sparse)
+        store = build_store_codes(
+            k_cache, la, offsets, sparse, quant, sel_nb=sel_nb
+        )
+        score = self.prefill_score_rows(
+            k_cache, la, offsets, sparse, quant, sel_nb=sel_nb
+        )
+        return store, score
+
+    def refresh_score_rows(
+        self,
+        score_store: "CentroidStore",
+        k_cache: jax.Array,
+        layout,
+        offsets: jax.Array,
+        chunk_start: jax.Array,
+        chunk_end: jax.Array,
+        sparse: SparseConfig,
+        window: int,
+    ) -> "CentroidStore":
+        """Incremental scoring-segment update: re-encode the rows of blocks
+        completed by ``[chunk_start, chunk_end)`` (chunked prefill)."""
+        from repro.backends.store import refresh_score_rows
+
+        codes, scale, zero = refresh_score_rows(
+            score_store.codes, score_store.scale, score_store.zero,
+            k_cache, layout, offsets, chunk_start, chunk_end, sparse, window,
+            bits=score_store.bits, symmetric=score_store.symmetric,
+        )
+        return CentroidStore(
+            codes, scale, zero, score_store.bits, score_store.symmetric
+        )
+
     # -- execute stages ------------------------------------------------------
 
     def scores(
@@ -341,6 +426,40 @@ class AttentionBackend:
         seq_len: Optional[jax.Array] = None,
     ) -> jax.Array:
         raise NotImplementedError
+
+    def prefill_attention(
+        self,
+        q: jax.Array,                         # [B, Hq, Sq, D]
+        k: jax.Array,                         # paged [B, n_kv, nP, page, D]
+        v: jax.Array,
+        score_store: Optional[CentroidStore],  # per-row prefill segment
+        layout,
+        sparse: SparseConfig,
+        n_valid: Optional[jax.Array] = None,  # [B] live tokens after chunk
+        chunk_offset=0,                       # abs pos of q[..., 0, :]
+        max_pages_per_block: Optional[int] = None,
+        max_slots: Optional[int] = None,
+    ) -> Tuple[jax.Array, Optional[jax.Array]]:
+        """Query-block sparse prefill attention: each query block attends
+        forced (sink + local/diagonal) blocks plus its top-scored blocks.
+        Default implementation is the pure-jnp selection-exact oracle
+        (:func:`repro.kernels.ops.sparse_prefill_reference` — same shared
+        preamble as the kernel entry point); the Pallas backend overrides
+        with the fused kernel.  ``chunk_offset`` must be a multiple of
+        ``sparse.prefill_block_q`` (chunked replay).
+        -> (out [B, Hq, Sq, D], n_attended [B, n_kv, nQB])."""
+        from repro.kernels import ops
+
+        rq = rank_query(q, sparse.centroid_method, q.shape[-1])
+        return ops.sparse_prefill_reference(
+            q, rq, k, v, score_store, layout,
+            sink_pages=sparse.sink_pages,
+            local_pages=sparse.local_pages,
+            block_q=sparse.prefill_block_q,
+            topk_scale=sparse.prefill_topk_scale,
+            n_valid=n_valid,
+            chunk_offset=chunk_offset,
+        )
 
     def decode(
         self,

@@ -11,8 +11,8 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 
-from repro.backends.base import CentroidStore
 from repro.backends.reference import ReferenceBackend
 from repro.core.sparse_attention import as_dense, dense_decode_attention
 
@@ -29,3 +29,35 @@ class DenseBackend(ReferenceBackend):
     ) -> Tuple[jax.Array, Optional[jax.Array]]:
         out = dense_decode_attention(q, as_dense(k), as_dense(v), seq_len=seq_len)
         return out, None
+
+    def prefill_attention(
+        self, q, k, v, score_store, layout, sparse,
+        n_valid=None, chunk_offset=0,
+        max_pages_per_block=None, max_slots=None,
+    ):
+        """Full-attention prefill oracle: every query attends its whole
+        causal prefix; selection is ignored.  This is what the sparse
+        prefill parity suite compares against at generous budgets."""
+        kd = as_dense(k).astype(jnp.float32)
+        vd = as_dense(v).astype(jnp.float32)
+        B, Hq, Sq, D = q.shape
+        n_kv = kd.shape[1]
+        g = Hq // n_kv
+        S = kd.shape[2]
+        if n_valid is None:
+            n_valid = jnp.asarray(chunk_offset + Sq, jnp.int32)
+        n_valid = jnp.broadcast_to(jnp.asarray(n_valid, jnp.int32), (B,))
+        qpos = jnp.asarray(chunk_offset, jnp.int32) + jnp.arange(Sq)
+        qf = q.reshape(B, n_kv, g, Sq, D).astype(jnp.float32)
+        logits = jnp.einsum("bhgqd,bhsd->bhgqs", qf, kd) / jnp.sqrt(
+            jnp.float32(D)
+        )
+        pos = jnp.arange(S, dtype=jnp.int32)
+        ok = (
+            (pos[None, None, :] <= qpos[None, :, None])
+            & (pos[None, None, :] < n_valid[:, None, None])
+        )[:, None, None]                                 # [B,1,1,Sq,S]
+        logits = jnp.where(ok, logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhgqs,bhsd->bhgqd", probs, vd)
+        return out.reshape(B, Hq, Sq, D).astype(q.dtype), None

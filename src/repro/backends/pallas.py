@@ -20,7 +20,6 @@ from __future__ import annotations
 from typing import List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.backends.base import AttentionBackend, CentroidStore
@@ -73,6 +72,31 @@ class PallasBackend(AttentionBackend):
 
         return ops.paged_attention(
             q, k, v, page_table, page_valid, page_size, seq_len,
+            interpret=self._interp(),
+        )
+
+    def prefill_attention(
+        self, q, k, v, score_store, layout, sparse,
+        n_valid=None, chunk_offset=0,
+        max_pages_per_block=None, max_slots=None,
+    ) -> Tuple[jax.Array, Optional[jax.Array]]:
+        """Query-block sparse flash prefill in ONE Pallas launch
+        (:mod:`repro.kernels.sparse_prefill`); the base-class jnp oracle
+        remains the parity reference."""
+        from repro.kernels import ops
+
+        rq = rank_query(q, sparse.centroid_method, q.shape[-1])
+        return ops.sparse_prefill(
+            q, rq, k, v, score_store, layout,
+            sink_pages=sparse.sink_pages,
+            local_pages=sparse.local_pages,
+            block_q=sparse.prefill_block_q,
+            topk_scale=sparse.prefill_topk_scale,
+            n_valid=n_valid,
+            chunk_offset=chunk_offset,
+            max_pages_per_block=max_pages_per_block
+            or sparse.max_block_size // sparse.page_size,
+            max_slots=max_slots,
             interpret=self._interp(),
         )
 

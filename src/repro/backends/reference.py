@@ -2,10 +2,9 @@
 Pallas kernels are validated against)."""
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import List
 
 import jax
-import jax.numpy as jnp
 
 from repro.backends.base import AttentionBackend, CentroidStore
 from repro.core import estimation as est

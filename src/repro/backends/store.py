@@ -55,27 +55,11 @@ def _merge_page_stats(pmax, pmin, pmean, group: int, method: str, Dp: int):
     return jnp.pad(rk, ((0, 0), (0, 0), (0, n_pages - nb), (0, 0)))
 
 
-def build_store_codes(
-    k_cache: jax.Array,
-    layout,
-    offsets: jax.Array,
-    sparse: SparseConfig,
-    quant: Optional[str] = None,
-):
-    """k_cache — paged ``[B, n_kv, n_pages, page, hd]`` (the decode cache's
-    native layout) or dense ``[B, n_kv, S_max, hd]`` — ->
-    :class:`CentroidStore` for ONE layer in the flattened layout (scan-safe;
-    ``layout`` is LayoutArrays)."""
-    from repro.backends.base import CentroidStore
-
+def _selected_rank_keys(k_cache: jax.Array, layout, sparse: SparseConfig):
+    """Paged/dense K cache -> per-head rank keys at each head's (possibly
+    traced) block size: ``(sel [B, n_kv, n_pages, Dp], nb_h [n_kv])`` where
+    the first ``nb_h[h]`` rows of head ``h`` are its rank keys."""
     la = as_arrays(layout)
-    quant = sparse.quant if quant is None else quant
-    bits = store_bits(quant)
-    symmetric = store_symmetric(quant)
-    if bits not in (0, 4, 8):
-        raise ValueError(
-            f"centroid store supports none/int8/int4 schemes, got {quant!r}"
-        )
     method = sparse.centroid_method
     page = sparse.page_size
     if k_cache.ndim == 4:
@@ -84,7 +68,6 @@ def build_store_codes(
     B, n_kv, n_pages, _, hd = k_cache.shape
     S_max = n_pages * page
     Dp = padded_rank_key_width(hd, method)
-    rows_total = la.total_rows
     cands = sparse.candidate_block_sizes
 
     pages = k_cache.astype(jnp.float32)
@@ -103,6 +86,44 @@ def build_store_codes(
         hit = (bsz == c)
         sel = jnp.where(hit[None, :, None, None], merged[ci], sel)
         nb_h = jnp.where(hit, S_max // c, nb_h)
+    return sel, nb_h
+
+
+def build_store_codes(
+    k_cache: jax.Array,
+    layout,
+    offsets: jax.Array,
+    sparse: SparseConfig,
+    quant: Optional[str] = None,
+    sel_nb=None,
+):
+    """k_cache — paged ``[B, n_kv, n_pages, page, hd]`` (the decode cache's
+    native layout) or dense ``[B, n_kv, S_max, hd]`` — ->
+    :class:`CentroidStore` for ONE layer in the flattened layout (scan-safe;
+    ``layout`` is LayoutArrays).  ``sel_nb`` accepts a precomputed
+    :func:`_selected_rank_keys` result so callers that also build the
+    prefill scoring segment pay for the page-stats merge once."""
+    from repro.backends.base import CentroidStore
+
+    la = as_arrays(layout)
+    quant = sparse.quant if quant is None else quant
+    bits = store_bits(quant)
+    symmetric = store_symmetric(quant)
+    if bits not in (0, 4, 8):
+        raise ValueError(
+            f"centroid store supports none/int8/int4 schemes, got {quant!r}"
+        )
+    method = sparse.centroid_method
+    page = sparse.page_size
+    if k_cache.ndim == 4:
+        B, n_kv, S_max, hd = k_cache.shape
+        k_cache = k_cache.reshape(B, n_kv, S_max // page, page, hd)
+    B, n_kv, n_pages, _, hd = k_cache.shape
+    Dp = padded_rank_key_width(hd, method)
+    rows_total = la.total_rows
+    if sel_nb is None:
+        sel_nb = _selected_rank_keys(k_cache, la, sparse)
+    sel, nb_h = sel_nb
     # sel: per head, the first nb_h[h] rows are that head's rank keys.
 
     # per-head affine params over valid blocks only
@@ -135,6 +156,134 @@ def build_store_codes(
         if bits == 4:
             codes = pack_split_half(codes)
     return CentroidStore(codes, scale, zero, bits, symmetric)
+
+
+def _encode_score_rows(rk_rows: jax.Array, bits: int, symmetric: bool):
+    """Rank-key rows ``[..., Dp]`` -> per-ROW affine codes.
+
+    The prefill scoring segment quantizes each block row with its own scalar
+    (scale, zero) over the channel axis — unlike the decode store's
+    per-(head, channel) params, a row's bytes depend ONLY on that block's
+    keys, which is what makes chunked sparse prefill token-identical to the
+    single-shot build (a completed block encodes the same bytes whenever it
+    is encoded).  ``bits == 0`` returns identity params (concrete arrays,
+    never None — callers DMA / cache them unconditionally)."""
+    if bits == 0:
+        shp = rk_rows.shape[:-1] + (1,)
+        return (
+            rk_rows.astype(jnp.float32),
+            jnp.ones(shp, jnp.float32),
+            jnp.zeros(shp, jnp.float32),
+        )
+    xmin = rk_rows.min(axis=-1, keepdims=True)
+    xmax = rk_rows.max(axis=-1, keepdims=True)
+    scale, zero = affine_params_from_minmax(xmin, xmax, bits, symmetric)
+    codes = encode_affine(rk_rows, scale, zero, bits, symmetric)
+    if bits == 4:
+        codes = pack_split_half(codes)
+    return codes, scale, zero
+
+
+def build_score_rows(
+    k_cache: jax.Array,
+    layout,
+    offsets: jax.Array,
+    sparse: SparseConfig,
+    quant: Optional[str] = None,
+    sel_nb=None,
+):
+    """Full-sequence prefill scoring segment (scan-safe).
+
+    -> ``(codes [B, rows, Cw], scale [B, rows, 1], zero [B, rows, 1])`` in
+    the flattened ragged row layout (identity params when unquantized).
+    Rows of blocks beyond the live context are built from
+    whatever is in the cache — they are never scored (the kernel only scores
+    blocks fully behind a query block's local window).  ``sel_nb`` accepts
+    a precomputed :func:`_selected_rank_keys` result (see
+    :func:`build_store_codes`)."""
+    la = as_arrays(layout)
+    quant = sparse.quant if quant is None else quant
+    bits = store_bits(quant)
+    symmetric = store_symmetric(quant)
+    if sel_nb is None:
+        sel_nb = _selected_rank_keys(k_cache, la, sparse)
+    sel, _ = sel_nb                                     # [B, n_kv, nP, Dp]
+    n_pages = sel.shape[2]
+    rows_total = la.total_rows
+    row_head = jnp.repeat(
+        la.tile_head, la.tile_rows, total_repeat_length=rows_total
+    )
+    row_off = offsets[row_head]
+    row_j = jnp.clip(
+        jnp.arange(rows_total, dtype=jnp.int32) - row_off, 0, n_pages - 1
+    )
+    rk_rows = sel[:, row_head, row_j]                   # [B, rows, Dp]
+    return _encode_score_rows(rk_rows, bits, symmetric)
+
+
+def refresh_score_rows(
+    codes: jax.Array,                  # [B, rows, Cw]
+    scale: Optional[jax.Array],        # [B, rows, 1]
+    zero: Optional[jax.Array],
+    k_cache: jax.Array,                # paged [B, n_kv, n_pages, page, hd]
+    layout,
+    offsets: jax.Array,
+    chunk_start: jax.Array,            # scalar: first token of the chunk
+    chunk_end: jax.Array,              # scalar: one past the chunk's last token
+    sparse: SparseConfig,
+    window: int,                       # static token window, multiple of Bmax
+    bits: Optional[int] = None,
+    symmetric: Optional[bool] = None,
+):
+    """Incremental prefill-scoring update: re-encode the rows of every block
+    COMPLETED by the chunk ``[chunk_start, chunk_end)`` from a static-size
+    K window, leaving all other rows untouched.  Blocks still partial at
+    ``chunk_end`` keep their stale bytes — they are not scoreable until a
+    later chunk completes them (and that chunk's window covers them)."""
+    la = as_arrays(layout)
+    bits = store_bits(sparse.quant) if bits is None else bits
+    symmetric = store_symmetric(sparse.quant) if symmetric is None else symmetric
+    page = sparse.page_size
+    B, n_kv, n_pages, _, hd = k_cache.shape
+    S_max = n_pages * page
+    bmax = sparse.max_block_size
+    assert window % bmax == 0 and window <= S_max, (window, bmax, S_max)
+
+    # Bmax-aligned window covering every block ending in (start, end]: such
+    # blocks span [start + 1 - bmax, end], so a window of
+    # ``chunk + 2 * bmax`` tokens anchored one (aligned) bmax before the
+    # chunk start always contains them.
+    assert window >= bmax  # caller sizes it as chunk_len + 2 * bmax
+    w0 = jnp.clip((chunk_start - bmax) // bmax * bmax, 0, S_max - window)
+    win = jax.lax.dynamic_slice(
+        k_cache, (0, 0, w0 // page, 0, 0),
+        (B, n_kv, window // page, page, hd),
+    )
+    sel_win, _ = _selected_rank_keys(win, la, sparse)   # [B, n_kv, nW, Dp]
+    new_codes, new_scale, new_zero = _encode_score_rows(
+        sel_win, bits, symmetric
+    )                                                   # [B, n_kv, nW, ...]
+
+    n_win = window // page                              # max window rows/head
+    bsz = la.block_sizes                                # [n_kv]
+    i = jnp.arange(n_win, dtype=jnp.int32)[None, :]     # [1, nW]
+    jg = w0 // bsz[:, None] + i                         # global block index
+    end_tok = (jg + 1) * bsz[:, None]
+    upd = (
+        (i < window // bsz[:, None])
+        & (end_tok > chunk_start)
+        & (end_tok <= chunk_end)
+    )
+    rows_idx = jnp.where(
+        upd, offsets[:, None] + jg, la.total_rows       # OOB -> dropped
+    ).reshape(-1)                                       # [n_kv * nW]
+    bidx = jnp.arange(B)[:, None]
+    flat = lambda a: a.reshape(B, n_kv * n_win, a.shape[-1])
+    codes = codes.at[bidx, rows_idx[None]].set(flat(new_codes))
+    if bits:
+        scale = scale.at[bidx, rows_idx[None]].set(flat(new_scale))
+        zero = zero.at[bidx, rows_idx[None]].set(flat(new_zero))
+    return codes, scale, zero
 
 
 def refresh_tail_codes(

@@ -9,7 +9,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from dataclasses import dataclass, field
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 # ---------------------------------------------------------------------------
 # Sparse attention (the paper's technique)
@@ -33,6 +33,20 @@ class SparseConfig:
     #: staged three-kernel pipeline.  Only honoured by the "pallas" backend;
     #: the staged path remains the fallback and the parity oracle.
     fused_decode: bool = False
+    #: query-block sparse prefill: each query block scores the running
+    #: centroid segment and attends only its top-K KV blocks (unioned with
+    #: sink + local/diagonal blocks, so early query blocks stay exact).
+    #: Opt-in; the dense flash prefill remains the default and the parity
+    #: oracle.
+    sparse_prefill: bool = False
+    #: per-head prefill block budget = ceil(K_h * prefill_topk_scale):
+    #: prefill tolerates a different (usually larger) budget than decode
+    #: because each selection is amortized over a whole query block.
+    prefill_topk_scale: float = 1.0
+    #: query-block size of the sparse prefill kernel.  Chunked sparse
+    #: prefill requires chunk boundaries aligned to this (the serving
+    #: scheduler aligns automatically); must be a multiple of ``page_size``.
+    prefill_block_q: int = 64
     page_size: int = PAGE_SIZE
     candidate_block_sizes: Tuple[int, ...] = CANDIDATE_BLOCK_SIZES
     #: token budget T shared by all heads (paper fixes 4096 / 4% of context).

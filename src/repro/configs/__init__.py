@@ -8,9 +8,9 @@ smoke tests (full configs are only ever lowered via the dry-run).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Tuple
 
-from repro.config import ModelConfig, MoEConfig, SparseConfig
+from repro.config import ModelConfig, MoEConfig
 
 from . import (
     musicgen_large,

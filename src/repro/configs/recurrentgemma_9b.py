@@ -9,7 +9,6 @@ cache never grows with context; there is nothing for Top-K block selection
 to prune.  The arch is implemented WITHOUT the sparse path (see DESIGN.md
 §Arch-applicability).
 """
-import dataclasses
 
 from repro.config import ModelConfig, SparseConfig
 

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.centroids import rank_query
-from repro.core.ragged import RaggedLayout, uniform_layout
+from repro.core.ragged import uniform_layout
 from repro.core.recall import attention_probs, recall_from_mask
 from repro.core.selection import pages_to_token_mask, select_page_table
 

@@ -22,7 +22,6 @@ widths are zero-padded to the 128-lane boundary for the Pallas kernel.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,7 @@ scores of the query heads in a group are max-pooled onto their kv head
 """
 from __future__ import annotations
 
-from typing import Optional, Union
+from typing import Union
 
 import jax
 import jax.numpy as jnp

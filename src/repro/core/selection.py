@@ -15,7 +15,7 @@ scanned over — see :mod:`repro.core.stacked`).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple, Union
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

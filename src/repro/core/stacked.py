@@ -16,7 +16,7 @@ layer layouts convert via :func:`stack_layouts`.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Sequence, Tuple, Union
+from typing import Sequence, Union
 
 import jax
 import jax.numpy as jnp

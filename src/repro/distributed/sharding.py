@@ -24,13 +24,11 @@ model axis.
 """
 from __future__ import annotations
 
-import math
 import threading
 from contextlib import contextmanager
 from typing import Dict, Optional, Sequence, Tuple, Union
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 AxisVal = Union[None, str, Tuple[str, ...]]

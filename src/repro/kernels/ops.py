@@ -17,7 +17,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.ragged import RaggedLayout
+from repro.core.ragged import RaggedLayout, prefill_max_slots_arrays
 from repro.core.sparse_attention import as_paged
 from repro.kernels import (
     centroid_score,
@@ -218,6 +218,185 @@ def fused_decode(
         p_sel=la.selected_pages,
         interpret=interpret,
     )
+
+
+# ---------------------------------------------------------------------------
+# Sparse prefill: query-block sparse flash attention
+# ---------------------------------------------------------------------------
+
+
+def _prefill_query_blocks(
+    q, rq, kp, la, block_q, topk_scale, n_valid, chunk_offset
+):
+    """Shared preamble of the sparse-prefill kernel AND its jnp oracle:
+    query-block padding/reshape, the prefill-scaled per-head K, live-length
+    broadcast, and the chunk's query-block base index.  One definition so
+    the two entry points cannot drift apart."""
+    B, Hq, Sq, _ = q.shape
+    n_kv = kp.shape[1]
+    g = Hq // n_kv
+    nQB = -(-Sq // block_q)
+    pad = nQB * block_q - Sq
+    if n_valid is None:
+        n_valid = jnp.asarray(chunk_offset + Sq, jnp.int32)
+    n_valid = jnp.broadcast_to(jnp.asarray(n_valid, jnp.int32), (B,))
+    qb0 = jnp.asarray(chunk_offset, jnp.int32).reshape(-1)[:1] // block_q
+
+    def to_blocks(x):
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        x = x.reshape(B, n_kv, g, nQB, block_q, x.shape[-1])
+        return jnp.moveaxis(x, 3, 2)       # [B, n_kv, nQB, g, BQ, .]
+
+    k_sel = jnp.clip(
+        jnp.ceil(la.top_k.astype(jnp.float32) * topk_scale).astype(jnp.int32),
+        1, la.n_blocks,
+    )
+    q6 = to_blocks(q)
+    rq6 = to_blocks(rq.astype(jnp.float32))
+    return q6, rq6, k_sel, n_valid, qb0, nQB
+
+
+def _from_blocks(out6, Sq):
+    B, n_kv, nQB, g, bq, D = out6.shape
+    out = jnp.moveaxis(out6, 2, 3).reshape(B, n_kv * g, nQB * bq, D)
+    return out[:, :, :Sq]
+
+
+def sparse_prefill_reference(
+    q: jax.Array,               # [B, Hq, Sq, D]
+    rq: jax.Array,              # [B, Hq, Sq, Dp] per-token rank queries
+    k: jax.Array,               # paged [B, n_kv, nP, page, D] or dense 4-D
+    v: jax.Array,
+    score_store,                # duck-typed: codes/scale/zero/bits/symmetric
+    layout,
+    sink_pages: int = 1,
+    local_pages: int = 4,
+    block_q: int = 64,
+    topk_scale: float = 1.0,
+    n_valid: Optional[jax.Array] = None,
+    chunk_offset=0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Pure-jnp selection-exact oracle of :func:`sparse_prefill` — same
+    signature shape, same shared preamble, dense masked attention."""
+    from repro.core.stacked import as_arrays
+    from repro.kernels import ref
+
+    la = as_arrays(layout)
+    kp = as_paged(k, la.page_size)
+    vp = as_paged(v, la.page_size)
+    Sq = q.shape[2]
+    q6, rq6, k_sel, n_valid, qb0, _ = _prefill_query_blocks(
+        q, rq, kp, la, block_q, topk_scale, n_valid, chunk_offset
+    )
+    rank_rows = ref.dequant_score_rows(
+        score_store.codes, score_store.scale, score_store.zero,
+        score_store.bits, score_store.symmetric,
+    )
+    out6, n_att = ref.sparse_prefill_ref(
+        q6, rq6, kp, vp, rank_rows, la, k_sel, n_valid, qb0[0], block_q,
+        sink_pages, local_pages,
+    )
+    return _from_blocks(out6, Sq), n_att
+
+
+def sparse_prefill(
+    q: jax.Array,               # [B, Hq, Sq, D]
+    rq: jax.Array,              # [B, Hq, Sq, Dp] per-token rank queries
+    k: jax.Array,               # paged [B, n_kv, nP, page, D] or dense 4-D
+    v: jax.Array,
+    score_store,                # duck-typed: codes/scale/zero/bits/symmetric
+    layout,                     # RaggedLayout or LayoutArrays
+    sink_pages: int = 1,
+    local_pages: int = 4,
+    block_q: int = 64,
+    topk_scale: float = 1.0,
+    n_valid: Optional[jax.Array] = None,
+    chunk_offset=0,             # absolute pos of q[..., 0, :]; block_q-aligned
+    max_pages_per_block: Optional[int] = None,
+    max_slots: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Single-launch query-block sparse prefill over the ragged layout.
+
+    ``score_store`` holds the running prefill scoring segment (per-ROW
+    affine codes from :func:`repro.backends.store.build_score_rows`).
+    ``chunk_offset``/``n_valid`` replay later chunks of a chunked prefill
+    through the identical kernel (`n_valid` defaults to
+    ``chunk_offset + Sq``, the live length after this chunk).
+    -> (out [B, Hq, Sq, D], n_attended [B, n_kv, nQB]).
+    """
+    from repro.core.stacked import as_arrays
+    from repro.kernels import sparse_prefill as sp
+
+    if interpret is None:
+        interpret = default_interpret()
+    la = as_arrays(layout)
+    kp = as_paged(k, la.page_size)
+    vp = as_paged(v, la.page_size)
+    Sq = q.shape[2]
+    q6, rq6, k_sel, n_valid, qb0, _ = _prefill_query_blocks(
+        q, rq, kp, la, block_q, topk_scale, n_valid, chunk_offset
+    )
+
+    # static DMA window / slot bound: from the concrete layout when
+    # available, else the caller must size them (layer-scan case).
+    import numpy as np
+
+    if isinstance(layout, RaggedLayout):
+        max_pages_per_block = max(
+            max_pages_per_block or 0, max(layout.pages_per_block)
+        )
+        max_slots = max(
+            max_slots or 0,
+            layout.prefill_max_slots(
+                block_q, sink_pages, local_pages, topk_scale
+            ),
+        )
+    else:
+        try:
+            max_pages_per_block = max(
+                max_pages_per_block or 0,
+                int(np.max(jax.device_get(la.pages_per_block))),
+            )
+            max_slots = max(
+                max_slots or 0,
+                prefill_max_slots_arrays(
+                    jax.device_get(la.block_sizes),
+                    jax.device_get(la.top_k),
+                    jax.device_get(la.n_blocks),
+                    la.page_size, block_q, sink_pages, local_pages,
+                    topk_scale,
+                ),
+            )
+        except jax.errors.ConcretizationTypeError:
+            if not (max_pages_per_block and max_slots):
+                raise ValueError(
+                    "sparse_prefill needs static max_pages_per_block and "
+                    "max_slots when the layout arrays are traced (e.g. "
+                    "inside a layer scan); pass them explicitly"
+                ) from None
+
+    bits = score_store.bits
+    # score stores always carry concrete per-row params (identity arrays
+    # when unquantized — see store._encode_score_rows).
+    scale, zero = score_store.scale, score_store.zero
+
+    out6, nsel = sp.sparse_prefill(
+        q6, rq6, kp, vp, score_store.codes, scale, zero,
+        la.row_offsets, la.n_blocks, k_sel,
+        la.block_sizes, la.pages_per_block, n_valid, qb0,
+        page_size=la.page_size,
+        ppb_max=max_pages_per_block,
+        bits=bits,
+        symmetric=score_store.symmetric,
+        block_q=block_q,
+        sink_pages=sink_pages,
+        local_pages=local_pages,
+        seg=la.max_blocks,
+        l_max=max_slots,
+        interpret=interpret,
+    )
+    return _from_blocks(out6, Sq), nsel
 
 
 # ---------------------------------------------------------------------------

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.centroids import build_rank_keys, padded_rank_key_width
+from repro.core.centroids import build_rank_keys
 from repro.core.quantization import QuantizedTensor, dequantize
 
 NEG_INF = -1e30
@@ -120,6 +120,129 @@ def paged_attention_ref(
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhgl,bhld->bhgd", probs, sel_v)
     return out.reshape(B, n_q, D).astype(q.dtype)
+
+
+# -- sparse_prefill -------------------------------------------------------------
+
+
+def dequant_score_rows(
+    codes: jax.Array,            # [B, rows, Cw]
+    scale,                       # [B, rows, 1] f32 or None
+    zero,                        # [B, rows, 1] f32 or None
+    bits: int,
+    symmetric: bool,
+) -> jax.Array:
+    """Per-ROW affine prefill score rows -> f32 rank keys [B, rows, Dp]
+    (reference view of the bytes the sparse prefill kernel dequantizes)."""
+    from repro.core.quantization import decode_affine, unpack_split_half
+
+    if bits == 0:
+        return codes.astype(jnp.float32)
+    unpacked = unpack_split_half(codes) if bits == 4 else codes
+    return decode_affine(unpacked, scale, zero, bits, symmetric)
+
+
+def sparse_prefill_ref(
+    q: jax.Array,                # [B, n_kv, nQB, g, BQ, D]
+    rq: jax.Array,               # [B, n_kv, nQB, g, BQ, Dp]
+    k_pages: jax.Array,          # [B, n_kv, n_pages, page, D]
+    v_pages: jax.Array,
+    rank_rows: jax.Array,        # [B, total_rows, Dp] f32 (dequantized)
+    layout,                      # LayoutArrays (one layer)
+    k_sel: jax.Array,            # [H] int32 prefill-scaled top-K
+    n_valid: jax.Array,          # [B] int32
+    qb0,                         # scalar int
+    block_q: int,
+    sink_pages: int,
+    local_pages: int,
+):
+    """Selection-exact oracle of :mod:`repro.kernels.sparse_prefill`: same
+    forced-union-top-K block sets (``lax.top_k`` tie order), dense masked
+    softmax attention.  -> (out, n_attended [B, H, nQB])."""
+    from repro.core.stacked import as_arrays
+
+    la = as_arrays(layout)
+    B, n_kv, nQB, g, BQ, D = q.shape
+    M = la.max_blocks
+    ps = la.page_size
+    S = k_pages.shape[2] * ps
+    bsz = la.block_sizes.astype(jnp.int32)               # [H]
+    nv = n_valid.astype(jnp.int32)                       # [B]
+
+    # padded per-head rank keys + scores (max over live queries and group)
+    rk = jnp.take(rank_rows, la.scatter_rows, axis=1)    # [B, H, M, Dp]
+    qpos = (
+        (qb0 + jnp.arange(nQB, dtype=jnp.int32))[:, None] * block_q
+        + jnp.arange(BQ, dtype=jnp.int32)[None, :]
+    )                                                    # [nQB, BQ]
+    s = jnp.einsum(
+        "bhmd,bhngqd->bhngqm",
+        rk.astype(jnp.float32),
+        rq.astype(jnp.float32),
+    )                                                    # [B,H,nQB,g,BQ,M]
+    live_q = qpos[None, None, :, None, :, None] < nv[:, None, None, None, None, None]
+    s = jnp.where(live_q, s, NEG_INF)
+    s = s.max(axis=(3, 4))                               # [B, H, nQB, M]
+
+    starts = la.block_starts[None, :, None, :]           # [1, H, 1, M]
+    q_start = (qb0 + jnp.arange(nQB, dtype=jnp.int32)) * block_q
+    q_end = (
+        jnp.minimum(q_start[None, :] + block_q, nv[:, None]) - 1
+    )                                                    # [B, nQB]
+    causal = (
+        la.pad_mask[None, :, None, :]
+        & (starts <= q_end[:, None, :, None])
+        & (starts < nv[:, None, None, None])
+    )
+    forced = causal & (starts < sink_pages * ps)
+    lo = (q_start - local_pages * ps)[None, None, :, None]
+    forced = forced | (causal & (starts + bsz[None, :, None, None] > lo))
+    cand = causal & ~forced
+
+    masked = jnp.where(cand, s, NEG_INF)
+    # sort ALL block slots: k_sel is prefill-scaled and may exceed the
+    # decode budget la.max_top_k (oracle favors clarity over speed).
+    kmax = int(M)
+    vals, idx = jax.lax.top_k(masked, kmax)              # [B, H, nQB, kmax]
+    slot_ok = (
+        jnp.arange(kmax)[None, None, None, :] < k_sel[None, :, None, None]
+    ) & (vals > NEG_INF / 2)
+    onehot = jax.nn.one_hot(idx, M, dtype=jnp.float32)   # [B,H,nQB,kmax,M]
+    scored = (
+        jnp.sum(onehot * slot_ok[..., None].astype(jnp.float32), axis=3) > 0.5
+    )
+    selected = forced | scored                           # [B, H, nQB, M]
+    n_att = jnp.sum(selected, axis=-1).astype(jnp.int32)
+
+    # expand block selection to a key mask and run dense masked attention
+    key_block = jnp.minimum(
+        jnp.arange(S, dtype=jnp.int32)[None, :] // bsz[:, None], M - 1
+    )                                                    # [H, S]
+    kd = k_pages.reshape(B, n_kv, S, D).astype(jnp.float32)
+    vd = v_pages.reshape(B, n_kv, S, D).astype(jnp.float32)
+    pos = jnp.arange(S, dtype=jnp.int32)
+
+    outs = []
+    for qb in range(nQB):
+        sel_k = jnp.take_along_axis(
+            selected[:, :, qb], jnp.broadcast_to(key_block[None], (B, n_kv, S)),
+            axis=2,
+        )                                                # [B, H, S]
+        qf = q[:, :, qb].astype(jnp.float32)             # [B, H, g, BQ, D]
+        logits = jnp.einsum("bhgqd,bhsd->bhgqs", qf, kd) / jnp.sqrt(
+            jnp.float32(D)
+        )
+        ok = (
+            sel_k[:, :, None, None, :]
+            & (pos[None, None, None, None, :] <= qpos[qb][None, None, None, :, None])
+            & (pos[None, None, None, None, :] < nv[:, None, None, None, None])
+        )
+        logits = jnp.where(ok, logits, NEG_INF)
+        any_ok = ok.any(axis=-1, keepdims=True)
+        probs = jnp.where(any_ok, jax.nn.softmax(logits, axis=-1), 0.0)
+        outs.append(jnp.einsum("bhgqs,bhsd->bhgqd", probs, vd))
+    out = jnp.stack(outs, axis=2).astype(q.dtype)        # [B,H,nQB,g,BQ,D]
+    return out, n_att
 
 
 # -- block_centroid -------------------------------------------------------------

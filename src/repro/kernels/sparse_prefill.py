@@ -1,0 +1,375 @@
+"""Query-block sparse flash prefill: variable-block-size AB-Sparse applied
+to the prefill phase in ONE Pallas launch per layer.
+
+Per ``(batch, kv-head, query-block)`` grid cell the kernel:
+
+1. **Scores** the head's running centroid segment in-register: the packed
+   INT4/INT8 score rows are DMA'd from the flattened ragged segment and
+   dequantized with their per-ROW affine params (same ``dequant_rows``
+   wire-format code as the fused decode kernel — per-row scalars broadcast
+   where the decode store uses per-head channel vectors), then hit the MXU
+   against the query block's rank queries; the block score is the max over
+   the block's (live) queries and the GQA group.
+2. **Selects** the union of
+   - *forced* blocks — sink blocks plus every block overlapping the query
+     block's local window / causal diagonal (these are never scored, so a
+     block whose keys are still being written can never influence
+     selection — the property that makes chunked prefill token-identical
+     to single-shot), and
+   - the top ``ceil(K_h * prefill_topk_scale)`` *scored* blocks among the
+     causally-valid blocks fully behind the local window, via the same
+     exact k-th-value threshold (tie order == ``lax.top_k``'s set) as the
+     fused decode kernel.
+   Early query blocks have no scoreable candidates and therefore stay
+   EXACT (every causal block is forced).
+3. **Attends** flash-style over only the selected blocks: double-buffered
+   page DMA, per-token causal masking inside the diagonal blocks, running
+   (m, l, acc) softmax state in registers.
+
+Raggedness rides the same scalar-prefetched grid descriptor as decode
+(per-head flat-row offsets, block counts, block sizes, pages-per-block), so
+heterogeneous per-head block sizes share one launch.  A scalar ``qb0``
+offsets the query-block index, which is how chunked prefill replays later
+chunks through the identical kernel.
+
+Interpret mode on CPU validates numerics; the same call lowers to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.centroid_score import dequant_rows
+from repro.kernels.topk_threshold import _to_sortable
+
+NEG_INF = -1e30
+POS_INF = 1e30
+
+
+def _sparse_prefill_kernel(
+    # -- scalar prefetch: ragged grid descriptor + live length + chunk base
+    row_off_ref,               # [H] int32 flat-row offset of the head segment
+    n_blocks_ref,              # [H] int32 real blocks per head
+    k_sel_ref,                 # [H] int32 prefill-scaled K per head
+    bsz_ref,                   # [H] int32 block size (tokens)
+    ppb_ref,                   # [H] int32 pages per block
+    n_valid_ref,               # [B] int32 live tokens (queries AND keys)
+    qb0_ref,                   # [1] int32 absolute index of query block 0
+    # -- array inputs
+    codes_ref,                 # [B, R, Cw] score-segment codes (HBM/ANY)
+    scale_ref,                 # [B, R, 1] f32 per-row scale (HBM/ANY)
+    zero_ref,                  # [B, R, 1] f32 per-row zero (HBM/ANY)
+    rq_ref,                    # [1, 1, 1, g, BQ, Dp] rank queries
+    q_ref,                     # [1, 1, 1, g, BQ, D]
+    k_ref,                     # [B, H, n_pages, ps, D] paged pool (HBM/ANY)
+    v_ref,                     # [B, H, n_pages, ps, D]
+    # -- outputs
+    o_ref,                     # [1, 1, 1, g, BQ, D]
+    nsel_ref,                  # [1, 1, 1] int32 blocks attended (stats)
+    # -- scratch
+    codes_scr,                 # VMEM [SEG, Cw]
+    pscale_scr,                # VMEM [SEG, 1]
+    pzero_scr,                 # VMEM [SEG, 1]
+    kbuf, vbuf,                # VMEM [2, ppb_max, ps, D] double buffers
+    slot_scr,                  # VMEM [LMAX, 128] int32 per-slot descriptors
+    csem,                      # DMA sems (3,) codes/scale/zero
+    sem,                       # DMA sems [2, 2] (k/v double buffer)
+    *,
+    bits: int, symmetric: bool, seg: int, l_max: int, block_q: int,
+    page_size: int, ppb_max: int, n_pages: int, total_rows: int,
+    sink_pages: int, local_pages: int, scale_qk: float,
+):
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    qb = pl.program_id(2)
+    row_off = row_off_ref[h]
+    nblk = n_blocks_ref[h]
+    k_sel = k_sel_ref[h]
+    bsz = bsz_ref[h]
+    ppb = ppb_ref[h]
+    nv = n_valid_ref[b]
+    q_start = (qb0_ref[0] + qb) * block_q
+    q_end = jnp.minimum(q_start + block_q, nv) - 1     # last live query pos
+
+    # ---- phase 1: score the head's centroid segment ------------------------
+    start = jnp.minimum(row_off, total_rows - seg)
+    adj = row_off - start
+    dmas = [
+        pltpu.make_async_copy(
+            codes_ref.at[b, pl.ds(start, seg)], codes_scr, csem.at[0]
+        ),
+        pltpu.make_async_copy(
+            scale_ref.at[b, pl.ds(start, seg)], pscale_scr, csem.at[1]
+        ),
+        pltpu.make_async_copy(
+            zero_ref.at[b, pl.ds(start, seg)], pzero_scr, csem.at[2]
+        ),
+    ]
+    for d in dmas:
+        d.start()
+    for d in dmas:
+        d.wait()
+    rk = dequant_rows(
+        codes_scr[...], pscale_scr[...], pzero_scr[...], bits, symmetric
+    )                                                  # [SEG, Dp]
+    g, BQ, Dp = rq_ref.shape[3:]
+    rq = rq_ref[0, 0, 0].reshape(g * BQ, Dp)           # [gBQ, Dp]
+    qpos = q_start + (
+        jnp.arange(g * BQ, dtype=jnp.int32) % BQ
+    )                                                  # [gBQ] absolute pos
+    s_all = jax.lax.dot_general(
+        rk, rq, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                  # [SEG, gBQ]
+    s_all = jnp.where(qpos[None, :] < nv, s_all, NEG_INF)
+    s = jnp.max(s_all, axis=-1)                        # [SEG]
+
+    # ---- phase 2: forced union + exact top-K over scored candidates --------
+    jloc = jnp.arange(seg, dtype=jnp.int32) - adj      # block id in head
+    starts_tok = jloc * bsz
+    in_seg = (jloc >= 0) & (jloc < nblk)
+    causal = in_seg & (starts_tok <= q_end) & (starts_tok < nv)
+    forced = causal & (starts_tok < sink_pages * page_size)
+    lo = q_start - local_pages * page_size
+    forced = forced | (causal & (starts_tok + bsz > lo))
+    cand = causal & jnp.logical_not(forced)
+    s_m = jnp.where(cand, s, NEG_INF)
+
+    u = _to_sortable(s_m)                              # [SEG] uint32
+
+    def bit_step(i, t):
+        c = t | (jnp.uint32(1) << (jnp.uint32(31) - jnp.uint32(i)))
+        cnt = jnp.sum((u >= c).astype(jnp.int32))
+        return jnp.where(cnt >= k_sel, c, t)
+
+    thr = jax.lax.fori_loop(0, 32, bit_step, jnp.uint32(0))
+    n_gt = jnp.sum((u > thr).astype(jnp.int32))
+    is_tie = (u == thr).astype(jnp.int32)
+    tie_rank = jnp.cumsum(is_tie) - is_tie             # exclusive
+    scored = (u > thr) | ((is_tie > 0) & (tie_rank < k_sel - n_gt))
+    # drop -inf "candidates" (dead query blocks / fewer candidates than K)
+    scored = scored & cand & (s_m > NEG_INF / 2)
+    selected = forced | scored
+    sel_rank = jnp.cumsum(selected.astype(jnp.int32))  # inclusive
+    n_live = sel_rank[-1]
+    nsel_ref[0, 0, 0] = n_live
+
+    # compact selected block ids into LMAX slots (index order)
+    slot_ids = jnp.arange(l_max, dtype=jnp.int32)
+    onehot = selected[None, :] & (sel_rank[None, :] == slot_ids[:, None] + 1)
+    blk = jnp.sum(jnp.where(onehot, jloc[None, :], 0), axis=1)      # [LMAX]
+    pstart = jnp.clip(blk * ppb, 0, n_pages - ppb_max)
+    tok0 = blk * bsz
+    slot_scr[...] = jnp.concatenate(
+        [
+            pstart[:, None],
+            tok0[:, None],
+            jnp.zeros((l_max, 126), jnp.int32),
+        ],
+        axis=1,
+    )
+
+    # ---- phase 3: flash attention over the selected blocks -----------------
+    q = q_ref[0, 0, 0].reshape(g * BQ, -1).astype(jnp.float32)      # [gBQ, D]
+    D = q.shape[-1]
+    W = ppb_max * page_size
+
+    def kv_dma(slot, pg):
+        return (
+            pltpu.make_async_copy(
+                k_ref.at[b, h, pl.ds(pg, ppb_max)], kbuf.at[slot],
+                sem.at[slot, 0],
+            ),
+            pltpu.make_async_copy(
+                v_ref.at[b, h, pl.ds(pg, ppb_max)], vbuf.at[slot],
+                sem.at[slot, 1],
+            ),
+        )
+
+    # n_live == 0 is reachable (fully-dead trailing query block with
+    # sink_pages == 0): the loop below then never runs, so starting the
+    # warm-up DMA unconditionally would leak un-awaited semaphore signals
+    # into the next grid cell on real hardware.
+    @pl.when(n_live > 0)
+    def _warmup():
+        dk0, dv0 = kv_dma(0, slot_scr[0, 0])
+        dk0.start()
+        dv0.start()
+
+    def body(i, carry):
+        m, l, acc = carry
+        slot = i % 2
+        pg_i = slot_scr[i, 0]
+        t0 = slot_scr[i, 1]
+
+        @pl.when(i + 1 < n_live)
+        def _prefetch_next():
+            nslot = (i + 1) % 2
+            pg_n = slot_scr[jnp.minimum(i + 1, l_max - 1), 0]
+            dk, dv = kv_dma(nslot, pg_n)
+            dk.start()
+            dv.start()
+
+        dk, dv = kv_dma(slot, pg_i)
+        dk.wait()
+        dv.wait()
+        kf = kbuf[slot].reshape(W, D).astype(jnp.float32)
+        vf = vbuf[slot].reshape(W, D).astype(jnp.float32)
+
+        pos = pg_i * page_size + jnp.arange(W, dtype=jnp.int32)
+        ok_k = (pos >= t0) & (pos < t0 + bsz) & (pos < nv)
+        logits = jax.lax.dot_general(
+            q, kf, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale_qk                                   # [gBQ, W]
+        ok = ok_k[None, :] & (pos[None, :] <= qpos[:, None])
+        logits = jnp.where(ok, logits, NEG_INF)
+
+        m_cur = jnp.max(logits, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m, m_cur)
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new)
+        # fully-masked rows (no visible key in this block) contribute
+        # nothing: their p row is exp(NEG_INF - m) == 0 once any real key
+        # has been seen; before that m == NEG_INF and p == exp(0) == 1 for
+        # masked lanes, so zero those rows explicitly.
+        p = jnp.where(ok, p, 0.0)
+        l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * alpha + jax.lax.dot_general(
+            p, vf, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((g * BQ, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((g * BQ, 1), jnp.float32)
+    acc0 = jnp.zeros((g * BQ, D), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_live, body, (m0, l0, acc0))
+    out = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+    o_ref[0, 0, 0] = out.reshape(g, BQ, D)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "page_size", "ppb_max", "bits", "symmetric", "block_q",
+        "sink_pages", "local_pages", "seg", "l_max", "interpret",
+    ),
+)
+def sparse_prefill(
+    q: jax.Array,              # [B, n_kv, nQB, g, BQ, D]
+    rq: jax.Array,             # [B, n_kv, nQB, g, BQ, Dp] rank queries
+    k_pages: jax.Array,        # [B, n_kv, n_pages, page, D]
+    v_pages: jax.Array,        # [B, n_kv, n_pages, page, D]
+    codes: jax.Array,          # [B, total_rows, Cw] score-segment codes
+    scale: jax.Array,          # [B, total_rows, 1] f32
+    zero: jax.Array,           # [B, total_rows, 1] f32
+    row_off: jax.Array,        # [H] int32 descriptor arrays ----------------
+    n_blocks: jax.Array,       # [H] int32
+    k_sel: jax.Array,          # [H] int32 prefill-scaled top-K
+    bsz: jax.Array,            # [H] int32
+    ppb: jax.Array,            # [H] int32
+    n_valid: jax.Array,        # [B] int32
+    qb0: jax.Array,            # [1] int32
+    *,
+    page_size: int,
+    ppb_max: int,
+    bits: int,
+    symmetric: bool,
+    block_q: int,
+    sink_pages: int,
+    local_pages: int,
+    seg: int,
+    l_max: int,
+    interpret: bool = False,
+):
+    """-> (out [B, n_kv, nQB, g, BQ, D], n_attended [B, n_kv, nQB] int32).
+
+    One launch covers every (sequence, kv head, query block) cell of the
+    ragged grid; the attended block SET per cell is forced-union-top-K and
+    identical whether the query blocks arrive in one shot (``qb0 == 0``)
+    or chunk by chunk (``qb0 == chunk_offset // block_q``).
+    """
+    B, n_kv, nQB, g, BQ, D = q.shape
+    n_pages = k_pages.shape[2]
+    Dp = rq.shape[-1]
+    total_rows = codes.shape[1]
+
+    kernel = functools.partial(
+        _sparse_prefill_kernel,
+        bits=bits,
+        symmetric=symmetric,
+        seg=seg,
+        l_max=l_max,
+        block_q=block_q,
+        page_size=page_size,
+        ppb_max=ppb_max,
+        n_pages=n_pages,
+        total_rows=total_rows,
+        sink_pages=sink_pages,
+        local_pages=local_pages,
+        scale_qk=1.0 / float(np.sqrt(D)),
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=7,
+        grid=(B, n_kv, nQB),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),      # codes
+            pl.BlockSpec(memory_space=pltpu.ANY),      # per-row scale
+            pl.BlockSpec(memory_space=pltpu.ANY),      # per-row zero
+            pl.BlockSpec(
+                (1, 1, 1, g, BQ, Dp), lambda b, h, qb, *_: (b, h, qb, 0, 0, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, 1, g, BQ, D), lambda b, h, qb, *_: (b, h, qb, 0, 0, 0)
+            ),
+            pl.BlockSpec(memory_space=pltpu.ANY),      # k pages
+            pl.BlockSpec(memory_space=pltpu.ANY),      # v pages
+        ],
+        out_specs=[
+            pl.BlockSpec(
+                (1, 1, 1, g, BQ, D), lambda b, h, qb, *_: (b, h, qb, 0, 0, 0)
+            ),
+            pl.BlockSpec((1, 1, 1), lambda b, h, qb, *_: (b, h, qb)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((seg, codes.shape[-1]), codes.dtype),
+            pltpu.VMEM((seg, 1), jnp.float32),
+            pltpu.VMEM((seg, 1), jnp.float32),
+            pltpu.VMEM((2, ppb_max, page_size, D), k_pages.dtype),
+            pltpu.VMEM((2, ppb_max, page_size, D), v_pages.dtype),
+            pltpu.VMEM((l_max, 128), jnp.int32),
+            pltpu.SemaphoreType.DMA((3,)),
+            pltpu.SemaphoreType.DMA((2, 2)),
+        ],
+    )
+    out, nsel = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n_kv, nQB, g, BQ, D), q.dtype),
+            jax.ShapeDtypeStruct((B, n_kv, nQB), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        row_off.astype(jnp.int32),
+        n_blocks.astype(jnp.int32),
+        k_sel.astype(jnp.int32),
+        bsz.astype(jnp.int32),
+        ppb.astype(jnp.int32),
+        n_valid.astype(jnp.int32),
+        qb0.astype(jnp.int32),
+        codes,
+        scale.astype(jnp.float32),
+        zero.astype(jnp.float32),
+        rq,
+        q,
+        k_pages,
+        v_pages,
+    )
+    return out, nsel

@@ -234,7 +234,7 @@ def main():
     shapes = [s.name for s in SHAPES] if args.shape == "all" else [args.shape]
     meshes = [False, True] if args.both_meshes else [args.multi_pod]
 
-    failures = 0
+    failures = cached = retried = ran = 0
     for arch in archs:
         for shape in shapes:
             for mp in meshes:
@@ -242,17 +242,22 @@ def main():
                 if os.path.exists(out) and not args.force:
                     # only an ok:true artifact counts as cached — failure
                     # records (and unreadable files) are retried, so one
-                    # crash can't permanently suppress a cell.
+                    # crash can't permanently suppress a cell.  Retries are
+                    # tallied separately: a re-run of a failed cell is NOT
+                    # a cache hit and must not inflate the cached count.
                     try:
                         with open(out) as f:
                             prev = json.load(f)
                     except (OSError, ValueError):
                         prev = {}
                     if prev.get("ok") is True:
+                        cached += 1
                         print(f"skip {arch} {shape} mp={mp} (cached)")
                         continue
+                    retried += 1
                     print(f"retry {arch} {shape} mp={mp} (previous run failed)")
                 plan = MeshPlan(multi_pod=mp, remat=args.remat)
+                ran += 1
                 try:
                     res = run_cell(arch, shape, mp, plan)
                     print(
@@ -274,6 +279,10 @@ def main():
                     print(f"FAIL {arch} {shape} mp={int(mp)}: {type(e).__name__}: {e}")
                 with open(out, "w") as f:
                     json.dump(res, f, indent=1)
+    print(
+        f"summary: cached={cached} retried={retried} ran={ran} "
+        f"failed={failures}"
+    )
     sys.exit(1 if failures else 0)
 
 

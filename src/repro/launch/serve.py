@@ -13,6 +13,7 @@ exercised.  The run ends with the engine's lifecycle-metrics snapshot
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -39,11 +40,20 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=256)
     ap.add_argument("--prefill-budget", type=int, default=512,
                     help="prefill token budget per engine tick")
+    ap.add_argument("--sparse-prefill", action="store_true",
+                    help="query-block sparse prefill (pallas backend)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_variant(cfg)
+    if args.sparse_prefill:
+        cfg = dataclasses.replace(
+            cfg,
+            sparse=dataclasses.replace(
+                cfg.sparse, backend="pallas", sparse_prefill=True,
+            ),
+        )
     model = Transformer(cfg)
     params = model.init(jax.random.PRNGKey(0))
     eng = Engine(cfg, params, ServeConfig(
@@ -70,7 +80,8 @@ def main():
     plan = model.attention_plan(args.max_context)
     print(f"served {len(done)} requests / {total} tokens in {dt:.1f}s "
           f"({total / dt:.1f} tok/s); sparse path: {plan.active} "
-          f"(backend={plan.backend})")
+          f"(backend={plan.backend}, "
+          f"sparse_prefill={plan.active and cfg.sparse.sparse_prefill})")
     print(f"metrics: {eng.metrics.format_snapshot()}")
     eng.pool.assert_consistent()
     cached = eng.prefix_cache.n_pages if eng.prefix_cache else 0

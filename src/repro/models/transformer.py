@@ -17,16 +17,14 @@ Three entry points per model:
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.backends import AttentionPlan, CentroidStore, build_plan, get_backend
-from repro.config import ModelConfig, SparseConfig
+from repro.config import ModelConfig
 from repro.core.quantization import store_bits, store_symmetric
 from repro.core.ragged import RaggedLayout
 from repro.core.sparse_attention import dense_decode_attention
@@ -382,6 +380,19 @@ class Transformer:
                         (nc, batch, cfg.n_kv_heads, Dp), jnp.float32
                     )
                     entry["zero"] = jnp.zeros_like(entry["scale"])
+                    if cfg.sparse.sparse_prefill:
+                        # running prefill scoring segment (per-ROW affine):
+                        # chunked prefill carries it across chunks so later
+                        # chunks can score earlier blocks.
+                        cw = Dp // 2 if bits == 4 else Dp
+                        cdt = jnp.uint8 if bits else jnp.float32
+                        entry["pcodes"] = jnp.zeros(
+                            (nc, batch, stk.total_rows, cw), cdt
+                        )
+                        entry["pscale"] = jnp.ones(
+                            (nc, batch, stk.total_rows, 1), jnp.float32
+                        )
+                        entry["pzero"] = jnp.zeros_like(entry["pscale"])
             elif kind == "local_attn":
                 W = min(cfg.local_window, max_context)
                 entry["k"] = jnp.zeros(
@@ -429,6 +440,12 @@ class Transformer:
         pat = self.plan.pattern
         sparse = self.use_sparse(max_context)
         quant = cfg.sparse.quant if quant is None else quant
+        # static kernel bounds for the sparse prefill launch, derived from
+        # the concrete plan here so the layer scan sees Python ints.
+        sp_max_slots = sp_ppb_max = None
+        if sparse and cfg.sparse.sparse_prefill:
+            sp_max_slots = self.attention_plan(max_context).prefill_max_slots
+            sp_ppb_max = cfg.sparse.max_block_size // cfg.sparse.page_size
 
         def run_layer(p, kind, x, entry, layer_layout, layer_offs):
             cfgl = self.cfg
@@ -437,16 +454,10 @@ class Transformer:
             if kind in ("attn", "local_attn"):
                 q, k, v = layers.qkv_project(p["attn"], h, cfgl, positions)
                 window = cfgl.local_window if kind == "local_attn" else None
-                attn = layers.chunked_causal_attention(
-                    jnp.moveaxis(q, 1, 2),
-                    jnp.moveaxis(k, 1, 2),
-                    jnp.moveaxis(v, 1, 2),
-                    chunk=_attn_chunk(S_tot),
-                    window=window,
-                )
-                h = layers.out_project(p["attn"], jnp.moveaxis(attn, 1, 2), cfgl)
+                use_sp = sparse and cfgl.sparse.sparse_prefill and kind == "attn"
                 kk = jnp.moveaxis(k, 1, 2)      # [B, n_kv, S, hd]
                 vv = jnp.moveaxis(v, 1, 2)
+                score_store = None
                 if kind == "attn":
                     pad = max_context - S_tot
                     kk = jnp.pad(kk, ((0, 0), (0, 0), (0, pad), (0, 0)))
@@ -459,16 +470,50 @@ class Transformer:
                             cfgl.resolved_head_dim,
                         )
                         vv = vv.reshape(kk.shape)
-                        store = self.backend.prefill_store(
-                            kk, layer_layout, layer_offs,
-                            cfgl.sparse, quant=quant,
-                        )
+                        if use_sp:
+                            # decode store + scoring segment share one
+                            # page-stats pass over the K cache.
+                            store, score_store = self.backend.prefill_stores(
+                                kk, layer_layout, layer_offs,
+                                cfgl.sparse, quant=quant,
+                            )
+                            new_entry["pcodes"] = score_store.codes
+                            new_entry["pscale"] = score_store.scale
+                            new_entry["pzero"] = score_store.zero
+                        else:
+                            store = self.backend.prefill_store(
+                                kk, layer_layout, layer_offs,
+                                cfgl.sparse, quant=quant,
+                            )
                         new_entry["codes"] = store.codes
                         new_entry["scale"] = store.scale
                         new_entry["zero"] = store.zero
                     new_entry["k"] = kk
                     new_entry["v"] = vv
+                if use_sp:
+                    # query-block sparse flash prefill over the ragged layout
+                    attn_o, _ = self.backend.prefill_attention(
+                        jnp.moveaxis(q, 1, 2), kk, vv, score_store,
+                        layer_layout, cfgl.sparse,
+                        n_valid=jnp.full((B,), S_tot, jnp.int32),
+                        max_pages_per_block=sp_ppb_max,
+                        max_slots=sp_max_slots,
+                    )
+                    h = layers.out_project(
+                        p["attn"], jnp.moveaxis(attn_o, 1, 2), cfgl
+                    )
                 else:
+                    attn = layers.chunked_causal_attention(
+                        jnp.moveaxis(q, 1, 2),
+                        jnp.moveaxis(k, 1, 2),
+                        jnp.moveaxis(v, 1, 2),
+                        chunk=_attn_chunk(S_tot),
+                        window=window,
+                    )
+                    h = layers.out_project(
+                        p["attn"], jnp.moveaxis(attn, 1, 2), cfgl
+                    )
+                if kind == "local_attn":
                     # ring-buffer fill: last min(W, S) tokens at slot pos % W
                     W = entry["k"].shape[-2]
                     L = min(W, S_tot)
@@ -568,12 +613,22 @@ class Transformer:
         single compiled shape.  Centroid-store rows are NOT maintained here:
         call :meth:`refresh_slot_store` once after the final chunk.
 
+        When ``SparseConfig.sparse_prefill`` is on, the chunk instead runs
+        the query-block sparse prefill path: the slot's RUNNING scoring
+        segment (``pcodes``/``pscale``/``pzero``) is refreshed with the
+        blocks this chunk completes, then each query block attends its
+        forced + top-scored KV blocks.  ``offset`` must then be a multiple
+        of ``SparseConfig.prefill_block_q`` (the serving scheduler aligns
+        chunk boundaries automatically), which makes the chunked run
+        token-identical to single-shot sparse prefill.
+
         -> ``(logits [vocab] at the last valid position, cache)``.
-        Chunk boundaries don't change per-position numerics: attention
-        reduces over the full cache row axis whatever the chunking, so a
-        prefix installed from the cache + suffix chunks reproduces a
-        monolithic chunked run bit-for-bit (the prefix-sharing acceptance
-        property).
+        Chunk boundaries don't change per-position numerics: dense chunks
+        reduce over the full cache row axis, and sparse chunks score only
+        blocks fully behind the query block's local window (always complete
+        by the time they are scored) — so a prefix installed from the cache
+        + suffix chunks reproduces a monolithic run bit-for-bit (the
+        prefix-sharing acceptance property).
         """
         assert self.supports_chunked_prefill()
         cfg = self.cfg
@@ -590,8 +645,18 @@ class Transformer:
             S_max = cache["pos0"]["k"].shape[3]
         # invalid rows scatter out of bounds -> dropped (JAX semantics).
         write_pos = jnp.where(valid, offset + rel, S_max)
+        stk = cache.get("_layouts")
+        all_offs = cache.get("_offsets")
+        use_sp = cfg.sparse.sparse_prefill and "pcodes" in cache["pos0"]
+        if use_sp:
+            sp_max_slots = self.attention_plan(S_max).prefill_max_slots
+            sp_ppb_max = cfg.sparse.max_block_size // cfg.sparse.page_size
+            bmax = cfg.sparse.max_block_size
+            sp_window = min(-(-(C + 2 * bmax) // bmax) * bmax, S_max)
+            sp_bits = store_bits(cfg.sparse.quant)
+            sp_sym = store_symmetric(cfg.sparse.quant)
 
-        def run_layer(p, x, entry):
+        def run_layer(p, x, entry, lay, offs):
             h = layers.rms_norm(p["norm1"], x, cfg.norm_eps)
             q, k, v = layers.qkv_project(p["attn"], h, cfg, positions)
             new_entry = dict(entry)
@@ -613,29 +678,67 @@ class Transformer:
                 )
             new_entry["k"] = k_cache
             new_entry["v"] = v_cache
-            # masked dense attention over the slot's rows: prefix + causal
-            # chunk.  Rows beyond offset+i are masked, so stale garbage
-            # past the live span never contributes.
-            kf = k_cache[slot].reshape(
-                cfg.n_kv_heads, S_max, -1
-            ).astype(jnp.float32)                         # [n_kv, S, hd]
-            vf = v_cache[slot].reshape(
-                cfg.n_kv_heads, S_max, -1
-            ).astype(jnp.float32)
-            g = cfg.n_heads // cfg.n_kv_heads
-            hd = cfg.resolved_head_dim
-            qf = jnp.moveaxis(q, 1, 2)[0].reshape(
-                cfg.n_kv_heads, g, C, hd
-            ).astype(jnp.float32)
-            logits = jnp.einsum("hgcd,hsd->hgcs", qf, kf) / jnp.sqrt(
-                jnp.float32(hd)
-            )
-            mask = jnp.arange(S_max)[None, :] <= (offset + rel)[:, None]
-            logits = jnp.where(mask[None, None], logits, -1e30)
-            probs = jax.nn.softmax(logits, axis=-1)
-            attn = jnp.einsum("hgcs,hsd->hgcd", probs, vf)
-            attn = attn.reshape(cfg.n_heads, C, hd).astype(x.dtype)
-            h = layers.out_project(p["attn"], jnp.moveaxis(attn, 0, 1)[None], cfg)
+            if use_sp:
+                # sparse chunk: refresh the slot's running scoring segment
+                # with the blocks this chunk completes, then query-block
+                # sparse attention over the slot's paged KV.
+                kslot = k_cache[slot][None]               # [1, n_kv, nP, ps, hd]
+                vslot = v_cache[slot][None]
+                sstore = CentroidStore(
+                    entry["pcodes"][slot][None],
+                    entry["pscale"][slot][None],
+                    entry["pzero"][slot][None],
+                    sp_bits, sp_sym,
+                )
+                sstore = self.backend.refresh_score_rows(
+                    sstore, kslot, lay, offs,
+                    offset, offset + n_valid, cfg.sparse, sp_window,
+                )
+                new_entry["pcodes"] = entry["pcodes"].at[slot].set(
+                    sstore.codes[0]
+                )
+                new_entry["pscale"] = entry["pscale"].at[slot].set(
+                    sstore.scale[0]
+                )
+                new_entry["pzero"] = entry["pzero"].at[slot].set(
+                    sstore.zero[0]
+                )
+                attn_o, _ = self.backend.prefill_attention(
+                    jnp.moveaxis(q, 1, 2), kslot, vslot, sstore,
+                    lay, cfg.sparse,
+                    n_valid=offset + n_valid, chunk_offset=offset,
+                    max_pages_per_block=sp_ppb_max,
+                    max_slots=sp_max_slots,
+                )
+                h = layers.out_project(
+                    p["attn"], jnp.moveaxis(attn_o, 1, 2), cfg
+                )
+            else:
+                # masked dense attention over the slot's rows: prefix +
+                # causal chunk.  Rows beyond offset+i are masked, so stale
+                # garbage past the live span never contributes.
+                kf = k_cache[slot].reshape(
+                    cfg.n_kv_heads, S_max, -1
+                ).astype(jnp.float32)                     # [n_kv, S, hd]
+                vf = v_cache[slot].reshape(
+                    cfg.n_kv_heads, S_max, -1
+                ).astype(jnp.float32)
+                g = cfg.n_heads // cfg.n_kv_heads
+                hd = cfg.resolved_head_dim
+                qf = jnp.moveaxis(q, 1, 2)[0].reshape(
+                    cfg.n_kv_heads, g, C, hd
+                ).astype(jnp.float32)
+                logits = jnp.einsum("hgcd,hsd->hgcs", qf, kf) / jnp.sqrt(
+                    jnp.float32(hd)
+                )
+                mask = jnp.arange(S_max)[None, :] <= (offset + rel)[:, None]
+                logits = jnp.where(mask[None, None], logits, -1e30)
+                probs = jax.nn.softmax(logits, axis=-1)
+                attn = jnp.einsum("hgcs,hsd->hgcd", probs, vf)
+                attn = attn.reshape(cfg.n_heads, C, hd).astype(x.dtype)
+                h = layers.out_project(
+                    p["attn"], jnp.moveaxis(attn, 0, 1)[None], cfg
+                )
             x = x + h
             h = layers.rms_norm(p["norm2"], x, cfg.norm_eps)
             if cfg.moe is not None:
@@ -645,8 +748,12 @@ class Transformer:
             return x + h, new_entry
 
         def cycle_fn(x, xs):
-            cyc_params, cyc_cache, _ = xs
-            x, new_entry = run_layer(cyc_params["pos0"], x, cyc_cache["pos0"])
+            cyc_params, cyc_cache, cyc_idx = xs
+            lay = stk.layer(cyc_idx) if (use_sp and stk is not None) else None
+            offs = all_offs[cyc_idx] if (use_sp and all_offs is not None) else None
+            x, new_entry = run_layer(
+                cyc_params["pos0"], x, cyc_cache["pos0"], lay, offs
+            )
             return x, {"pos0": new_entry}
 
         cache = dict(cache)
@@ -696,6 +803,41 @@ class Transformer:
         entry["codes"] = entry["codes"].at[:, slot].set(codes)
         entry["scale"] = entry["scale"].at[:, slot].set(scale)
         entry["zero"] = entry["zero"].at[:, slot].set(zero)
+        cache = dict(cache)
+        cache["pos0"] = entry
+        return cache
+
+    def refresh_slot_score_rows(self, cache: Cache, slot) -> Cache:
+        """Rebuild one slot's PREFILL scoring segment from its K cache.
+
+        Used after a prefix-cache install: the installed span's KV entered
+        the cache without running ``prefill_chunk``, so its score rows must
+        be derived here before later chunks can score those blocks.  Rows of
+        blocks beyond the installed span are recomputed from zero keys and
+        overwritten when their blocks complete — they are never scored
+        before that."""
+        stk = cache.get("_layouts")
+        entry = cache["pos0"]
+        if stk is None or "pcodes" not in entry:
+            return cache
+        cfg = self.cfg
+        offs_all = cache["_offsets"]
+        k_slot = entry["k"][:, slot]                      # [nc, n_kv, nP, ps, hd]
+
+        def one(carry, xs):
+            k_cyc, idx = xs
+            st = self.backend.prefill_score_rows(
+                k_cyc[None], stk.layer(idx), offs_all[idx], cfg.sparse,
+            )
+            return carry, (st.codes[0], st.scale[0], st.zero[0])
+
+        _, (codes, scale, zero) = jax.lax.scan(
+            one, None, (k_slot, jnp.arange(self.plan.n_cycles))
+        )
+        entry = dict(entry)
+        entry["pcodes"] = entry["pcodes"].at[:, slot].set(codes)
+        entry["pscale"] = entry["pscale"].at[:, slot].set(scale)
+        entry["pzero"] = entry["pzero"].at[:, slot].set(zero)
         cache = dict(cache)
         cache["pos0"] = entry
         return cache

@@ -95,9 +95,20 @@ class Engine:
             if (serve_cfg.enable_prefix_cache and self._chunkable)
             else None
         )
+        #: sparse prefill active => chunk boundaries and reused prefix spans
+        #: must align to the query-block size (chunked selection is then
+        #: token-identical to single-shot sparse prefill).
+        self._sparse_prefill = (
+            model_cfg.sparse.sparse_prefill
+            and self._chunkable
+            and self.model.use_sparse(self.max_context)
+        )
         self.scheduler = Scheduler(
             serve_cfg, self.pool, self.prefix_cache, self.metrics,
             chunkable=self._chunkable,
+            chunk_align=(
+                model_cfg.sparse.prefill_block_q if self._sparse_prefill else 1
+            ),
         )
         # the cache argument is donated: every jit'd step updates the cache
         # functionally, and without donation XLA materializes a full copy of
@@ -108,6 +119,9 @@ class Engine:
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
         self._chunk = jax.jit(self.model.prefill_chunk, donate_argnums=(1,))
         self._refresh = jax.jit(self.model.refresh_slot_store, donate_argnums=(0,))
+        self._refresh_scores = jax.jit(
+            self.model.refresh_slot_score_rows, donate_argnums=(0,)
+        )
         self._chunk_len = min(serve_cfg.prefill_chunk, self.max_context)
         self._tokens_buf = np.zeros((self.max_batch,), np.int32)
         #: authoritative per-slot sequence lengths (tokens with KV in cache).
@@ -172,6 +186,16 @@ class Engine:
                 )
             self.cache = dict(self.cache)
             self.cache["pos0"] = entry
+            if self._sparse_prefill:
+                # the installed span's KV never ran prefill_chunk, so its
+                # scoring rows must be derived before later chunks score it.
+                # This rebuilds the whole slot (O(S_max), like the one-shot
+                # refresh_slot_store at prompt completion) rather than just
+                # the installed span: a span-sized window would need a
+                # distinct compiled shape per prefix length.
+                self.cache = self._refresh_scores(
+                    self.cache, np.int32(adm.slot)
+                )
 
     # -- prefill -------------------------------------------------------------
 

@@ -13,7 +13,7 @@ Latency definitions (the standard serving ones):
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
 
 

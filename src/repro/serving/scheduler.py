@@ -116,6 +116,7 @@ class Scheduler:
         prefix_cache: Optional[PrefixCache],
         metrics: ServingMetrics,
         chunkable: bool = True,
+        chunk_align: int = 1,
     ):
         self.serve = serve
         self.pool = pool
@@ -124,6 +125,21 @@ class Scheduler:
         #: model supports incremental (chunked) prefill into a batch slot;
         #: without it prompts prefill monolithically and prefix reuse is off.
         self.chunkable = chunkable
+        #: chunk boundaries (interior chunk ends + reused prefix spans) are
+        #: rounded down to this many tokens.  Sparse prefill sets it to the
+        #: query-block size so chunked selection is token-identical to
+        #: single-shot; 1 == no constraint.
+        assert chunk_align >= 1
+        if chunk_align > 1:
+            assert serve.prefill_chunk == 0 or (
+                chunk_align <= serve.prefill_chunk
+            ), (chunk_align, serve.prefill_chunk)
+            # prefix spans are page-granular; alignment rounding must land
+            # on page boundaries too.
+            assert chunk_align % pool.page_size == 0, (
+                chunk_align, pool.page_size
+            )
+        self.chunk_align = chunk_align
         self.waiting: List[SeqState] = []
         self.running: Dict[int, SeqState] = {}
         self._arrival = itertools.count()
@@ -169,6 +185,12 @@ class Scheduler:
                 matched, pages, kvs = self.prefix_cache.match(
                     tokens, max_tokens=len(tokens) - 1
                 )
+                if self.chunk_align > 1 and matched % self.chunk_align:
+                    # reused spans must end on a chunk-alignment boundary so
+                    # the first fresh chunk starts query-block aligned.
+                    matched = (matched // self.chunk_align) * self.chunk_align
+                    keep = matched // self.pool.page_size
+                    pages, kvs = pages[:keep], kvs[:keep]
             need_fresh = self.pool.pages_for(len(tokens)) - len(pages)
             if need_fresh > self.pool.free_pages:
                 ok = self.prefix_cache is not None and (
@@ -209,11 +231,17 @@ class Scheduler:
                 budget -= n
                 continue
             while budget > 0 and not seq.prefill_done:
-                n = min(
-                    self.serve.prefill_chunk,
-                    seq.n_prefill - seq.prefilled,
-                    budget,
-                )
+                remaining = seq.n_prefill - seq.prefilled
+                n = min(self.serve.prefill_chunk, remaining, budget)
+                if self.chunk_align > 1 and n < remaining:
+                    # interior chunk: end on an alignment boundary (chunk
+                    # offsets stay aligned by induction; only the final
+                    # chunk may be ragged).  When the leftover budget
+                    # rounds to zero, spend one alignment unit anyway so
+                    # a tick always makes progress.
+                    n = (n // self.chunk_align) * self.chunk_align
+                    if n == 0:
+                        n = min(self.chunk_align, remaining)
                 chunks.append(ChunkPlan(
                     seq, seq.prefilled,
                     seq.prefill_tokens[seq.prefilled : seq.prefilled + n],

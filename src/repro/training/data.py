@@ -9,9 +9,7 @@ signal (loss drops well below ln(V)).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterator, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

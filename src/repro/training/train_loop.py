@@ -19,7 +19,6 @@ Production posture (designed for 1000+ nodes, exercised here single-host):
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
@@ -30,7 +29,7 @@ import jax.numpy as jnp
 from repro.config import MeshPlan, ModelConfig, TrainConfig
 from repro.models import Transformer
 from repro.training import checkpoint as ckpt
-from repro.training.data import DataConfig, DataIterator, batch_for_step
+from repro.training.data import DataConfig, DataIterator
 from repro.training.optimizer import (
     OptState,
     adamw_update,

@@ -16,7 +16,6 @@ import pytest
 
 from repro.backends import (
     AttentionBackend,
-    CentroidStore,
     available_backends,
     build_plan,
     get_backend,

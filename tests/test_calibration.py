@@ -3,12 +3,7 @@ import jax
 import numpy as np
 import pytest
 
-from repro.core.calibration import (
-    assign_block_sizes,
-    head_recall_at_block_size,
-    make_model_like_batch,
-    profile_heads,
-)
+from repro.core.calibration import assign_block_sizes, profile_heads
 
 KEY = jax.random.PRNGKey(0)
 S, D, BUDGET = 4096, 64, 1024

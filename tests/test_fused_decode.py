@@ -17,6 +17,8 @@ from repro.core.ragged import layout_for, uniform_layout
 from repro.core.selection import select_page_table
 from repro.kernels import ops
 
+pytestmark = pytest.mark.kernel
+
 PALLAS = PallasBackend(interpret=True)
 KEY = jax.random.PRNGKey(0)
 

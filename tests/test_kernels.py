@@ -9,7 +9,7 @@ import pytest
 from repro.backends import PallasBackend, get_backend
 from repro.core.centroids import rank_query
 from repro.core.quantization import unpack_split_half
-from repro.core.ragged import layout_for, uniform_layout
+from repro.core.ragged import layout_for
 from repro.core.selection import select_page_table
 from repro.kernels import block_centroid, ops, ref
 from repro.kernels.flash_attention import flash_attention

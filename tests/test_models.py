@@ -11,6 +11,8 @@ import pytest
 from repro.configs import ASSIGNED_ARCHS, get_config, smoke_variant
 from repro.models import Transformer
 
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 
 

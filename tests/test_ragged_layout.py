@@ -6,7 +6,7 @@ try:
 except ImportError:  # pragma: no cover - fallback: deterministic examples
     from _hypothesis_fallback import given, settings, strategies as st
 
-from repro.core.ragged import RaggedLayout, layout_for, uniform_layout
+from repro.core.ragged import RaggedLayout, layout_for
 from repro.core.stacked import as_arrays, stack_layouts
 
 sizes = st.sampled_from([16, 32, 64])

@@ -14,7 +14,7 @@ from repro.configs import get_config, smoke_variant
 from repro.models import Transformer
 from repro.serving import Engine, EngineStalled, Request
 from repro.serving.metrics import ServingMetrics
-from repro.serving.scheduler import DECODE, PREFILL, QUEUED, Scheduler
+from repro.serving.scheduler import DECODE, QUEUED, Scheduler
 
 
 def _sched(pool_pages=64, prefix=True, **serve_kw):

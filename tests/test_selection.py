@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # pragma: no cover - fallback: deterministic examples
@@ -12,7 +11,6 @@ from repro.backends import get_backend
 from repro.config import SparseConfig
 from repro.core import dense_decode_attention, layout_for, select_page_table
 from repro.core.selection import pages_to_token_mask
-from repro.core.stacked import as_arrays
 
 
 def _scores(key, lay, B=2):

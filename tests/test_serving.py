@@ -1,5 +1,4 @@
 """Serving engine: continuous batching, admission control, sampling."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -15,9 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.config import SparseConfig
 from repro.configs import get_config, smoke_variant
-from repro.core import calibrate, layout_for
+from repro.core import calibrate
 from repro.core.calibration import make_model_like_batch, profile_heads, assign_block_sizes
 from repro.core.centroids import (
     build_rank_keys,
@@ -30,6 +29,8 @@ from repro.core.selection import pages_to_token_mask, select_page_table
 from repro.core import estimation
 from repro.core.ragged import uniform_layout
 from repro.models import Transformer
+
+pytestmark = pytest.mark.slow
 
 KEY = jax.random.PRNGKey(0)
 

@@ -12,12 +12,7 @@ from repro.config import MeshPlan, TrainConfig
 from repro.configs import get_config, smoke_variant
 from repro.training import checkpoint as ckpt
 from repro.training.data import DataConfig, batch_for_step
-from repro.training.optimizer import (
-    adamw_update,
-    compress_int8,
-    init_opt_state,
-    lr_schedule,
-)
+from repro.training.optimizer import compress_int8, init_opt_state, lr_schedule
 from repro.training.train_loop import Trainer, run_with_restarts
 
 CKPT_DIR = "/tmp/repro_test_ckpt"
