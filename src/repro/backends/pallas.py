@@ -82,11 +82,13 @@ class PallasBackend(AttentionBackend):
     ) -> Tuple[jax.Array, Optional[jax.Array]]:
         """Query-block sparse flash prefill in ONE Pallas launch
         (:mod:`repro.kernels.sparse_prefill`); the base-class jnp oracle
-        remains the parity reference."""
-        from repro.kernels import ops
+        remains the parity reference.  Under an active sharding context the
+        launch is shard_map'd over the ``(data, model)`` mesh
+        (:mod:`repro.distributed.kernel_partition`)."""
+        from repro.distributed import kernel_partition
 
         rq = rank_query(q, sparse.centroid_method, q.shape[-1])
-        return ops.sparse_prefill(
+        return kernel_partition.sparse_prefill(
             q, rq, k, v, score_store, layout,
             sink_pages=sparse.sink_pages,
             local_pages=sparse.local_pages,
@@ -104,13 +106,15 @@ class PallasBackend(AttentionBackend):
         self, q, k, v, store, layout, sparse, seq_len=None
     ) -> Tuple[jax.Array, Optional[jax.Array]]:
         """Fused single-launch decode when ``sparse.fused_decode`` is set;
-        otherwise the shared staged pipeline (the parity oracle)."""
+        otherwise the shared staged pipeline (the parity oracle).  Under an
+        active sharding context the fused launch is shard_map'd over the
+        ``(data, model)`` mesh (:mod:`repro.distributed.kernel_partition`)."""
         if not sparse.fused_decode:
             return super().decode(q, k, v, store, layout, sparse, seq_len)
-        from repro.kernels import ops
+        from repro.distributed import kernel_partition
 
         rq = rank_query(q, sparse.centroid_method, q.shape[-1])
-        out, table, _ = ops.fused_decode(
+        out, table, _ = kernel_partition.fused_decode(
             q, rq, k, v, store, layout,
             sink_pages=sparse.sink_pages,
             local_pages=sparse.local_pages,

@@ -1,2 +1,3 @@
-"""Distribution substrate: logical sharding rules, context-parallel decode
-combine, compressed cross-pod collectives."""
+"""Distribution substrate: logical sharding rules, shard_map'd serving
+kernels (:mod:`repro.distributed.kernel_partition`), param/cache sharding
+profiles, compressed cross-pod collectives."""

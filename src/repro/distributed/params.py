@@ -118,8 +118,10 @@ def rules_for(
             # hypothesized to be cheaper — only selected pages would move —
             # but GSPMD cannot partition dynamic page gathers and
             # all-gathers the whole pool: 0.017s -> 0.9s collective,
-            # REFUTED in §Perf 3.2.  The known better design is a
-            # shard_map flash-combine decode; tracked as future work.)
+            # REFUTED in §Perf 3.2.  The serving engine now sidesteps GSPMD
+            # entirely with shard_map'd kernels —
+            # :mod:`repro.distributed.kernel_partition` — which keep the KV
+            # pool kv-head-sharded without any pool gather.)
             rules["kv_heads"] = None
             rules["head_dim"] = "model"
     return rules
@@ -212,6 +214,10 @@ _CACHE_RULES = [
     ("/codes", (None, "batch", "kv_pages", None)),
     ("/scale", (None, "batch", None, None)),
     ("/zero", (None, "batch", None, None)),
+    # prefill scoring segment (per-ROW affine): rows stay whole per shard
+    ("/pcodes", (None, "batch", None, None)),
+    ("/pscale", (None, "batch", None, None)),
+    ("/pzero", (None, "batch", None, None)),
     ("/h", (None, "batch", "mlp")),
     ("/conv", (None, "batch", None, "mlp")),
     ("/S", (None, "batch", "heads", None, None)),

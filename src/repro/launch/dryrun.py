@@ -98,7 +98,9 @@ def run_cell(
 ) -> Dict[str, Any]:
     cfg = get_config(arch)
     shape = SHAPES_BY_NAME[shape_name]
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    # forced-512 dry-run topology: the canonical MeshPlan shape, not the
+    # (derived) live device count.
+    mesh = make_production_mesh(multi_pod=multi_pod, shape=plan.mesh_shape)
     rules = pshard.rules_for(cfg, shape, plan)
 
     t0 = time.monotonic()

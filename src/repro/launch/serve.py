@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.config import ServeConfig
 from repro.configs import get_config, smoke_variant
+from repro.launch.mesh import make_serving_mesh, parse_mesh_arg
 from repro.models import Transformer
 from repro.serving import Engine, Request
 
@@ -42,18 +43,33 @@ def main():
                     help="prefill token budget per engine tick")
     ap.add_argument("--sparse-prefill", action="store_true",
                     help="query-block sparse prefill (pallas backend)")
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="serve on a (data, model) device mesh: an explicit "
+                         "shape like '4,2', or 'auto' to derive it from "
+                         "jax.device_count() (model axis capped by the "
+                         "arch's kv-head count).  Default: no mesh "
+                         "(single-device engine)")
+    ap.add_argument("--fused-decode", action="store_true",
+                    help="single-launch fused decode (pallas backend)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_variant(cfg)
-    if args.sparse_prefill:
+    if args.sparse_prefill or args.fused_decode:
         cfg = dataclasses.replace(
             cfg,
             sparse=dataclasses.replace(
-                cfg.sparse, backend="pallas", sparse_prefill=True,
+                cfg.sparse, backend="pallas",
+                sparse_prefill=args.sparse_prefill or cfg.sparse.sparse_prefill,
+                fused_decode=args.fused_decode or cfg.sparse.fused_decode,
             ),
         )
+    mesh = None
+    if args.mesh is not None:
+        shape = None if args.mesh == "auto" else parse_mesh_arg(args.mesh)
+        mesh = make_serving_mesh(shape, n_kv_heads=cfg.n_kv_heads)
+        print(f"serving mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
     model = Transformer(cfg)
     params = model.init(jax.random.PRNGKey(0))
     eng = Engine(cfg, params, ServeConfig(
@@ -61,7 +77,7 @@ def main():
         max_context=args.max_context,
         prefill_chunk=args.prefill_chunk,
         prefill_tokens_per_tick=args.prefill_budget,
-    ))
+    ), mesh=mesh)
     rng = np.random.default_rng(0)
     prefixes = [
         rng.integers(0, cfg.vocab_size, args.prefix_len).astype(np.int32)

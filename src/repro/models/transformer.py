@@ -1009,6 +1009,7 @@ class Transformer:
 
         if lay is None:
             out = dense_decode_attention(q, k_cache, v_cache, seq_len=live)
+            out = constrain(out, "batch", None, "head_dim")
             return layers.out_project(p, out[:, None], cfg), new_entry
 
         # --- AB-Sparse path: plan/execute through the attention backend ---
@@ -1023,9 +1024,14 @@ class Transformer:
             store, k_cache, lay, offs, seq_len, cfg.sparse
         )
         new_entry["codes"] = store.codes
+        # head-gather before the out projection: under a serving mesh the
+        # kernel output arrives kv-head-sharded, and out_project must reduce
+        # over the FULL head axis in single-device order for the sharded
+        # path to stay token-identical (identity outside a context).
         out, _ = self.backend.decode(
             q, k_cache, v_cache, store, lay, cfg.sparse, seq_len=live
         )
+        out = constrain(out, "batch", None, "head_dim")
         return layers.out_project(p, out[:, None], cfg), new_entry
 
     def _local_attn_decode(self, p, h, entry, positions):

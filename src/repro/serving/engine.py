@@ -27,7 +27,8 @@ config is enabled for the engine's max_context.
 from __future__ import annotations
 
 import time
-from typing import Callable, List, Optional
+from contextlib import nullcontext
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +37,9 @@ import numpy as np
 from repro.config import ModelConfig, ServeConfig
 from repro.cache.paged_kv import PagePool
 from repro.cache.prefix_cache import PrefixCache
+from repro.distributed import params as pshard
+from repro.distributed.kernel_partition import serving_rules
+from repro.distributed.sharding import sharding_rules
 from repro.models import Transformer
 from repro.serving.metrics import ServingMetrics
 from repro.serving.sampler import sample
@@ -62,17 +66,54 @@ class Engine:
         serve_cfg: ServeConfig,
         seed: int = 0,
         clock: Callable[[], float] = time.monotonic,
+        mesh=None,
+        shard_rules: Optional[Dict] = None,
     ):
         """Batch capacity and context length come from ``serve_cfg``
         (``ServeConfig.max_batch`` / ``ServeConfig.max_context``) — the
         engine no longer carries shadow copies of those knobs.  The config
         is required: ``ServeConfig()``'s production-scale defaults
         (128 x 512k context) would allocate a colossal cache by accident.
+
+        ``mesh`` (a ``(data, model)`` :class:`jax.sharding.Mesh`, e.g. from
+        :func:`repro.launch.mesh.make_serving_mesh`) makes the engine
+        mesh-native: the KV cache / centroid store / plan descriptors are
+        allocated with ``NamedSharding`` (batch over ``data``, kv heads
+        over ``model``), every jit'd step runs under the serving sharding
+        context (so the Pallas backend shard_maps its kernel launches via
+        :mod:`repro.distributed.kernel_partition`), and cache donation is
+        preserved.  Sharded serving is token-identical to the single-device
+        path.  ``shard_rules`` overrides individual logical-axis rules.
         """
         self.cfg = model_cfg
         self.serve = serve_cfg
         self.model = Transformer(model_cfg)
         self.params = params
+        self.mesh = mesh
+        assert shard_rules is None or mesh is not None, (
+            "shard_rules given without a mesh — pass mesh= (the override "
+            "would otherwise be silently ignored)"
+        )
+        self.shard_rules = (
+            serving_rules(shard_rules) if mesh is not None else None
+        )
+        if (
+            mesh is not None
+            and int(np.prod(mesh.devices.shape)) > 1
+            and model_cfg.sparse.backend == "pallas"
+            and not model_cfg.sparse.fused_decode
+        ):
+            import warnings
+
+            # still token-identical (GSPMD replicates the opaque kernel
+            # launches), but the sharded KV pool is re-gathered every step.
+            warnings.warn(
+                "mesh serving with the STAGED pallas decode path: only "
+                "SparseConfig.fused_decode=True runs shard_map'd kernels; "
+                "the staged kernels replicate under GSPMD and re-gather "
+                "the sharded KV pool each step",
+                stacklevel=2,
+            )
         default_pages = self.max_batch * (
             self.max_context // self.serve.page_size
         )
@@ -83,6 +124,18 @@ class Engine:
         self.key = jax.random.PRNGKey(seed)
 
         self.cache = self.model.init_cache(self.max_batch, self.max_context)
+        if mesh is not None:
+            # allocate device state mesh-wide: KV pool batch x kv-head
+            # sharded, store codes batch-sharded (ragged rows whole), plan
+            # descriptors replicated — all as explicit NamedShardings so
+            # the jit'd steps start from (and donate back into) the
+            # serving layout instead of resharding per tick.
+            self.cache = jax.device_put(
+                self.cache,
+                pshard.tree_shardings(
+                    self.cache, mesh, self.shard_rules, kind="cache"
+                ),
+            )
         self.slots: List[Optional[SeqState]] = [None] * self.max_batch
         self.finished: List[Request] = []
         self.metrics = ServingMetrics(clock=clock)
@@ -116,16 +169,40 @@ class Engine:
         # reference (it reassigns ``self.cache`` from each step's result),
         # and ``init_cache`` gives the cache private copies of the shared
         # plan descriptors, so donation is safe.
-        self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
-        self._chunk = jax.jit(self.model.prefill_chunk, donate_argnums=(1,))
-        self._refresh = jax.jit(self.model.refresh_slot_store, donate_argnums=(0,))
-        self._refresh_scores = jax.jit(
-            self.model.refresh_slot_score_rows, donate_argnums=(0,)
+        # jit'd steps trace (and re-trace) under the serving sharding
+        # context so model-level ``constrain`` calls and the backend's
+        # shard_map'd kernel launches see the mesh.
+        self._decode = self._under_mesh(
+            jax.jit(self.model.decode_step, donate_argnums=(1,))
+        )
+        self._chunk = self._under_mesh(
+            jax.jit(self.model.prefill_chunk, donate_argnums=(1,))
+        )
+        self._refresh = self._under_mesh(
+            jax.jit(self.model.refresh_slot_store, donate_argnums=(0,))
+        )
+        self._refresh_scores = self._under_mesh(
+            jax.jit(self.model.refresh_slot_score_rows, donate_argnums=(0,))
         )
         self._chunk_len = min(serve_cfg.prefill_chunk, self.max_context)
         self._tokens_buf = np.zeros((self.max_batch,), np.int32)
         #: authoritative per-slot sequence lengths (tokens with KV in cache).
         self._seq_len = np.zeros((self.max_batch,), np.int32)
+
+    def _shard_ctx(self):
+        if self.mesh is None:
+            return nullcontext()
+        return sharding_rules(self.mesh, self.shard_rules)
+
+    def _under_mesh(self, fn):
+        """Run ``fn`` inside the engine's sharding context (identity when
+        the engine is mesh-less)."""
+
+        def wrapped(*args, **kwargs):
+            with self._shard_ctx():
+                return fn(*args, **kwargs)
+
+        return wrapped
 
     @property
     def max_batch(self) -> int:
@@ -229,9 +306,10 @@ class Engine:
             if req.prefix_emb is not None
             else None
         )
-        logits, cache1 = self.model.prefill(
-            self.params, tokens, prefix, max_context=self.max_context
-        )
+        with self._shard_ctx():
+            logits, cache1 = self.model.prefill(
+                self.params, tokens, prefix, max_context=self.max_context
+            )
         slot = seq.slot
 
         # scatter the single-sequence cache into this batch slot

@@ -53,8 +53,9 @@ class RequestMetrics:
 
 
 def _pct(xs: List[float], q: float) -> float:
-    """Nearest-rank percentile (no numpy dependency for a hot-path-free
-    bookkeeping module would be overkill — keep it simple)."""
+    """Nearest-rank percentile.  Pure Python on purpose: this is a
+    hot-path-free bookkeeping module, and a numpy dependency here would be
+    overkill."""
     xs = sorted(xs)
     idx = min(len(xs) - 1, max(0, int(round(q * (len(xs) - 1)))))
     return xs[idx]
@@ -107,7 +108,11 @@ class ServingMetrics:
         self.preemptions += 1
 
     def on_finish(self, req_id: int):
-        self._req(req_id).t_finish = self.clock()
+        # idempotent like every other lifecycle event: a duplicate retire
+        # must not overwrite t_finish (it would skew TPOT).
+        r = self._req(req_id)
+        if r.t_finish is None:
+            r.t_finish = self.clock()
 
     # -- aggregation ---------------------------------------------------------
 

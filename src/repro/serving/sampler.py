@@ -21,11 +21,20 @@ def sample(
         kth = vals[..., -1:]
         logits = jnp.where(logits >= kth, logits, -1e30)
     if top_p < 1.0:
-        sorted_logits = -jnp.sort(-logits, axis=-1)
+        # Mask positionally on the SORTED axis, then scatter back: a value
+        # cutoff (``logits >= cutoff``) keeps every token tied with the
+        # cutoff logit, so the nucleus can exceed the top-p mass on ties.
+        order = jnp.argsort(-logits, axis=-1)                # stable
+        sorted_logits = jnp.take_along_axis(logits, order, axis=-1)
         probs = jax.nn.softmax(sorted_logits, axis=-1)
         cum = jnp.cumsum(probs, axis=-1)
-        # smallest set with cumulative prob >= top_p
-        cutoff_idx = jnp.sum(cum < top_p, axis=-1, keepdims=True)
-        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
-        logits = jnp.where(logits >= cutoff, logits, -1e30)
+        # smallest prefix with cumulative prob >= top_p: keep position j
+        # iff the mass BEFORE it is still short of top_p.  Position 0 is
+        # always kept so the nucleus is never empty (top_p == 0.0 would
+        # otherwise mask the whole vocabulary into uniform noise).
+        keep_sorted = (cum - probs) < top_p
+        keep_sorted = keep_sorted.at[..., 0].set(True)
+        inv = jnp.argsort(order, axis=-1)
+        keep = jnp.take_along_axis(keep_sorted, inv, axis=-1)
+        logits = jnp.where(keep, logits, -1e30)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

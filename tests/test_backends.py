@@ -177,18 +177,18 @@ def test_model_backend_swap_is_config_only():
     from repro.configs import get_config, smoke_variant
 
     base = smoke_variant(get_config("llama3.2-3b"))
-    tokens = jax.random.randint(KEY, (1, 256), 0, base.vocab_size)
+    tokens = jax.random.randint(KEY, (1, 160), 0, base.vocab_size)
 
     def logits(backend):
         cfg = dataclasses.replace(
             base,
             sparse=dataclasses.replace(
-                base.sparse, token_budget=128, backend=backend
+                base.sparse, token_budget=64, backend=backend
             ),
         )
         model = models.Transformer(cfg)
         params = model.init(KEY)
-        _, cache = model.prefill(params, tokens[:, :-1], max_context=320)
+        _, cache = model.prefill(params, tokens[:, :-1], max_context=192)
         return np.asarray(model.decode_step(params, cache, tokens[:, -1])[0])
 
     l_dense = logits("dense")

@@ -150,8 +150,10 @@ def test_chunked_prefill_matches_monolithic_outputs(setup):
     ]
 
     def serve_all(**kw):
+        # 256 comfortably covers the 200+5-token worst case; 512 only
+        # doubled the monolithic path's padded prefill for no coverage.
         eng = Engine(cfg, params, ServeConfig(
-            max_batch=2, max_context=512, temperature=0.0, **kw))
+            max_batch=2, max_context=256, temperature=0.0, **kw))
         reqs = [Request(i, p, max_new_tokens=5) for i, p in enumerate(prompts)]
         for r in reqs:
             eng.submit(r)
@@ -185,3 +187,132 @@ def test_top_p_nucleus_cutoff():
     logits = jnp.log(jnp.array([[0.97, 0.01, 0.01, 0.01]])).repeat(32, 0)
     toks = np.asarray(sample(key, logits, temperature=1.0, top_k=0, top_p=0.9))
     assert (toks == 0).all()
+
+
+def test_top_p_ties_do_not_inflate_nucleus():
+    """Regression: a VALUE cutoff (``logits >= cutoff``) kept every token
+    tied with the cutoff logit, so a tie-heavy distribution sampled the
+    whole vocabulary at any top_p.  The positional sorted-axis mask must
+    keep exactly the smallest prefix reaching the top-p mass."""
+    # 8 exactly-tied logits, top_p=0.5: mass before position j is j/8, so
+    # positions 0..3 (stable sort -> vocab ids 0..3) form the nucleus.
+    logits = jnp.zeros((4, 8))
+    toks = set()
+    for i in range(64):
+        t = np.asarray(
+            sample(jax.random.PRNGKey(i), logits, temperature=1.0,
+                   top_k=0, top_p=0.5)
+        )
+        toks.update(t.tolist())
+    assert toks <= {0, 1, 2, 3}, f"nucleus leaked tied tokens: {sorted(toks)}"
+    # ...and the whole nucleus stays reachable (all 4 kept tokens appear).
+    assert toks == {0, 1, 2, 3}
+
+
+def test_top_p_zero_degenerates_to_argmax():
+    # the nucleus is never empty: top_p=0.0 keeps exactly the top token
+    # (the positional mask alone would discard ALL positions -> uniform
+    # noise over the whole vocabulary).
+    logits = jnp.array([[0.1, 5.0, -2.0, 0.0]]).repeat(16, 0)
+    toks = np.asarray(
+        sample(jax.random.PRNGKey(3), logits, temperature=1.0,
+               top_k=0, top_p=0.0)
+    )
+    assert (toks == 1).all()
+
+
+def test_top_p_tie_spanning_cutoff_keeps_prefix_only():
+    # p ~ [0.4, 0.2, 0.2, 0.2]; top_p=0.7: cum = .4, .6, .8 -> positions
+    # 0..2 kept; the tied token at position 3 (same logit as 1, 2) must NOT
+    # ride in on the tie.
+    logits = jnp.log(jnp.array([[0.4, 0.2, 0.2, 0.2]])).repeat(64, 0)
+    toks = np.asarray(
+        sample(jax.random.PRNGKey(7), logits, temperature=1.0,
+               top_k=0, top_p=0.7)
+    )
+    assert set(toks.tolist()) <= {0, 1, 2}
+
+
+# -- lifecycle-metrics idempotency ------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    import sys as _sys
+    from pathlib import Path as _Path
+
+    _sys.path.insert(0, str(_Path(__file__).parent))
+    from _hypothesis_fallback import given, settings, strategies as st
+
+_EVENTS = ["submit", "admit", "first_token", "decode_token", "preempt", "finish"]
+
+
+@settings(max_examples=40, deadline=None)
+@given(events=st.lists(st.sampled_from(_EVENTS), min_size=1, max_size=30))
+def test_metrics_lifecycle_timestamps_idempotent(events):
+    """Every one-shot lifecycle timestamp (submit/admit/first-token/finish)
+    is set by the FIRST occurrence and immune to duplicates — a duplicate
+    retire used to overwrite ``t_finish`` and skew TPOT."""
+    from repro.serving.metrics import ServingMetrics
+
+    t = [0.0]
+
+    def clock():
+        t[0] += 1.0
+        return t[0]
+
+    m = ServingMetrics(clock=clock)
+
+    def fire(ev):
+        if ev == "submit":
+            m.on_submit(0, prompt_tokens=8)
+        elif ev == "admit":
+            m.on_admit(0)
+        elif ev == "first_token":
+            m.on_first_token(0)
+        elif ev == "decode_token":
+            m.on_decode_token(0)
+        elif ev == "preempt":
+            m.on_preempt(0)
+        elif ev == "finish":
+            m.on_finish(0)
+
+    stamps = {}
+    for ev in events:
+        fire(ev)
+        r = m.requests[0]
+        now = dict(
+            t_submit=r.t_submit, t_admit=r.t_admit,
+            t_first_token=r.t_first_token, t_finish=r.t_finish,
+        )
+        for k, v in now.items():
+            if k in stamps and stamps[k] is not None:
+                assert v == stamps[k], (
+                    f"{k} overwritten by duplicate {ev!r}: "
+                    f"{stamps[k]} -> {v}"
+                )
+            stamps[k] = v
+    # counters stay cumulative (they are not one-shot events)
+    assert m.requests[0].output_tokens == events.count("decode_token")
+    assert m.preemptions == events.count("preempt")
+
+
+def test_duplicate_retire_does_not_skew_tpot():
+    from repro.serving.metrics import ServingMetrics
+
+    t = [0.0]
+
+    def clock():
+        t[0] += 1.0
+        return t[0]
+
+    m = ServingMetrics(clock=clock)
+    m.on_submit(0, 4)
+    m.on_admit(0)
+    m.on_first_token(0)          # t=3
+    for _ in range(3):
+        m.on_decode_token(0)
+    m.on_finish(0)               # t=4
+    tpot = m.requests[0].tpot
+    m.on_finish(0)               # duplicate retire at t=5: must be a no-op
+    assert m.requests[0].tpot == tpot == 0.5
