@@ -1,8 +1,9 @@
 """CI bench-gate: fail when a committed performance floor regresses.
 
 Reads the benchmark artifacts written by ``benchmarks/decode_latency.py``
-(``BENCH_decode.json``) and ``benchmarks/prefill_latency.py``
-(``BENCH_prefill.json``) and checks them against the floors below.
+(``BENCH_decode.json``), ``benchmarks/prefill_latency.py``
+(``BENCH_prefill.json``) and ``benchmarks/memory_bench.py``
+(``BENCH_memory.json``) and checks them against the floors below.
 
 Floors are deliberately conservative: interpret-mode wall clock on shared
 CI runners is noisy, so the timing floors sit far under the measured
@@ -35,6 +36,17 @@ FLOORS = {
     # replaces (measured 2-4x in interpret mode; floor leaves >3x margin
     # for runner noise — the tight gate is the deterministic block frac).
     "prefill.speedup_min": 1.2,
+    # hierarchical KV memory: the tiered pool must sustain at least 2x the
+    # concurrent sequences of a flat all-HBM pool at the same HBM budget
+    # (the subsystem's whole point; deterministic given the workload).
+    "memory.concurrency_gain_min": 2.0,
+    # overcommit must exercise real HBM<->host migration, not degenerate
+    # into an all-resident run.
+    "memory.demotions_min": 1,
+    # if the selection drifts into the host tier, the margin-rank
+    # prefetcher must stage most of them ahead of time (1.0 when no
+    # demand lookup happened at all — nothing drifted, nothing missed).
+    "memory.prefetch_hit_rate_min": 0.5,
 }
 
 
@@ -49,10 +61,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--decode", default=str(ROOT / "BENCH_decode.json"))
     ap.add_argument("--prefill", default=str(ROOT / "BENCH_prefill.json"))
+    ap.add_argument("--memory", default=str(ROOT / "BENCH_memory.json"))
     args = ap.parse_args()
 
     decode = _load(pathlib.Path(args.decode))
     prefill = _load(pathlib.Path(args.prefill))
+    memory = _load(pathlib.Path(args.memory))
 
     checks = [
         (
@@ -74,6 +88,21 @@ def main() -> None:
             "prefill.speedup",
             prefill.get("speedup", 0.0),
             ">=", FLOORS["prefill.speedup_min"],
+        ),
+        (
+            "memory.concurrency_gain",
+            memory.get("concurrency_gain", 0.0),
+            ">=", FLOORS["memory.concurrency_gain_min"],
+        ),
+        (
+            "memory.demotions",
+            memory.get("demotions", 0),
+            ">=", FLOORS["memory.demotions_min"],
+        ),
+        (
+            "memory.prefetch_hit_rate",
+            memory.get("prefetch_hit_rate", 0.0),
+            ">=", FLOORS["memory.prefetch_hit_rate_min"],
         ),
     ]
     failed = []

@@ -1,0 +1,194 @@
+"""Hierarchical KV memory benchmark: concurrency per HBM budget.
+
+Runs the same request set through two engines with the *same* HBM page
+budget:
+
+- **baseline** — a flat all-HBM :class:`~repro.cache.paged_kv.PagePool`
+  of ``hbm_pages`` pages.  Admission is bounded by full-KV residency, so
+  concurrency tops out at ``hbm_pages / pages_per_seq``.
+- **tiered** — a :class:`~repro.memory.TieredPagePool` with the same
+  ``hbm_pages`` plus a ``host_pages`` spill tier.  Only each sequence's
+  *working set* (selected + tail pages) must stay HBM-resident; cold
+  pages migrate to the host tier and the margin-rank prefetcher stages
+  them back ahead of selection drift.
+
+The headline metric is ``concurrency_gain``: peak concurrently-running
+sequences (prefill + decode) tiered vs baseline.  The bench also asserts
+the two engines produce token-identical outputs (sampling is keyed by
+(seq_id, position), so scheduling differences cannot change tokens) and
+reports the prefetch hit rate and migration traffic.
+
+Writes ``BENCH_memory.json`` at the repo root for the CI bench-gate.
+
+    PYTHONPATH=src python benchmarks/memory_bench.py
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _make_requests(cfg, n_requests, prompt_tokens, new_tokens, seed=0):
+    from repro.serving import Request
+
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            rid,
+            rng.integers(0, cfg.vocab_size, prompt_tokens).astype(np.int32),
+            max_new_tokens=new_tokens,
+        )
+        for rid in range(n_requests)
+    ]
+
+
+def _drive(eng, requests):
+    """Submit everything up front and run to drain, tracking per-tick
+    concurrency.  -> (outputs, peak_running, peak_decoding, ticks, dt)."""
+    from repro.serving.scheduler import DECODE
+
+    for r in requests:
+        eng.submit(r)
+    peak_running = peak_decoding = ticks = 0
+    t0 = time.monotonic()
+    while eng.scheduler.has_work:
+        eng.step()
+        ticks += 1
+        if ticks > 2000:
+            states = {
+                s.seq_id: s.state for s in eng.scheduler.running.values()
+            }
+            mem = getattr(eng, "memory", None)
+            raise RuntimeError(
+                f"engine made no progress in {ticks} ticks: states={states} "
+                f"stalled={sorted(mem.stalled) if mem else None} "
+                f"pool={getattr(eng.pool, 'stats', dict)()}"
+            )
+        running = list(eng.scheduler.running.values())
+        peak_running = max(peak_running, len(running))
+        peak_decoding = max(
+            peak_decoding, sum(1 for s in running if s.state == DECODE)
+        )
+    dt = time.monotonic() - t0
+    outs = [list(r.output) for r in requests]
+    return outs, peak_running, peak_decoding, ticks, dt
+
+
+def run(
+    n_requests=6,
+    prompt_tokens=192,
+    new_tokens=24,
+    max_batch=6,
+    max_context=512,
+    hbm_pages=30,
+    host_overcommit=3,
+    seed=0,
+):
+    from repro.config import ServeConfig
+    from repro.configs import get_config, smoke_variant
+    from repro.models import Transformer
+    from repro.serving import Engine
+
+    cfg = smoke_variant(get_config("llama3.2-3b"))
+    model = Transformer(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    host_pages = hbm_pages * host_overcommit
+    common = dict(
+        max_batch=max_batch,
+        max_context=max_context,
+        prefill_tokens_per_tick=512,
+        prefill_chunk=128,
+    )
+
+    # -- baseline: flat all-HBM pool at the same HBM budget ------------------
+    eng_base = Engine(cfg, params, ServeConfig(
+        pool_pages=hbm_pages, **common,
+    ))
+    reqs_base = _make_requests(cfg, n_requests, prompt_tokens, new_tokens,
+                               seed)
+    outs_base, peak_base, peak_dec_base, ticks_base, dt_base = _drive(
+        eng_base, reqs_base
+    )
+    peak_hbm_base = eng_base.pool.peak_used_pages
+
+    # -- tiered: same HBM budget + host spill tier ---------------------------
+    eng_tier = Engine(cfg, params, ServeConfig(
+        hbm_pages=hbm_pages, host_pages=host_pages, **common,
+    ))
+    reqs_tier = _make_requests(cfg, n_requests, prompt_tokens, new_tokens,
+                               seed)
+    outs_tier, peak_tier, peak_dec_tier, ticks_tier, dt_tier = _drive(
+        eng_tier, reqs_tier
+    )
+
+    assert outs_tier == outs_base, (
+        "tiered engine must be token-identical to the all-HBM baseline"
+    )
+    for eng in (eng_base, eng_tier):
+        known = eng.prefix_cache.pages() if eng.prefix_cache else set()
+        leaks = eng.pool.assert_consistent(known_pins=known)
+        assert not leaks, f"leaked pages at drain: {leaks}"
+
+    pool = eng_tier.pool
+    # footprint asymmetry: the always-HBM-resident scoring segment vs one
+    # migrating KV page (the subsystem's enabling ratio).
+    entry = eng_tier.cache["pos0"]
+    centroid_bytes = sum(
+        int(entry[k].size * entry[k].dtype.itemsize)
+        for k in ("codes", "scale", "zero", "pcodes", "pscale", "pzero")
+        if k in entry and entry[k] is not None
+    )
+    kv_page_bytes = eng_tier.memory.io.page_nbytes(entry)
+    snap = eng_tier.metrics.snapshot()
+    hits = int(snap.get("prefetch_hits", 0))
+    misses = int(snap.get("prefetch_misses", 0))
+    hit_rate = hits / (hits + misses) if hits + misses else 1.0
+    out = {
+        "n_requests": n_requests,
+        "prompt_tokens": prompt_tokens,
+        "new_tokens": new_tokens,
+        "max_batch": max_batch,
+        "page_size": pool.page_size,
+        "hbm_pages": hbm_pages,
+        "host_pages": host_pages,
+        "peak_concurrent_baseline": peak_base,
+        "peak_concurrent_tiered": peak_tier,
+        "concurrency_gain": round(peak_tier / max(peak_base, 1), 2),
+        "peak_decoding_baseline": peak_dec_base,
+        "peak_decoding_tiered": peak_dec_tier,
+        "peak_hbm_pages_baseline": int(peak_hbm_base),
+        "peak_hbm_pages_tiered": int(pool.peak_hbm_pages),
+        "demotions": int(pool.demotions),
+        "promotions": int(pool.promotions),
+        "migration_bytes": int(snap.get("migration_bytes", 0)),
+        "prefetch_staged": int(snap.get("prefetch_staged", 0)),
+        "prefetch_hits": hits,
+        "prefetch_misses": misses,
+        "prefetch_hit_rate": round(hit_rate, 3),
+        "stalls": int(snap.get("stalls", 0)),
+        "kv_page_bytes": int(kv_page_bytes),
+        "centroid_store_bytes": int(centroid_bytes),
+        "ticks_baseline": ticks_base,
+        "ticks_tiered": ticks_tier,
+        "wall_s_baseline": round(dt_base, 1),
+        "wall_s_tiered": round(dt_tier, 1),
+        "token_identical": True,
+    }
+    return out
+
+
+if __name__ == "__main__":
+    result = run()
+    path = ROOT / "BENCH_memory.json"
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print(f"wrote {path}")
+    for k, v in result.items():
+        print(f"  {k}: {v}")

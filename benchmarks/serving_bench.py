@@ -79,8 +79,10 @@ def run(
     assert all(r.done and len(r.output) == new_tokens for r in requests), (
         "every request must complete"
     )
-    # owner_map clean at drain: only prefix-cache pins survive.
-    eng.pool.assert_consistent()
+    # owner_map clean at drain: only prefix-cache pins survive, and every
+    # pool pin must be accounted for by a live radix-cache node.
+    leaks = eng.pool.assert_consistent(known_pins=eng.prefix_cache.pages())
+    assert not leaks, f"leaked pages at drain: {leaks}"
     owner = eng.pool.owner_map()
     assert ((owner == -1) | (owner == -2)).all(), "stale sequence owns pages"
     assert eng.pool.used_pages == eng.prefix_cache.n_pages
@@ -99,6 +101,8 @@ def run(
         "prefill_computed": int(snap["prefill_tokens_computed"]),
         "preemptions": int(snap["preemptions"]),
         "ticks": int(snap["ticks"]),
+        "peak_pool_pages": int(eng.pool.peak_used_pages),
+        "pool_pages": int(eng.pool.total_pages),
     }
     return {
         "name": "serving_scheduler_poisson",

@@ -89,6 +89,17 @@ class CentroidStore:
             return self.codes.shape[-1] * 4
         return self.codes.shape[-1]
 
+    @property
+    def nbytes(self) -> int:
+        """Total scoring-segment footprint (codes + affine params) — the
+        part of the cache the hierarchical KV memory keeps permanently
+        HBM-resident, vs the full KV pages it migrates."""
+        n = self.codes.size * self.codes.dtype.itemsize
+        for arr in (self.scale, self.zero):
+            if arr is not None:
+                n += arr.size * arr.dtype.itemsize
+        return n
+
     def dequantize(self, layout) -> jax.Array:
         """-> ``[B, total_rows, Dp]`` f32 rank keys (reference-path view of
         the same bytes the Pallas kernel dequantizes in-register)."""

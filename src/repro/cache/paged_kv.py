@@ -31,7 +31,7 @@ Invariants (property-tested):
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Sequence, Set, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -71,6 +71,10 @@ class PagePool:
         self._tokens: Dict[int, int] = {}
         #: pages pinned by the prefix cache (at most one pin per page).
         self._cache_pins: Set[int] = set()
+        #: high-water mark of allocated pages — exit-time ``used_pages``
+        #: hides transient overcommit (e.g. during preemption storms), so
+        #: benches report this instead.
+        self.peak_used_pages = 0
 
     # -- capacity ------------------------------------------------------------
 
@@ -108,6 +112,8 @@ class PagePool:
         pages = [self._free.pop() for _ in range(need)]
         for p in pages:
             self._refcount[p] = 1
+        if self.used_pages > self.peak_used_pages:
+            self.peak_used_pages = self.used_pages
         return pages
 
     def allocate(self, seq_id: int, n_tokens: int) -> PageTable:
@@ -213,8 +219,21 @@ class PagePool:
                     owner[p] = sid
         return owner
 
-    def assert_consistent(self):
-        """Full accounting audit; raises AssertionError on any violation."""
+    def assert_consistent(
+        self, known_pins: Optional[Iterable[int]] = None
+    ) -> List[int]:
+        """Full accounting audit; raises AssertionError on any violation.
+
+        The pin/refcount interaction gets its own explicit checks (a pinned
+        page must carry its pin reference and never sit on the free list —
+        previously such corruption only surfaced via the generic refcount
+        mismatch, with a misleading message).  Returns *leak candidates*:
+        pages whose only remaining reference is a cache pin that the pin
+        owner no longer knows about.  Pass ``known_pins`` (the prefix
+        cache's live page set, see ``PrefixCache.pages``) to cross-check;
+        without it pin-only pages are legitimate cached prefixes and the
+        candidate list is empty.
+        """
         refs = [0] * self.total_pages
         for sid, t in self._tables.items():
             assert len(set(t.physical)) == len(t.physical), (
@@ -229,6 +248,15 @@ class PagePool:
             refs[p] += 1
         free_set = set(self._free)
         assert len(free_set) == len(self._free), "free list has duplicates"
+        for p in self._cache_pins:
+            # a pin IS a reference: a pinned page with refcount 0 (or on the
+            # free list) means someone freed it out from under the cache.
+            assert self._refcount[p] >= 1, (
+                f"page {p}: cache-pinned but refcount {self._refcount[p]}"
+            )
+            assert p not in free_set, (
+                f"page {p}: cache-pinned but on the free list"
+            )
         for p in range(self.total_pages):
             assert self._refcount[p] == refs[p], (
                 f"page {p}: refcount {self._refcount[p]} != {refs[p]} refs"
@@ -236,3 +264,14 @@ class PagePool:
             assert (self._refcount[p] == 0) == (p in free_set), (
                 f"page {p}: rc {self._refcount[p]} vs free-list membership"
             )
+        if known_pins is None:
+            return []
+        known = set(known_pins)
+        unknown = self._cache_pins - known
+        assert not (known - self._cache_pins), (
+            f"pin owner claims pages the pool never pinned: "
+            f"{sorted(known - self._cache_pins)}"
+        )
+        # unknown pins whose only reference is the pin itself: nothing will
+        # ever unpin them -> leaked pages.
+        return sorted(p for p in unknown if self._refcount[p] == 1)

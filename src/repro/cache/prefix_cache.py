@@ -116,6 +116,20 @@ class PrefixCache:
             node = child
         return inserted
 
+    # -- introspection -------------------------------------------------------
+
+    def pages(self):
+        """The set of physical pages this cache currently pins — the
+        ``known_pins`` argument for ``PagePool.assert_consistent`` leak
+        audits."""
+        out = set()
+        stack = list(self._root.children.values())
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            out.add(n.page)
+        return out
+
     # -- eviction ------------------------------------------------------------
 
     def _evictable_leaves(self, protect: frozenset) -> List[_Node]:

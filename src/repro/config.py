@@ -69,6 +69,11 @@ class SparseConfig:
     #: ``None`` means uniform ``uniform_block_size`` everywhere.
     block_sizes: Optional[Tuple[Tuple[int, ...], ...]] = None
     uniform_block_size: int = 32
+    #: tiered KV memory (:mod:`repro.memory`) prefetch predictor width:
+    #: blocks ranked within this margin below each head's top-K cutoff are
+    #: emitted as the next step's predicted selection and staged host->HBM.
+    #: Static (baked into the jit'd decode step).
+    prefetch_margin_blocks: int = 2
 
     def head_block_size(self, layer: int, head: int) -> int:
         if self.block_sizes is None:
@@ -328,6 +333,18 @@ class ServeConfig:
     #: (every slot can hold a full context — no preemption pressure).
     #: Smaller pools oversubscribe slots and exercise preemption.
     pool_pages: Optional[int] = None
+    # -- hierarchical KV memory (:mod:`repro.memory`) ------------------------
+    #: HBM-resident KV page budget.  ``None`` -> single-tier pool
+    #: (``pool_pages`` semantics, everything HBM).  When set, full KV pages
+    #: migrate between this HBM budget and a ``host_pages`` spill tier
+    #: (LRU by last-selected decode step); the quantized centroid segment
+    #: and page tables stay HBM-resident.  Mutually exclusive with
+    #: ``pool_pages``; requires the sparse decode path to be active at
+    #: ``max_context`` (dense decode reads every row).
+    hbm_pages: Optional[int] = None
+    #: host (pinned-numpy) spill-tier capacity in pages; admission control
+    #: sees ``hbm_pages + host_pages`` total capacity.
+    host_pages: int = 0
     #: chunked-prefill token budget per engine tick, spread FCFS over
     #: prefilling sequences so long prompts interleave with decode instead
     #: of stalling the running batch.

@@ -115,6 +115,52 @@ def select_page_table(
     return page_table.astype(jnp.int32), page_valid
 
 
+def selected_page_masks(
+    scores: jax.Array,
+    layout,
+    seq_len: Optional[jax.Array] = None,
+    sink_pages: int = 1,
+    local_pages: int = 4,
+    margin_blocks: int = 0,
+    max_pages_per_block: int = 1,
+) -> Tuple[jax.Array, jax.Array]:
+    """scores ``[B, H, max_blocks]`` -> ``(selected, predicted)`` boolean
+    page masks, each ``[B, n_pages]`` (OR over heads).
+
+    ``selected`` is exactly the page set :func:`select_page_table` sends to
+    the attention stage — the tiered KV memory subsystem compares it
+    against host-resident pages to detect misses.  ``predicted`` widens the
+    per-head cutoff to ``K_h + margin_blocks``: its extra pages are the
+    ranks just below the cutoff, i.e. the likely targets when selection
+    drifts next step — the prefetch predictor.  ``predicted`` always
+    contains ``selected``.  ``max_pages_per_block`` must statically bound
+    ``B_h / page_size`` over heads (callers pass
+    ``max_block_size // page_size``).
+    """
+    la = _arrays(layout)
+    B, H, M = scores.shape
+    bidx = jnp.arange(B)[:, None, None]
+
+    tbl, tvalid = select_page_table(
+        scores, la, seq_len, sink_pages, local_pages
+    )
+    selected = jnp.zeros((B, la.n_pages), jnp.int32)
+    selected = selected.at[bidx, tbl].add(tvalid.astype(jnp.int32)) > 0
+
+    masked = mask_and_pin_scores(scores, la, seq_len, sink_pages, local_pages)
+    k_wide = min(la.max_top_k + margin_blocks, M)
+    vals, idx = jax.lax.top_k(masked, k_wide)                  # [B, H, k_wide]
+    cutoff = la.top_k[None, :, None] + margin_blocks           # [1, H, 1]
+    ok = (jnp.arange(k_wide)[None, None, :] < cutoff) & (vals > NEG_INF / 2)
+    ppb = la.pages_per_block[None, :, None]                    # [1, H, 1]
+    predicted = jnp.zeros((B, la.n_pages), jnp.int32)
+    for j in range(max_pages_per_block):
+        page = jnp.clip(idx * ppb + j, 0, la.n_pages - 1)
+        hit = ok & (j < ppb)
+        predicted = predicted.at[bidx, page].add(hit.astype(jnp.int32))
+    return selected, (predicted > 0) | selected
+
+
 def pages_to_token_mask(
     page_table: jax.Array,
     page_valid: jax.Array,

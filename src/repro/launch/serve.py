@@ -51,6 +51,13 @@ def main():
                          "(single-device engine)")
     ap.add_argument("--fused-decode", action="store_true",
                     help="single-launch fused decode (pallas backend)")
+    ap.add_argument("--hbm-pages", type=int, default=None,
+                    help="hierarchical KV memory: HBM-resident page budget "
+                         "(cold pages spill to the host tier; requires the "
+                         "sparse decode path)")
+    ap.add_argument("--host-pages", type=int, default=0,
+                    help="host (offload) tier page budget; only with "
+                         "--hbm-pages")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -77,6 +84,8 @@ def main():
         max_context=args.max_context,
         prefill_chunk=args.prefill_chunk,
         prefill_tokens_per_tick=args.prefill_budget,
+        hbm_pages=args.hbm_pages,
+        host_pages=args.host_pages,
     ), mesh=mesh)
     rng = np.random.default_rng(0)
     prefixes = [
@@ -99,7 +108,9 @@ def main():
           f"(backend={plan.backend}, "
           f"sparse_prefill={plan.active and cfg.sparse.sparse_prefill})")
     print(f"metrics: {eng.metrics.format_snapshot()}")
-    eng.pool.assert_consistent()
+    known = eng.prefix_cache.pages() if eng.prefix_cache else set()
+    leaks = eng.pool.assert_consistent(known_pins=known)
+    assert not leaks, f"leaked pages at drain: {leaks}"
     cached = eng.prefix_cache.n_pages if eng.prefix_cache else 0
     assert eng.pool.used_pages == cached, "page leak at drain"
     print(f"pool: {eng.pool.used_pages}/{eng.pool.total_pages} pages held "

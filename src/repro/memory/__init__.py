@@ -1,0 +1,32 @@
+"""Hierarchical KV memory: HBM-hot scoring state, host-offloaded cold pages.
+
+AB-Sparse decode touches only the selected KV blocks, so the full paged KV
+cache does not need to be HBM-resident — only the compact quantized
+centroid segment (``pcodes``/``pscale``/``pzero``) and the page tables do.
+This package tiers full KV pages between an HBM budget and a host
+(pinned-numpy) spill store under an LRU-by-last-selected-step policy:
+
+- :class:`TieredPagePool` — accounting: per-page tier state, budgets,
+  protection (active working sets / prefix pins are never evicted), and
+  the demotion/promotion policy.  Pure host-side; byte movement is
+  delegated to callbacks.
+- :class:`CachePageIO` — the byte mover: jit'd per-page gather / poison /
+  restore over the engine's paged device cache.
+- :class:`PrefetchQueue` — double-buffered staging: promotions submitted
+  at tick ``t`` (misses, plus pages predicted by the margin of the
+  previous selection) apply at the start of tick ``t+1``.
+- :class:`MemoryManager` — glues the above to the serving engine: per-tick
+  protection refresh, miss detection (stall only the owning sequence,
+  re-run its step once the pages land), and prefetch bookkeeping.
+"""
+from repro.memory.page_io import CachePageIO
+from repro.memory.prefetch import PrefetchQueue
+from repro.memory.manager import MemoryManager
+from repro.memory.tiered_pool import (
+    FREE, HBM, HOST, SNAPSHOT, TieredPagePool,
+)
+
+__all__ = [
+    "CachePageIO", "FREE", "HBM", "HOST", "MemoryManager", "PrefetchQueue",
+    "SNAPSHOT", "TieredPagePool",
+]

@@ -1,0 +1,90 @@
+"""Device<->host byte movement for one KV page of the paged decode cache.
+
+The engine's device KV cache is slot-contiguous:
+``entry["k"/"v"]: [n_cycles, batch_slot, n_kv, n_pages, page, head_dim]``
+— physical pool pages are a host-side accounting concept, so tiering is
+made *physically honest* here: demoting a page copies one owner's slot
+rows out to host memory and overwrites every owner's rows with a poison
+sentinel; promoting restores them.  A selection that touches a demoted
+page therefore cannot silently read stale bytes — it reads poison, the
+owning sequence's step is discarded and re-run after the promote (KV
+append and centroid tail refresh are idempotent rewrites, so the re-run
+is byte-identical).
+
+The sentinel is finite (not NaN) so garbage stays confined to the
+stalled sequence's own batch row through the softmax; parity tests
+against an all-HBM pool catch any unpoisoned-read bug either way.
+
+All three ops are jit'd once with traced slot/page scalars — no
+per-page recompilation.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: finite poison: large enough that a read corrupts the output
+#: unmistakably, small enough to stay finite through the QK dot.
+POISON = 1.0e4
+
+
+class CachePageIO:
+    def __init__(self):
+        def _gather(k, v, slot, page):
+            return k[:, slot, :, page], v[:, slot, :, page]
+
+        def _poison(k, v, slot, page):
+            return (
+                k.at[:, slot, :, page].set(POISON),
+                v.at[:, slot, :, page].set(POISON),
+            )
+
+        def _restore(k, v, slot, page, kb, vb):
+            return (
+                k.at[:, slot, :, page].set(kb),
+                v.at[:, slot, :, page].set(vb),
+            )
+
+        self._gather = jax.jit(_gather)
+        self._poison = jax.jit(_poison, donate_argnums=(0, 1))
+        self._restore = jax.jit(_restore, donate_argnums=(0, 1))
+
+    def page_nbytes(self, entry: Dict[str, jax.Array]) -> int:
+        """Bytes moved per page migration (K + V rows across all cycles)."""
+        k = entry["k"]
+        per = k.dtype.itemsize
+        for d in (0, 2, 4, 5):  # nc, n_kv, page, head_dim
+            per *= k.shape[d]
+        return 2 * per
+
+    def gather(
+        self, entry: Dict[str, jax.Array], slot: int, page: int
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        kb, vb = self._gather(
+            entry["k"], entry["v"], jnp.int32(slot), jnp.int32(page)
+        )
+        return np.asarray(kb), np.asarray(vb)
+
+    def poison(
+        self, entry: Dict[str, jax.Array], slot: int, page: int
+    ) -> Dict[str, jax.Array]:
+        k, v = self._poison(
+            entry["k"], entry["v"], jnp.int32(slot), jnp.int32(page)
+        )
+        return dict(entry, k=k, v=v)
+
+    def restore(
+        self,
+        entry: Dict[str, jax.Array],
+        slot: int,
+        page: int,
+        kb: np.ndarray,
+        vb: np.ndarray,
+    ) -> Dict[str, jax.Array]:
+        k, v = self._restore(
+            entry["k"], entry["v"], jnp.int32(slot), jnp.int32(page), kb, vb
+        )
+        return dict(entry, k=k, v=v)

@@ -25,8 +25,10 @@ import jax.numpy as jnp
 
 from repro.backends import AttentionPlan, CentroidStore, build_plan, get_backend
 from repro.config import ModelConfig
+from repro.core.centroids import rank_query
 from repro.core.quantization import store_bits, store_symmetric
 from repro.core.ragged import RaggedLayout
+from repro.core.selection import selected_page_masks
 from repro.core.sparse_attention import dense_decode_attention
 from repro.distributed.sharding import constrain
 from repro.models import layers, moe as moe_mod, rglru, rwkv6
@@ -898,13 +900,19 @@ class Transformer:
         pat = self.plan.pattern
         stk = cache.get("_layouts")
         offsets = cache.get("_offsets")
+        # opt-in selection emission for the tiered KV memory subsystem: the
+        # engine plants "_sel_pages"/"_pre_pages" in the cache, and every
+        # sparse attention layer reports its selected / margin-predicted
+        # page masks (OR-reduced over layers below).
+        collect = stk is not None and "_sel_pages" in cache
 
         def run_layer(p, kind, x, entry, lay, offs):
             h = layers.rms_norm(p["norm1"], x, cfg.norm_eps)
             new_entry = dict(entry)
             if kind == "attn":
                 h, new_entry = self._attn_decode(
-                    p["attn"], h, entry, lay, offs, positions
+                    p["attn"], h, entry, lay, offs, positions,
+                    collect=collect,
                 )
             elif kind == "local_attn":
                 h, new_entry = self._local_attn_decode(
@@ -937,6 +945,9 @@ class Transformer:
                 )
             return x, new_cache
 
+        if collect:
+            sel_acc = jnp.zeros_like(cache["_sel_pages"])
+            pre_acc = jnp.zeros_like(cache["_pre_pages"])
         if self.plan.n_cycles > 0:
             cyc_cache_in = {f"pos{i}": cache[f"pos{i}"] for i in range(len(pat))}
             x, new_cyc = jax.lax.scan(
@@ -944,15 +955,26 @@ class Transformer:
                 x,
                 (params["cycles"], cyc_cache_in, jnp.arange(self.plan.n_cycles)),
             )
-            for i in range(len(pat)):
-                cache[f"pos{i}"] = new_cyc[f"pos{i}"]
+            for i, kind in enumerate(pat):
+                entry = new_cyc[f"pos{i}"]
+                if collect and kind == "attn":
+                    sel_acc |= jnp.any(entry.pop("_selq"), axis=0)
+                    pre_acc |= jnp.any(entry.pop("_preq"), axis=0)
+                cache[f"pos{i}"] = entry
         for i, kind in enumerate(self.plan.rest_kinds):
             lay_idx = self.plan.n_cycles * len(pat) + i
             lay = stk.layer(lay_idx) if (stk is not None and kind == "attn") else None
             offs = offsets[lay_idx] if (offsets is not None and kind == "attn") else None
-            x, cache["rest"][i] = run_layer(
+            x, new_entry = run_layer(
                 params["rest"][i], kind, x, cache["rest"][i], lay, offs
             )
+            if collect and kind == "attn":
+                sel_acc |= new_entry.pop("_selq")
+                pre_acc |= new_entry.pop("_preq")
+            cache["rest"][i] = new_entry
+        if collect:
+            cache["_sel_pages"] = sel_acc
+            cache["_pre_pages"] = pre_acc
 
         x = layers.rms_norm(params["final_norm"], x, cfg.norm_eps)
         logits = self.unembed(params, x[:, 0])
@@ -962,7 +984,7 @@ class Transformer:
 
     # -- decode helpers ---------------------------------------------------
 
-    def _attn_decode(self, p, h, entry, lay, offs, positions):
+    def _attn_decode(self, p, h, entry, lay, offs, positions, collect=False):
         cfg = self.cfg
         B = h.shape[0]
         hd = cfg.resolved_head_dim
@@ -1031,6 +1053,22 @@ class Transformer:
         out, _ = self.backend.decode(
             q, k_cache, v_cache, store, lay, cfg.sparse, seq_len=live
         )
+        if collect:
+            # re-run the (cheap) estimation stage against the post-append
+            # store — identical scores to the ones backend.decode just
+            # selected from, so the emitted mask is exactly the page set
+            # the attention stage gathered, plus the margin prediction.
+            sp = cfg.sparse
+            rq = rank_query(q, sp.centroid_method, q.shape[-1])
+            est = self.backend.scores(rq, store, lay, k_cache.shape[1])
+            sel_mask, pre_mask = selected_page_masks(
+                est, lay, seq_len=live,
+                sink_pages=sp.sink_pages, local_pages=sp.local_pages,
+                margin_blocks=sp.prefetch_margin_blocks,
+                max_pages_per_block=sp.max_block_size // sp.page_size,
+            )
+            new_entry["_selq"] = sel_mask
+            new_entry["_preq"] = pre_mask
         out = constrain(out, "batch", None, "head_dim")
         return layers.out_project(p, out[:, None], cfg), new_entry
 

@@ -37,6 +37,7 @@ import numpy as np
 from repro.config import ModelConfig, ServeConfig
 from repro.cache.paged_kv import PagePool
 from repro.cache.prefix_cache import PrefixCache
+from repro.memory import MemoryManager, TieredPagePool
 from repro.distributed import params as pshard
 from repro.distributed.kernel_partition import serving_rules
 from repro.distributed.sharding import sharding_rules
@@ -117,10 +118,51 @@ class Engine:
         default_pages = self.max_batch * (
             self.max_context // self.serve.page_size
         )
-        self.pool = PagePool(
-            total_pages=serve_cfg.pool_pages or default_pages,
-            page_size=self.serve.page_size,
-        )
+        if serve_cfg.hbm_pages is not None:
+            # hierarchical KV memory: pages migrate between an HBM budget
+            # and a host spill tier (see :mod:`repro.memory`).
+            if serve_cfg.pool_pages is not None:
+                raise ValueError(
+                    "hbm_pages and pool_pages are mutually exclusive: the "
+                    "tiered pool's capacity is hbm_pages + host_pages"
+                )
+            if not self.model.use_sparse(self.max_context):
+                raise ValueError(
+                    "tiered KV memory requires the sparse decode path to be "
+                    f"active at max_context={self.max_context}: dense decode "
+                    "reads every KV row, so host-resident pages would "
+                    "corrupt it"
+                )
+            bad = {"rglru", "rwkv"} & set(self.model.plan.pattern)
+            if bad or model_cfg.moe is not None:
+                raise ValueError(
+                    "tiered KV memory needs idempotent decode steps (a "
+                    "host-tier miss re-runs the owning sequence's step): "
+                    f"recurrent layers {sorted(bad)} / MoE routing carry "
+                    "cross-step or cross-row state and are not supported"
+                )
+            self.pool: PagePool = TieredPagePool(
+                hbm_pages=serve_cfg.hbm_pages,
+                host_pages=serve_cfg.host_pages,
+                page_size=self.serve.page_size,
+            )
+            # admission cap: each decoding sequence shields roughly its
+            # selected pages + tail page + next-token reservation in HBM.
+            # Past hbm_pages // ws concurrent sequences the combined
+            # shields can cover the whole budget, leaving no demotion
+            # victim for anyone — a livelock preemption only breaks after
+            # the fact.  Refuse the admission up front instead.
+            ws_est = (
+                model_cfg.sparse.budget_for(self.max_context)
+                // self.serve.page_size
+                + 2
+            )
+            self.pool.max_live_seqs = max(1, serve_cfg.hbm_pages // ws_est)
+        else:
+            self.pool = PagePool(
+                total_pages=serve_cfg.pool_pages or default_pages,
+                page_size=self.serve.page_size,
+            )
         self.key = jax.random.PRNGKey(seed)
 
         self.cache = self.model.init_cache(self.max_batch, self.max_context)
@@ -188,6 +230,29 @@ class Engine:
         self._tokens_buf = np.zeros((self.max_batch,), np.int32)
         #: authoritative per-slot sequence lengths (tokens with KV in cache).
         self._seq_len = np.zeros((self.max_batch,), np.int32)
+        # sampling keys are derived per (sequence, output position) — not
+        # from a split-per-tick stream — so sampled tokens are invariant to
+        # tick scheduling (stalls, preemption order, batch composition).
+        # This is what makes an overcommitted tiered-memory run
+        # token-identical to an all-HBM run.
+        self._sample = self._under_mesh(jax.jit(self._sample_batch))
+        self.memory: Optional[MemoryManager] = None
+        if isinstance(self.pool, TieredPagePool):
+            nP = self.max_context // self.serve.page_size
+            # plant the opt-in selection-emission keys: every decode step
+            # reports the per-slot selected / margin-predicted page masks.
+            self.cache["_sel_pages"] = jnp.zeros((self.max_batch, nP), bool)
+            self.cache["_pre_pages"] = jnp.zeros((self.max_batch, nP), bool)
+            self.memory = MemoryManager(self, self.pool)
+
+    def _sample_batch(self, base_key, seq_ids, positions, logits):
+        t, k, p = self.serve.temperature, self.serve.top_k, self.serve.top_p
+
+        def one(sid, pos, lg):
+            kk = jax.random.fold_in(jax.random.fold_in(base_key, sid), pos)
+            return sample(kk, lg[None], t, k, p)[0]
+
+        return jax.vmap(one)(seq_ids, positions, logits)
 
     def _shard_ctx(self):
         if self.mesh is None:
@@ -355,12 +420,13 @@ class Engine:
             tok = seq.resume_token          # resumed: replay, don't re-sample
             seq.resume_token = None
         else:
-            self.key, k = jax.random.split(self.key)
-            first = sample(
-                k, logits, self.serve.temperature,
-                self.serve.top_k, self.serve.top_p,
+            first = self._sample(
+                self.key,
+                np.asarray([seq.seq_id], np.int32),
+                np.asarray([len(seq.req.output)], np.int32),
+                logits,
             )
-            tok = int(first[0])
+            tok = int(np.asarray(first)[0])
             seq.req.output.append(tok)
             self.metrics.on_first_token(seq.seq_id)
             self.metrics.on_decode_token(seq.seq_id)
@@ -407,6 +473,8 @@ class Engine:
         return len(out) >= seq.req.max_new_tokens or bool(hit_eos)
 
     def _retire(self, seq: SeqState):
+        if self.memory is not None:
+            self.memory.forget(seq.seq_id)
         self.scheduler.retire(seq)
         self.slots[seq.slot] = None
         self._seq_len[seq.slot] = 0
@@ -420,19 +488,42 @@ class Engine:
         ]
         if not active:
             return
+        mem = self.memory
+        if mem is not None:
+            # {logical: physical} pages whose bytes sit in the host tier at
+            # step launch; a selection overlapping them read poison and the
+            # sequence must stall and re-run.
+            host_before = {
+                s.seq_id: mem.pool.host_resident_logical(s.seq_id)
+                for s in active
+            }
         self.cache = dict(self.cache)
         self.cache["seq_len"] = jnp.asarray(self._seq_len)
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(self._tokens_buf)
         )
-        self.key, k = jax.random.split(self.key)
-        next_tokens = sample(
-            k, logits, self.serve.temperature,
-            self.serve.top_k, self.serve.top_p,
-        )
-        nt = np.asarray(next_tokens)
+        sids = np.zeros((self.max_batch,), np.int32)
+        poss = np.zeros((self.max_batch,), np.int32)
+        for s in active:
+            sids[s.slot] = s.seq_id
+            poss[s.slot] = len(s.req.output)
+        nt = np.asarray(self._sample(self.key, sids, poss, logits))
+        if mem is not None:
+            sel = np.asarray(self.cache["_sel_pages"])
+            pre = np.asarray(self.cache["_pre_pages"])
         for seq in active:
             slot = seq.slot
+            if mem is not None and not mem.on_step(
+                seq,
+                np.nonzero(sel[slot])[0],
+                np.nonzero(pre[slot])[0],
+                host_before[seq.seq_id],
+            ):
+                # host-tier miss: discard the sampled token, don't advance —
+                # next tick re-runs this slot's step byte-identically once
+                # the missing pages are promoted.  Only this sequence
+                # stalls; the rest of the batch commits below.
+                continue
             tok = int(nt[slot])
             seq.req.output.append(tok)
             self._tokens_buf[slot] = tok
@@ -441,13 +532,37 @@ class Engine:
             if self._is_finished(seq):
                 self._retire(seq)
         # host lengths are authoritative (the batched step incremented
-        # every slot, including ones still prefilling).
+        # every slot, including ones still prefilling or stalled).
         self.cache = dict(self.cache)
         self.cache["seq_len"] = jnp.asarray(self._seq_len)
 
     def step(self) -> int:
         """One engine tick: admit, prefill chunks, decode, retire.
         Returns the number of occupied slots."""
+        if self.memory is not None:
+            # apply staged host->HBM promotions (stall targets first, then
+            # predictions into free headroom) and rebuild the demotion
+            # shield before anything allocates or reads the cache.
+            self.memory.begin_tick()
+            # liveness breaker: a stalled sequence whose miss-promotes
+            # have failed for consecutive ticks is starved — the other
+            # sequences' working-set shields cover the whole HBM budget.
+            # prepare_decode can't help (stalled seqs hold their
+            # reservation and are excluded from it), so preempt the
+            # latest-arrival starved sequence directly; its freed pages
+            # restore room for everyone else.
+            starved = [
+                self.scheduler.running[sid]
+                for sid in self.memory.starved_seqs()
+                if sid in self.scheduler.running
+            ]
+            if starved:
+                victim = max(starved, key=lambda s: s.arrival)
+                self.scheduler.preempt(victim)
+                self.memory.forget(victim.seq_id)
+                self.slots[victim.slot] = None
+                self._seq_len[victim.slot] = 0
+                victim.slot = -1
         free = [i for i, s in enumerate(self.slots) if s is None]
         plan = self.scheduler.plan_tick(free)
         for adm in plan.admitted:
@@ -457,11 +572,21 @@ class Engine:
         decoding = [
             s for s in self.slots if s is not None and s.state == DECODE
         ]
+        if self.memory is not None:
+            # a stalled sequence already holds its next-token reservation
+            # from the tick it missed on; reserving again would leak span.
+            decoding = [
+                s for s in decoding if s.seq_id not in self.memory.stalled
+            ]
         for seq in self.scheduler.prepare_decode(decoding):
+            if self.memory is not None:
+                self.memory.forget(seq.seq_id)
             self.slots[seq.slot] = None
             self._seq_len[seq.slot] = 0
             seq.slot = -1
         self._decode_tick()
+        if self.memory is not None:
+            self.memory.end_tick()
         self.metrics.ticks += 1
         return len([s for s in self.slots if s is not None])
 

@@ -26,6 +26,10 @@ class RequestMetrics:
     #: (accumulated across re-admissions after preemption).
     prefix_hit_tokens: int = 0
     preemptions: int = 0
+    #: host-tier misses: ticks spent stalled waiting for page promotion
+    #: (tiered KV memory only; see :mod:`repro.memory`).
+    stalls: int = 0
+    stall_time: float = 0.0
     t_submit: Optional[float] = None
     t_admit: Optional[float] = None          # first admission
     t_first_token: Optional[float] = None
@@ -72,6 +76,18 @@ class ServingMetrics:
         self.prefix_hit_tokens = 0
         self.decode_tokens = 0
         self.preemptions = 0
+        # -- memory tiering (populated only when the engine runs a
+        # TieredPagePool; ``tiering`` gates the snapshot fields) --
+        self.tiering = False
+        self.hbm_resident_pages = 0
+        self.host_resident_pages = 0
+        self.prefetch_hits = 0
+        self.prefetch_misses = 0
+        self.prefetch_staged = 0
+        self.migrations = 0
+        self.migration_bytes = 0
+        self.stalls = 0
+        self._stall_start: Dict[int, float] = {}
 
     def _req(self, req_id: int) -> RequestMetrics:
         return self.requests.setdefault(req_id, RequestMetrics(req_id))
@@ -114,6 +130,37 @@ class ServingMetrics:
         if r.t_finish is None:
             r.t_finish = self.clock()
 
+    # -- memory tiering events -----------------------------------------------
+
+    def set_residency(self, hbm_pages: int, host_pages: int):
+        self.tiering = True
+        self.hbm_resident_pages = hbm_pages
+        self.host_resident_pages = host_pages
+
+    def on_prefetch_hit(self, n: int = 1):
+        self.prefetch_hits += n
+
+    def on_prefetch_miss(self, n: int = 1):
+        self.prefetch_misses += n
+
+    def on_prefetch_staged(self, n: int = 1):
+        self.prefetch_staged += n
+
+    def on_migration(self, nbytes: int, demote: bool):
+        self.migrations += 1
+        self.migration_bytes += nbytes
+
+    def on_stall_begin(self, req_id: int):
+        r = self._req(req_id)
+        r.stalls += 1
+        self.stalls += 1
+        self._stall_start.setdefault(req_id, self.clock())
+
+    def on_stall_end(self, req_id: int):
+        t0 = self._stall_start.pop(req_id, None)
+        if t0 is not None:
+            self._req(req_id).stall_time += self.clock() - t0
+
     # -- aggregation ---------------------------------------------------------
 
     def snapshot(self) -> Dict[str, float]:
@@ -146,6 +193,26 @@ class ServingMetrics:
             snap["tpot_p95"] = _pct(tpots, 0.95)
         if queues:
             snap["queue_time_mean"] = sum(queues) / len(queues)
+        if self.tiering:
+            lookups = self.prefetch_hits + self.prefetch_misses
+            stall_times = [r.stall_time for r in done]
+            snap["hbm_resident_pages"] = self.hbm_resident_pages
+            snap["host_resident_pages"] = self.host_resident_pages
+            snap["prefetch_hits"] = self.prefetch_hits
+            snap["prefetch_misses"] = self.prefetch_misses
+            snap["prefetch_staged"] = self.prefetch_staged
+            snap["prefetch_hit_rate"] = (
+                self.prefetch_hits / lookups if lookups else 0.0
+            )
+            snap["migrations"] = self.migrations
+            snap["migration_bytes"] = self.migration_bytes
+            snap["stalls"] = self.stalls
+            snap["stall_time_total"] = sum(
+                r.stall_time for r in self.requests.values()
+            )
+            if stall_times:
+                snap["stall_time_mean"] = sum(stall_times) / len(stall_times)
+                snap["stall_time_max"] = max(stall_times)
         return snap
 
     def format_snapshot(self) -> str:
@@ -168,4 +235,15 @@ class ServingMetrics:
             parts.append(f"tpot={snap['tpot_mean'] * 1e3:.1f}ms")
         if "queue_time_mean" in snap:
             parts.append(f"queue={snap['queue_time_mean'] * 1e3:.0f}ms")
+        if self.tiering:
+            parts.append(
+                f"mem hbm/host={snap['hbm_resident_pages']:.0f}/"
+                f"{snap['host_resident_pages']:.0f}pg "
+                f"prefetch hit/miss={snap['prefetch_hits']:.0f}/"
+                f"{snap['prefetch_misses']:.0f} "
+                f"({100 * snap['prefetch_hit_rate']:.1f}%) "
+                f"migrated={snap['migration_bytes'] / 2**20:.1f}MiB "
+                f"stalls={snap['stalls']:.0f} "
+                f"({snap['stall_time_total'] * 1e3:.0f}ms)"
+            )
         return "  ".join(parts)

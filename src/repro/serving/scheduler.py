@@ -198,7 +198,14 @@ class Scheduler:
                 )
                 if not ok:
                     break  # FCFS head-of-line admission control
-            self.pool.fork(seq.seq_id, pages, len(tokens))
+            try:
+                self.pool.fork(seq.seq_id, pages, len(tokens))
+            except PoolExhausted:
+                # tiered pools can refuse beyond the free-page check: the
+                # HBM budget may be fully covered by protected working sets
+                # or the host spill tier may be full.  Head-of-line block;
+                # decode progress (or retirement) frees tier room.
+                break
             self.waiting.pop(0)
             seq.state = PREFILL
             seq.slot = free_slots.pop(0)
@@ -267,9 +274,15 @@ class Scheduler:
                 try:
                     self.pool.extend(seq.seq_id, 1)
                     break
-                except PoolExhausted:
-                    if self.prefix_cache is not None and (
-                        self.prefix_cache.evict_for(1)
+                except PoolExhausted as exc:
+                    # tier-bound exhaustion (tiered pool: HBM shield or
+                    # host tier full) cannot be fixed by unpinning cached
+                    # pages — ``evict_for`` would report success off the
+                    # free-page count without freeing any tier room and
+                    # this loop would spin; go straight to preemption.
+                    if not getattr(exc, "tier_bound", False) and (
+                        self.prefix_cache is not None
+                        and self.prefix_cache.evict_for(1)
                     ):
                         continue
                     victim = max(
@@ -280,6 +293,14 @@ class Scheduler:
                     if victim is seq:
                         break
         return preempted
+
+    def preempt(self, seq: SeqState):
+        """Forced preemption — the tiered-memory liveness breaker.  The
+        engine calls this for a sequence whose host-tier miss could not be
+        promoted for consecutive ticks because every resident HBM page is
+        shielded by other sequences' working sets; freeing its table is
+        the only way to restore progress."""
+        self._preempt(seq)
 
     def _preempt(self, seq: SeqState):
         self.pool.free(seq.seq_id)

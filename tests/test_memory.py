@@ -1,0 +1,356 @@
+"""Hierarchical KV memory subsystem: tiered pool invariants + end-to-end
+overcommit parity (src/repro/memory/)."""
+import jax
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - fallback: deterministic examples
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.cache.paged_kv import PagePool, PoolExhausted
+from repro.memory import FREE, HBM, HOST, SNAPSHOT, TieredPagePool
+
+
+# -- flat-pool audit extensions (assert_consistent leak candidates) ----------
+
+
+def test_assert_consistent_reports_leak_candidates():
+    pool = PagePool(8)
+    t = pool.allocate(1, 32)                    # 2 pages
+    p0 = t.physical[0]
+    pool.cache_ref(p0)
+    pool.free(1)                                # p0 survives as a pin
+    assert pool.assert_consistent(known_pins=[p0]) == []
+    # a pin no live cache node accounts for is a leak candidate
+    assert pool.assert_consistent(known_pins=[]) == [p0]
+
+
+def test_assert_consistent_rejects_phantom_known_pin():
+    pool = PagePool(4)
+    pool.allocate(1, 16)
+    with pytest.raises(AssertionError):
+        pool.assert_consistent(known_pins=[3])  # claimed pin isn't pinned
+
+
+def test_peak_used_pages_tracks_high_water_mark():
+    pool = PagePool(16)
+    pool.allocate(1, 16 * 10)
+    pool.free(1)
+    pool.allocate(2, 16 * 3)
+    assert pool.used_pages == 3
+    assert pool.peak_used_pages == 10
+
+
+# -- tiered pool: pure accounting (no callbacks) -----------------------------
+
+
+def test_tiered_take_demotes_coldest_unprotected():
+    pool = TieredPagePool(hbm_pages=4, host_pages=4, page_size=16)
+    t1 = pool.allocate(1, 16 * 4)               # fills HBM
+    pool.set_protected([])                      # clear auto-protection
+    pool.tick()
+    pool.touch(t1.physical[2:])                 # pages 0,1 are coldest
+    demoted = []
+    pool.set_callbacks(
+        lambda p, own: demoted.append(p), lambda *a: None, lambda p: None
+    )
+    pool.allocate(2, 16 * 2)
+    assert sorted(demoted) == sorted(t1.physical[:2])
+    assert all(pool.tier_of(p) == HOST for p in demoted)
+    assert pool.hbm_used == 4 and pool.host_used == 2
+    assert pool.assert_consistent() == []
+
+
+def test_protected_pages_block_demotion():
+    pool = TieredPagePool(hbm_pages=2, host_pages=4)
+    t = pool.allocate(1, 16 * 2)
+    pool.set_protected(t.physical)              # whole budget shielded
+    with pytest.raises(PoolExhausted):
+        pool.allocate(2, 16)
+    pool.set_protected([])
+    pool.allocate(2, 16)                        # now a victim exists
+    assert pool.demotions == 1
+    assert pool.assert_consistent() == []
+
+
+def test_host_tier_capacity_bounds_demotion():
+    pool = TieredPagePool(hbm_pages=2, host_pages=1)
+    pool.allocate(1, 16 * 2)
+    pool.set_protected([])
+    pool.allocate(2, 16)                        # demotes one page
+    assert pool.host_used == 1
+    with pytest.raises(PoolExhausted):          # host tier is full
+        pool.allocate(3, 16)
+    assert pool.assert_consistent() == []
+
+
+def test_pin_only_page_becomes_snapshot_and_forks_back():
+    pool = TieredPagePool(hbm_pages=2, host_pages=2)
+    t = pool.allocate(1, 16 * 2)
+    pages = list(t.physical)       # free() clears the table in place
+    for p in pages:
+        pool.cache_ref(p)
+    pool.free(1)
+    # pin-only pages live in the radix snapshot: charged to neither budget
+    assert all(pool.tier_of(p) == SNAPSHOT for p in pages)
+    assert pool.hbm_used == 0 and pool.host_used == 0
+    t2 = pool.fork(2, pages, 16 * 2)
+    assert all(pool.tier_of(p) == HBM for p in t2.physical)
+    assert pool.promotions == 2
+    assert pool.assert_consistent() == []
+
+
+def test_pinned_pages_stay_demotable():
+    """A prefix-cache pin guarantees reusability, not HBM residency —
+    demotion eligibility must ignore pins or admission serialises."""
+    pool = TieredPagePool(hbm_pages=2, host_pages=2)
+    t = pool.allocate(1, 16 * 2)
+    for p in t.physical:
+        pool.cache_ref(p)                       # pinned AND live-owned
+    pool.set_protected([])
+    pool.allocate(2, 16)                        # must demote a pinned page
+    assert pool.demotions == 1
+    assert pool.assert_consistent() == []
+
+
+def test_cow_on_demoted_page_promotes_first():
+    pool = TieredPagePool(hbm_pages=2, host_pages=2)
+    t1 = pool.allocate(1, 16)
+    pool.fork(2, list(t1.physical), 16)         # shared rc=2
+    pool.set_protected([])
+    pool.allocate(3, 16 * 2)                    # demotes the shared page
+    pool.set_protected([])                      # next tick's shield refresh
+    shared = t1.physical[0]
+    assert pool.tier_of(shared) == HOST
+    promoted = []
+    pool.set_callbacks(
+        lambda p, own: None,
+        lambda p, own, fr: promoted.append((p, fr)),
+        lambda p: None,
+    )
+    old, new = pool.ensure_owned(2, 0)
+    # the COW copy reads device rows -> the source must be re-validated
+    assert old == shared and new != old
+    assert (shared, HOST) in promoted
+    assert pool.assert_consistent() == []
+
+
+def test_prefetch_promote_never_demotes():
+    pool = TieredPagePool(hbm_pages=2, host_pages=2)
+    t = pool.allocate(1, 16 * 2)
+    pool.set_protected([t.physical[1]])
+    pool.allocate(2, 16)                        # demotes page 0
+    cold = t.physical[0]
+    assert pool.tier_of(cold) == HOST
+    assert not pool.prefetch_promote(cold)      # no free headroom: refused
+    pool.free(2)
+    assert pool.prefetch_promote(cold)          # headroom: promoted
+    assert pool.tier_of(cold) == HBM
+    assert pool.assert_consistent() == []
+
+
+# -- property test: interleaved lifecycle under overcommit -------------------
+
+HBM_BUDGET, HOST_BUDGET = 8, 24
+
+
+@settings(max_examples=25, deadline=None)
+@given(ops=st.lists(
+    st.tuples(st.integers(0, 5), st.integers(0, 5), st.integers(1, 96)),
+    min_size=1, max_size=60,
+))
+def test_tiered_invariants_under_random_workload(ops):
+    """Interleavings of allocate/fork/extend/COW/free/pin/protect/touch
+    with HBM overcommitted: no page is ever lost, no protected (active)
+    page is ever demoted, and the full tier audit stays clean."""
+    pool = TieredPagePool(HBM_BUDGET, HOST_BUDGET, page_size=16)
+    demoted_protected = []
+    pool.set_callbacks(
+        lambda p, own: demoted_protected.append(p)
+        if pool.is_protected(p) else None,
+        lambda *a: None,
+        lambda p: None,
+    )
+    live, pinned = {}, []
+    for kind, sid_base, tokens in ops:
+        sid = 100 + sid_base
+        pool.tick()
+        try:
+            if kind == 0:                       # allocate or retire
+                if sid in live:
+                    pool.free(sid)
+                    del live[sid]
+                else:
+                    live[sid] = pool.allocate(sid, tokens)
+            elif kind == 1 and sid in live:     # decode extend
+                live[sid] = pool.extend(sid, tokens)
+            elif kind == 2 and sid in live:     # prefix-cache pin + retire
+                for p in live[sid].physical:
+                    if not pool.is_cache_pinned(p):  # one pin per page
+                        pool.cache_ref(p)
+                        pinned.append(p)
+                pool.free(sid)
+                del live[sid]
+            elif kind == 3 and pinned:          # fork from pinned prefix
+                if sid not in live:
+                    share = list(dict.fromkeys(pinned))[: tokens // 16 or 1]
+                    live[sid] = pool.fork(
+                        sid, share, max(tokens, len(share) * 16)
+                    )
+            elif kind == 4 and sid in live:     # COW write
+                pool.ensure_owned(
+                    sid, tokens % live[sid].n_pages
+                )
+                live[sid] = pool.table(sid)
+            elif kind == 5 and sid in live:     # working-set refresh + LRU
+                pool.set_protected(live[sid].physical[:HBM_BUDGET // 2])
+                pool.touch(live[sid].physical)
+        except PoolExhausted:
+            pass
+        # active pages are never poisoned out from under a reader
+        assert demoted_protected == []
+        # conservation: every live table's page is in a byte-holding tier
+        for t in live.values():
+            for p in t.physical:
+                assert pool.tier_of(p) in (HBM, HOST)
+        pool.assert_consistent()
+    for sid in list(live):
+        pool.free(sid)
+    for p in pinned:
+        pool.cache_unref(p)
+    assert pool.used_pages == 0
+    assert pool.hbm_used == 0 and pool.host_used == 0
+    assert all(t == FREE for t in pool._tier)
+
+
+# -- end-to-end: serving under overcommit ------------------------------------
+
+
+@pytest.fixture(scope="module")
+def setup():
+    from repro.configs import get_config, smoke_variant
+    from repro.models import Transformer
+
+    cfg = smoke_variant(get_config("llama3.2-3b"))
+    model = Transformer(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _serve(cfg, params, serve_cfg, n_requests=3, prompt_tokens=300,
+           new_tokens=24):
+    from repro.serving import Engine, Request
+
+    eng = Engine(cfg, params, serve_cfg)
+    rng = np.random.default_rng(7)
+    reqs = [
+        Request(i, rng.integers(0, cfg.vocab_size, prompt_tokens)
+                .astype(np.int32), max_new_tokens=new_tokens)
+        for i in range(n_requests)
+    ]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done(max_ticks=500)
+    return eng, [list(r.output) for r in reqs]
+
+
+def test_overcommit_token_identical_to_all_hbm(setup):
+    """Working set >= 2x the HBM budget: outputs must match the flat
+    all-HBM pool exactly, with real migration traffic and no leaks."""
+    from repro.config import ServeConfig
+
+    cfg, params = setup
+    common = dict(max_batch=4, max_context=512, prefill_tokens_per_tick=512)
+    # 3 x 300-token prompts = 57 live pages >= 2x the 28-page HBM budget
+    eng_t, outs_t = _serve(cfg, params, ServeConfig(
+        hbm_pages=28, host_pages=68, **common,
+    ))
+    eng_b, outs_b = _serve(cfg, params, ServeConfig(
+        pool_pages=96, **common,
+    ))
+    assert outs_t == outs_b
+    assert all(len(o) == 24 for o in outs_t)
+    assert eng_t.pool.demotions > 0, "overcommit must exercise migration"
+    for eng in (eng_t, eng_b):
+        leaks = eng.pool.assert_consistent(
+            known_pins=eng.prefix_cache.pages()
+        )
+        assert leaks == []
+        assert eng.pool.used_pages == eng.prefix_cache.n_pages
+    snap = eng_t.metrics.snapshot()
+    assert snap["hbm_resident_pages"] <= 28
+    assert snap["migration_bytes"] > 0
+
+
+def test_forced_miss_stalls_then_recovers(setup):
+    """Demoting a page the next selection needs (bypassing protection)
+    must stall only that sequence, promote the page back, and still
+    produce baseline-identical output."""
+    from repro.config import ServeConfig
+    from repro.serving import Engine, Request
+    from repro.serving.scheduler import DECODE
+
+    cfg, params = setup
+    common = dict(max_batch=2, max_context=512)
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab_size, 200).astype(np.int32)
+
+    eng_b = Engine(cfg, params, ServeConfig(pool_pages=64, **common))
+    req_b = Request(0, prompt.copy(), max_new_tokens=8)
+    eng_b.submit(req_b)
+    eng_b.run_until_done(max_ticks=200)
+
+    eng = Engine(cfg, params, ServeConfig(
+        hbm_pages=32, host_pages=32, **common,
+    ))
+    req = Request(0, prompt.copy(), max_new_tokens=8)
+    eng.submit(req)
+    forced = False
+    for _ in range(200):
+        if req.done:
+            break
+        seq = eng.scheduler.running.get(0)
+        if not forced and seq is not None and seq.state == DECODE and (
+            len(req.output) >= 2
+        ):
+            # the sink page (logical 0) is pinned into every selection —
+            # demoting it guarantees a miss on the next decode step.
+            sink = eng.pool.table(0).physical[0]
+            if eng.pool.tier_of(sink) == HBM:
+                eng.pool._protected.discard(sink)
+                eng.pool._auto_protected.discard(sink)
+                eng.pool._demote(sink)
+                forced = True
+        eng.step()
+    assert forced and req.done
+    assert eng.metrics.stalls >= 1
+    assert eng.metrics.snapshot()["prefetch_misses"] >= 1
+    assert list(req.output) == list(req_b.output)
+    assert eng.pool.assert_consistent(
+        known_pins=eng.prefix_cache.pages()
+    ) == []
+
+
+def test_tiered_requires_sparse_decode(setup):
+    from repro.config import ServeConfig
+    from repro.serving import Engine
+
+    cfg, params = setup
+    with pytest.raises(ValueError, match="sparse"):
+        # max_context below the sparse activation threshold
+        Engine(cfg, params, ServeConfig(
+            max_batch=2, max_context=64, hbm_pages=8, host_pages=8,
+        ))
+
+
+def test_tiered_rejects_pool_pages_conflict(setup):
+    from repro.config import ServeConfig
+    from repro.serving import Engine
+
+    cfg, params = setup
+    with pytest.raises(ValueError, match="pool_pages"):
+        Engine(cfg, params, ServeConfig(
+            max_batch=2, max_context=512,
+            pool_pages=64, hbm_pages=32, host_pages=32,
+        ))
