@@ -2,8 +2,9 @@
 
 Reads the benchmark artifacts written by ``benchmarks/decode_latency.py``
 (``BENCH_decode.json``), ``benchmarks/prefill_latency.py``
-(``BENCH_prefill.json``) and ``benchmarks/memory_bench.py``
-(``BENCH_memory.json``) and checks them against the floors below.
+(``BENCH_prefill.json``), ``benchmarks/memory_bench.py``
+(``BENCH_memory.json``) and ``benchmarks/serving_bench.py``
+(``BENCH_serving.json``) and checks them against the floors below.
 
 Floors are deliberately conservative: interpret-mode wall clock on shared
 CI runners is noisy, so the timing floors sit far under the measured
@@ -47,6 +48,12 @@ FLOORS = {
     # prefetcher must stage most of them ahead of time (1.0 when no
     # demand lookup happened at all — nothing drifted, nothing missed).
     "memory.prefetch_hit_rate_min": 0.5,
+    # observability must stay near-free: traced serving throughput (trace
+    # recorder + device-side sparsity telemetry + per-step counter
+    # queueing) within 5% of untraced on the same engine.  The estimator
+    # is noise-hardened (per-tick floors over interleaved reps, one
+    # engine for both modes); measured ~1-2.5%.
+    "serving.trace_overhead_max": 0.05,
 }
 
 
@@ -62,11 +69,13 @@ def main() -> None:
     ap.add_argument("--decode", default=str(ROOT / "BENCH_decode.json"))
     ap.add_argument("--prefill", default=str(ROOT / "BENCH_prefill.json"))
     ap.add_argument("--memory", default=str(ROOT / "BENCH_memory.json"))
+    ap.add_argument("--serving", default=str(ROOT / "BENCH_serving.json"))
     args = ap.parse_args()
 
     decode = _load(pathlib.Path(args.decode))
     prefill = _load(pathlib.Path(args.prefill))
     memory = _load(pathlib.Path(args.memory))
+    serving = _load(pathlib.Path(args.serving))
 
     checks = [
         (
@@ -103,6 +112,11 @@ def main() -> None:
             "memory.prefetch_hit_rate",
             memory.get("prefetch_hit_rate", 0.0),
             ">=", FLOORS["memory.prefetch_hit_rate_min"],
+        ),
+        (
+            "serving.trace_overhead",
+            serving.get("trace_overhead_frac", 1.0),
+            "<=", FLOORS["serving.trace_overhead_max"],
         ),
     ]
     failed = []

@@ -184,7 +184,14 @@ def run(
 
 
 if __name__ == "__main__":
-    result = run()
+    from provenance import provenance
+
+    config = dict(
+        n_requests=6, prompt_tokens=192, new_tokens=24, max_batch=6,
+        max_context=512, hbm_pages=30, host_overcommit=3, seed=0,
+    )
+    result = run(**config)
+    result["provenance"] = provenance(config)
     path = ROOT / "BENCH_memory.json"
     with open(path, "w") as f:
         json.dump(result, f, indent=2)

@@ -1,0 +1,47 @@
+"""Provenance stamping for committed BENCH artifacts.
+
+Every BENCH JSON embeds the full config dict that produced it plus the
+git SHA of the working tree, so a committed number can always be traced
+back to the exact knobs and revision — re-running with different knobs
+silently overwriting a floor artifact was how bench drift used to sneak
+in.
+"""
+from __future__ import annotations
+
+import pathlib
+import subprocess
+from typing import Any, Dict
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def git_sha() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=ROOT, capture_output=True, text=True, timeout=10,
+        )
+        sha = out.stdout.strip()
+        if out.returncode == 0 and sha:
+            dirty = subprocess.run(
+                ["git", "status", "--porcelain"],
+                cwd=ROOT, capture_output=True, text=True, timeout=10,
+            )
+            if dirty.returncode == 0 and dirty.stdout.strip():
+                sha += "-dirty"
+            return sha
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return "unknown"
+
+
+def provenance(config: Dict[str, Any]) -> Dict[str, Any]:
+    """-> ``{"config": ..., "git_sha": ..., "jax": ...}`` block to embed
+    under a BENCH file's ``"provenance"`` key."""
+    import jax
+
+    return {
+        "config": dict(config),
+        "git_sha": git_sha(),
+        "jax": jax.__version__,
+    }

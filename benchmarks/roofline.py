@@ -229,6 +229,25 @@ def full_table(results_dir="results/dryrun"):
     return rows
 
 
+def kernel_cost_table(contexts=(4096, 32768, 262144), chunk_tokens=512):
+    """Per-launch AB-Sparse kernel cost rows (``repro.obs.cost``): FLOPs,
+    HBM bytes and the vs-dense ratios for the decode and prefill kernels
+    at representative context lengths — the roofline view of what the
+    sparsity is actually buying per launch."""
+    from repro.configs import ASSIGNED_ARCHS
+    from repro.obs.cost import decode_kernel_cost, prefill_kernel_cost
+
+    rows = []
+    for arch in ASSIGNED_ARCHS:
+        cfg = _cfg(arch)
+        if not cfg.sparse.enabled or cfg.is_attention_free:
+            continue
+        for ctx in contexts:
+            rows.append((arch, decode_kernel_cost(cfg, ctx)))
+            rows.append((arch, prefill_kernel_cost(cfg, ctx, chunk_tokens)))
+    return rows
+
+
 def main():
     rows = full_table()
     print(
@@ -241,6 +260,17 @@ def main():
             f"{r.collective_s:.3e},{r.dominant},{r.model_flops:.3e},"
             f"{r.hlo_flops:.3e},{r.usefulness:.3f},{r.bound_s:.3e},"
             f"{r.fraction:.3f},{r.fraction_kind}"
+        )
+    print()
+    print(
+        "kernel,arch,context,flops,hbm_bytes,flops_vs_dense,"
+        "bytes_vs_dense,realized_sparsity_frac"
+    )
+    for arch, c in kernel_cost_table():
+        print(
+            f"{c['kind']},{arch},{int(c['context_len'])},{c['flops']:.3e},"
+            f"{c['hbm_bytes']:.3e},{c['flops_vs_dense']:.3f},"
+            f"{c['bytes_vs_dense']:.3f},{c['realized_sparsity_frac']:.3f}"
         )
 
 

@@ -49,7 +49,11 @@ from repro.core.quantization import (
     unpack_split_half,
 )
 from repro.core.ragged import RaggedLayout, layout_for
-from repro.core.selection import select_page_table
+from repro.core.selection import (
+    rank_blocks,
+    select_page_table,
+    selection_telemetry,
+)
 from repro.core.stacked import LayoutArrays, as_arrays, stack_layouts
 
 
@@ -481,26 +485,45 @@ class AttentionBackend:
         layout,
         sparse: SparseConfig,
         seq_len: Optional[jax.Array] = None,
-    ) -> Tuple[jax.Array, Optional[jax.Array]]:
+        collect_tel: bool = False,
+    ) -> Tuple[jax.Array, ...]:
         """Full AB-Sparse decode step: estimation -> adaptive top-k ->
         paged attention.  q [B, n_q, D]; k/v paged
         ``[B, n_kv, n_pages, page, D]`` (the cache's native layout) or
         dense ``[B, n_kv, S, D]`` ->
-        (out [B, n_q, D], page_table [B, H, P_sel])."""
+        (out [B, n_q, D], page_table [B, H, P_sel]).
+
+        With ``collect_tel=True`` the return gains a third element: per-slot
+        sparsity counters ``[B, 4]`` (:func:`selection_telemetry`) derived
+        from the SAME estimation scores the selection just ranked — no
+        second pass over the store, so telemetry costs only a top-k over the
+        (small) block-score tensor."""
         la = as_arrays(layout)
         n_kv = k.shape[1]
         rq = rank_query(q, sparse.centroid_method, q.shape[-1])
         scores = self.scores(rq, store, la, n_kv)
+        ranked = rank_blocks(
+            scores, la, seq_len, sparse.sink_pages, sparse.local_pages
+        )
         page_table, page_valid = select_page_table(
             scores,
             la,
             seq_len=seq_len,
             sink_pages=sparse.sink_pages,
             local_pages=sparse.local_pages,
+            ranked=ranked,
         )
         out = self.attend(
             q, k, v, page_table, page_valid, la.page_size, seq_len
         )
+        if collect_tel:
+            tel = selection_telemetry(
+                scores, la, seq_len=seq_len,
+                sink_pages=sparse.sink_pages,
+                local_pages=sparse.local_pages,
+                ranked=ranked,
+            )
+            return out, page_table, tel
         return out, page_table
 
 

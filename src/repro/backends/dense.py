@@ -25,9 +25,11 @@ class DenseBackend(ReferenceBackend):
         return store
 
     def decode(
-        self, q, k, v, store, layout, sparse, seq_len=None
-    ) -> Tuple[jax.Array, Optional[jax.Array]]:
+        self, q, k, v, store, layout, sparse, seq_len=None, collect_tel=False
+    ) -> Tuple[jax.Array, ...]:
         out = dense_decode_attention(q, as_dense(k), as_dense(v), seq_len=seq_len)
+        if collect_tel:           # no selection on the dense path
+            return out, None, None
         return out, None
 
     def prefill_attention(

@@ -25,6 +25,7 @@ import numpy as np
 from repro.backends.base import AttentionBackend, CentroidStore
 from repro.core.centroids import rank_query
 from repro.core.ragged import RaggedLayout
+from repro.core.selection import selection_telemetry
 
 
 class PallasBackend(AttentionBackend):
@@ -63,17 +64,21 @@ class PallasBackend(AttentionBackend):
     def scores(self, rank_q, store: CentroidStore, layout, n_kv):
         from repro.kernels import ops
 
-        return ops.centroid_scores(
-            rank_q, store, layout, n_kv, interpret=self._interp()
-        )
+        # named_scope tags the ragged launches so jax.profiler / Perfetto
+        # device traces attribute kernel time to the AB-Sparse stages.
+        with jax.named_scope("absparse.estimation"):
+            return ops.centroid_scores(
+                rank_q, store, layout, n_kv, interpret=self._interp()
+            )
 
     def attend(self, q, k, v, page_table, page_valid, page_size, seq_len=None):
         from repro.kernels import ops
 
-        return ops.paged_attention(
-            q, k, v, page_table, page_valid, page_size, seq_len,
-            interpret=self._interp(),
-        )
+        with jax.named_scope("absparse.paged_attention"):
+            return ops.paged_attention(
+                q, k, v, page_table, page_valid, page_size, seq_len,
+                interpret=self._interp(),
+            )
 
     def prefill_attention(
         self, q, k, v, score_store, layout, sparse,
@@ -88,38 +93,54 @@ class PallasBackend(AttentionBackend):
         from repro.distributed import kernel_partition
 
         rq = rank_query(q, sparse.centroid_method, q.shape[-1])
-        return kernel_partition.sparse_prefill(
-            q, rq, k, v, score_store, layout,
-            sink_pages=sparse.sink_pages,
-            local_pages=sparse.local_pages,
-            block_q=sparse.prefill_block_q,
-            topk_scale=sparse.prefill_topk_scale,
-            n_valid=n_valid,
-            chunk_offset=chunk_offset,
-            max_pages_per_block=max_pages_per_block
-            or sparse.max_block_size // sparse.page_size,
-            max_slots=max_slots,
-            interpret=self._interp(),
-        )
+        with jax.named_scope("absparse.sparse_prefill"):
+            return kernel_partition.sparse_prefill(
+                q, rq, k, v, score_store, layout,
+                sink_pages=sparse.sink_pages,
+                local_pages=sparse.local_pages,
+                block_q=sparse.prefill_block_q,
+                topk_scale=sparse.prefill_topk_scale,
+                n_valid=n_valid,
+                chunk_offset=chunk_offset,
+                max_pages_per_block=max_pages_per_block
+                or sparse.max_block_size // sparse.page_size,
+                max_slots=max_slots,
+                interpret=self._interp(),
+            )
 
     def decode(
-        self, q, k, v, store, layout, sparse, seq_len=None
-    ) -> Tuple[jax.Array, Optional[jax.Array]]:
+        self, q, k, v, store, layout, sparse, seq_len=None, collect_tel=False
+    ) -> Tuple[jax.Array, ...]:
         """Fused single-launch decode when ``sparse.fused_decode`` is set;
         otherwise the shared staged pipeline (the parity oracle).  Under an
         active sharding context the fused launch is shard_map'd over the
         ``(data, model)`` mesh (:mod:`repro.distributed.kernel_partition`)."""
         if not sparse.fused_decode:
-            return super().decode(q, k, v, store, layout, sparse, seq_len)
+            return super().decode(
+                q, k, v, store, layout, sparse, seq_len,
+                collect_tel=collect_tel,
+            )
         from repro.distributed import kernel_partition
 
         rq = rank_query(q, sparse.centroid_method, q.shape[-1])
-        out, table, _ = kernel_partition.fused_decode(
-            q, rq, k, v, store, layout,
-            sink_pages=sparse.sink_pages,
-            local_pages=sparse.local_pages,
-            seq_len=seq_len,
-            max_pages_per_block=sparse.max_block_size // sparse.page_size,
-            interpret=self._interp(),
-        )
+        with jax.named_scope("absparse.fused_decode"):
+            out, table, _ = kernel_partition.fused_decode(
+                q, rq, k, v, store, layout,
+                sink_pages=sparse.sink_pages,
+                local_pages=sparse.local_pages,
+                seq_len=seq_len,
+                max_pages_per_block=sparse.max_block_size // sparse.page_size,
+                interpret=self._interp(),
+            )
+        if collect_tel:
+            # the fused kernel keeps scores in-register; re-run the (cheap)
+            # estimation stage to derive counters from the identical score
+            # tensor — this is what makes fused/staged counter parity exact.
+            scores = self.scores(rq, store, layout, k.shape[1])
+            tel = selection_telemetry(
+                scores, layout, seq_len=seq_len,
+                sink_pages=sparse.sink_pages,
+                local_pages=sparse.local_pages,
+            )
+            return out, table, tel
         return out, table

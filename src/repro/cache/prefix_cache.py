@@ -47,6 +47,9 @@ class PrefixCache:
         self.hits = 0
         self.misses = 0
         self.evicted_pages = 0
+        #: optional :class:`~repro.obs.trace.TraceRecorder` (set by the
+        #: engine); match/insert/evict emit timeline instants through it.
+        self.trace = None
 
     # -- lookup --------------------------------------------------------------
 
@@ -84,6 +87,14 @@ class PrefixCache:
             self.hits += 1
         else:
             self.misses += 1
+        if self.trace is not None:
+            from repro.obs.trace import PID_SCHED
+
+            self.trace.instant(
+                "prefix.match", PID_SCHED,
+                args={"reused_tokens": len(pages) * self.page_size,
+                      "hit": bool(pages)},
+            )
         return len(pages) * self.page_size, pages, kvs
 
     # -- insertion -----------------------------------------------------------
@@ -114,6 +125,12 @@ class PrefixCache:
                 inserted += 1
             child.last_used = tick
             node = child
+        if self.trace is not None and inserted:
+            from repro.obs.trace import PID_SCHED
+
+            self.trace.instant(
+                "prefix.insert", PID_SCHED, args={"pages": inserted},
+            )
         return inserted
 
     # -- introspection -------------------------------------------------------
@@ -148,6 +165,12 @@ class PrefixCache:
         self.pool.cache_unref(node.page)
         self.n_pages -= 1
         self.evicted_pages += 1
+        if self.trace is not None:
+            from repro.obs.trace import PID_SCHED
+
+            self.trace.instant(
+                "prefix.evict", PID_SCHED, args={"page": node.page},
+            )
 
     def evict_for(self, need_free: int, protect: Sequence[int] = ()) -> bool:
         """Evict LRU leaves until ``pool.free_pages >= need_free`` (never a

@@ -79,12 +79,31 @@ def mask_and_pin_scores(
     return scores
 
 
+def rank_blocks(
+    scores: jax.Array,
+    layout,
+    seq_len: Optional[jax.Array] = None,
+    sink_pages: int = 1,
+    local_pages: int = 4,
+) -> Tuple[jax.Array, jax.Array]:
+    """Mask/pin ``scores`` and rank: -> ``(vals, idx)`` of
+    ``jax.lax.top_k(masked, max_top_k)``, each ``[B, H, kmax]``.
+
+    The shared ranking stage of :func:`select_page_table` and
+    :func:`selection_telemetry` — callers that need both pass the result
+    through ``ranked=`` so the (relatively pricey) top-k runs once."""
+    la = _arrays(layout)
+    masked = mask_and_pin_scores(scores, la, seq_len, sink_pages, local_pages)
+    return jax.lax.top_k(masked, la.max_top_k)
+
+
 def select_page_table(
     scores: jax.Array,
     layout,
     seq_len: Optional[jax.Array] = None,
     sink_pages: int = 1,
     local_pages: int = 4,
+    ranked: Optional[Tuple[jax.Array, jax.Array]] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """scores ``[B, H, max_blocks]`` -> (page_table ``[B, H, P_sel]`` int32,
     page_valid ``[B, H, P_sel]`` bool).
@@ -95,9 +114,9 @@ def select_page_table(
     """
     la = _arrays(layout)
     B, H, M = scores.shape
-    scores = mask_and_pin_scores(scores, la, seq_len, sink_pages, local_pages)
-
-    vals, idx = jax.lax.top_k(scores, la.max_top_k)            # [B, H, kmax]
+    if ranked is None:
+        ranked = rank_blocks(scores, la, seq_len, sink_pages, local_pages)
+    vals, idx = ranked                                         # [B, H, kmax]
     slot = la.slot_map                                         # [H, P_sel]
     within = la.within_map
     ppb = la.pages_per_block[:, None]                          # [H, 1]
@@ -159,6 +178,47 @@ def selected_page_masks(
         hit = ok & (j < ppb)
         predicted = predicted.at[bidx, page].add(hit.astype(jnp.int32))
     return selected, (predicted > 0) | selected
+
+
+def selection_telemetry(
+    scores: jax.Array,
+    layout,
+    seq_len: Optional[jax.Array] = None,
+    sink_pages: int = 1,
+    local_pages: int = 4,
+    ranked: Optional[Tuple[jax.Array, jax.Array]] = None,
+) -> jax.Array:
+    """scores ``[B, H, max_blocks]`` -> per-slot sparsity counters
+    ``[B, 4]`` int32: ``[blocks selected, KV pages gathered,
+    forced (pinned) blocks, total top-K block budget]``.
+
+    ``pages`` sums per-head page gathers (each KV head reads its own page
+    slabs, so this is the attention stage's actual DMA volume; the
+    cross-head *union* the tiered memory works on is
+    :func:`selected_page_masks`).  Derived from the same masked/pinned
+    score ranking the selection path uses (pass the shared
+    :func:`rank_blocks` result via ``ranked=``), so the counts match what
+    :func:`select_page_table` actually sends to attention — on the fused
+    and the staged decode path alike.  This runs inside every decode
+    tick's layer scan; everything here must stay a handful of elementwise
+    ops on the (tiny) ranked tensor.  Column order follows
+    ``repro.obs.telemetry.{BLOCKS,PAGES,FORCED,BUDGET}``.
+    """
+    la = _arrays(layout)
+    B, H, M = scores.shape
+    if ranked is None:
+        ranked = rank_blocks(scores, la, seq_len, sink_pages, local_pages)
+    vals, _ = ranked                                           # [B, H, kmax]
+    within_k = jnp.arange(la.max_top_k)[None, None, :] < la.top_k[None, :, None]
+    valid = within_k & (vals > NEG_INF / 2)                    # selected blocks
+    forced = within_k & (vals > POS_INF / 2)                   # pinned blocks
+
+    ppb = la.pages_per_block[None, :, None]                    # [1, H, 1]
+    n_blocks = valid.sum(axis=(1, 2)).astype(jnp.int32)        # [B]
+    n_pages = (valid * ppb).sum(axis=(1, 2)).astype(jnp.int32)
+    n_forced = forced.sum(axis=(1, 2)).astype(jnp.int32)
+    budget = jnp.broadcast_to(jnp.sum(la.top_k).astype(jnp.int32), (B,))
+    return jnp.stack([n_blocks, n_pages, n_forced, budget], axis=-1)
 
 
 def pages_to_token_mask(

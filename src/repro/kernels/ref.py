@@ -211,7 +211,11 @@ def sparse_prefill_ref(
     scored = (
         jnp.sum(onehot * slot_ok[..., None].astype(jnp.float32), axis=3) > 0.5
     )
-    selected = forced | scored                           # [B, H, nQB, M]
+    # fully-dead query blocks (chunk padding past n_valid) select nothing:
+    # their outputs are discarded, and counting their forced blocks would
+    # overstate attended-block telemetry (and, in the kernel, waste DMA).
+    qb_live = q_start[None, None, :, None] < nv[:, None, None, None]
+    selected = (forced | scored) & qb_live               # [B, H, nQB, M]
     n_att = jnp.sum(selected, axis=-1).astype(jnp.int32)
 
     # expand block selection to a key mask and run dense masked attention

@@ -154,7 +154,11 @@ def _sparse_prefill_kernel(
     scored = (u > thr) | ((is_tie > 0) & (tie_rank < k_sel - n_gt))
     # drop -inf "candidates" (dead query blocks / fewer candidates than K)
     scored = scored & cand & (s_m > NEG_INF / 2)
-    selected = forced | scored
+    # fully-dead query blocks (chunk padding past nv) select nothing: their
+    # outputs are discarded, so attending their forced blocks would only
+    # burn DMA and overstate the attended-block count (parity: the
+    # reference oracle masks identically).
+    selected = (forced | scored) & (q_start < nv)
     sel_rank = jnp.cumsum(selected.astype(jnp.int32))  # inclusive
     n_live = sel_rank[-1]
     nsel_ref[0, 0, 0] = n_live
@@ -191,10 +195,10 @@ def _sparse_prefill_kernel(
             ),
         )
 
-    # n_live == 0 is reachable (fully-dead trailing query block with
-    # sink_pages == 0): the loop below then never runs, so starting the
-    # warm-up DMA unconditionally would leak un-awaited semaphore signals
-    # into the next grid cell on real hardware.
+    # n_live == 0 is reachable (any fully-dead trailing query block — they
+    # select no blocks at all): the loop below then never runs, so starting
+    # the warm-up DMA unconditionally would leak un-awaited semaphore
+    # signals into the next grid cell on real hardware.
     @pl.when(n_live > 0)
     def _warmup():
         dk0, dv0 = kv_dma(0, slot_scr[0, 0])

@@ -9,11 +9,20 @@ exercised.  The run ends with the engine's lifecycle-metrics snapshot
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --smoke \
         --requests 8 --max-batch 4
+
+Observability (see README "Observability"): ``--trace out.json`` records
+the full run timeline — per-sequence lifecycle spans, engine tick spans,
+memory-tier migrations, pool/residency/sparsity counter tracks — as Chrome
+trace-event JSON, loadable at https://ui.perfetto.dev.  ``--metrics-interval
+N`` appends a structured metrics-snapshot JSONL line every N ticks to
+``--metrics-out`` (default stdout).
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
+import sys
 import time
 
 import jax
@@ -23,6 +32,7 @@ from repro.config import ServeConfig
 from repro.configs import get_config, smoke_variant
 from repro.launch.mesh import make_serving_mesh, parse_mesh_arg
 from repro.models import Transformer
+from repro.obs import TraceRecorder
 from repro.serving import Engine, Request
 
 
@@ -58,6 +68,18 @@ def main():
     ap.add_argument("--host-pages", type=int, default=0,
                     help="host (offload) tier page budget; only with "
                          "--hbm-pages")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="flat KV pool page budget (undersizing forces "
+                         "preemption; mutually exclusive with --hbm-pages)")
+    ap.add_argument("--trace", default=None, metavar="OUT.JSON",
+                    help="record a Chrome trace-event timeline of the run "
+                         "(open in Perfetto); also enables device-side "
+                         "sparsity telemetry")
+    ap.add_argument("--metrics-interval", type=int, default=0, metavar="N",
+                    help="emit a metrics-snapshot JSONL line every N ticks")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="JSONL destination for --metrics-interval "
+                         "(default: stdout)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -79,14 +101,16 @@ def main():
         print(f"serving mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
     model = Transformer(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    trace = TraceRecorder() if args.trace else None
     eng = Engine(cfg, params, ServeConfig(
         max_batch=args.max_batch,
         max_context=args.max_context,
         prefill_chunk=args.prefill_chunk,
         prefill_tokens_per_tick=args.prefill_budget,
+        pool_pages=args.pool_pages,
         hbm_pages=args.hbm_pages,
         host_pages=args.host_pages,
-    ), mesh=mesh)
+    ), mesh=mesh, trace=trace)
     rng = np.random.default_rng(0)
     prefixes = [
         rng.integers(0, cfg.vocab_size, args.prefix_len).astype(np.int32)
@@ -98,9 +122,30 @@ def main():
         if prefixes:
             body = np.concatenate([prefixes[rid % len(prefixes)], body])
         eng.submit(Request(rid, body, max_new_tokens=args.new_tokens))
+    metrics_f = None
+    tick_cb = None
+    if args.metrics_interval > 0:
+        metrics_f = (
+            open(args.metrics_out, "w") if args.metrics_out else sys.stdout
+        )
+
+        def tick_cb(engine, tick):
+            if (tick + 1) % args.metrics_interval:
+                return
+            snap = engine.metrics.snapshot()
+            snap["tick"] = tick + 1
+            metrics_f.write(json.dumps(snap) + "\n")
+            metrics_f.flush()
+
     t0 = time.monotonic()
-    done = eng.run_until_done()
+    done = eng.run_until_done(tick_callback=tick_cb)
     dt = time.monotonic() - t0
+    if metrics_f is not None and metrics_f is not sys.stdout:
+        metrics_f.close()
+    if trace is not None:
+        trace.dump(args.trace)
+        print(f"trace: {len(trace)} events -> {args.trace} "
+              f"(open at https://ui.perfetto.dev)")
     total = sum(len(r.output) for r in done)
     plan = model.attention_plan(args.max_context)
     print(f"served {len(done)} requests / {total} tokens in {dt:.1f}s "

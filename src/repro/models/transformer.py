@@ -650,6 +650,10 @@ class Transformer:
         stk = cache.get("_layouts")
         all_offs = cache.get("_offsets")
         use_sp = cfg.sparse.sparse_prefill and "pcodes" in cache["pos0"]
+        # opt-in prefill sparsity telemetry (repro.obs): the engine plants
+        # "_ptel" [n_layers] and each sparse layer reports the number of
+        # (query block, key block) pairs its kernel actually attended.
+        collect_ptel = use_sp and "_ptel" in cache
         if use_sp:
             sp_max_slots = self.attention_plan(S_max).prefill_max_slots
             sp_ppb_max = cfg.sparse.max_block_size // cfg.sparse.page_size
@@ -705,13 +709,15 @@ class Transformer:
                 new_entry["pzero"] = entry["pzero"].at[slot].set(
                     sstore.zero[0]
                 )
-                attn_o, _ = self.backend.prefill_attention(
+                attn_o, n_att = self.backend.prefill_attention(
                     jnp.moveaxis(q, 1, 2), kslot, vslot, sstore,
                     lay, cfg.sparse,
                     n_valid=offset + n_valid, chunk_offset=offset,
                     max_pages_per_block=sp_ppb_max,
                     max_slots=sp_max_slots,
                 )
+                if collect_ptel:
+                    new_entry["_ptelq"] = jnp.sum(n_att).astype(jnp.int32)
                 h = layers.out_project(
                     p["attn"], jnp.moveaxis(attn_o, 1, 2), cfg
                 )
@@ -769,7 +775,10 @@ class Transformer:
                     jnp.arange(self.plan.n_cycles),
                 ),
             )
-            cache["pos0"] = new_cyc["pos0"]
+            entry = new_cyc["pos0"]
+            if collect_ptel:
+                cache["_ptel"] = entry.pop("_ptelq")      # [n_cycles] int32
+            cache["pos0"] = entry
         x = layers.rms_norm(params["final_norm"], x, cfg.norm_eps)
         h_last = jnp.take(x[0], n_valid - 1, axis=0)      # last valid row
         logits = self.unembed(params, h_last)
@@ -905,6 +914,10 @@ class Transformer:
         # sparse attention layer reports its selected / margin-predicted
         # page masks (OR-reduced over layers below).
         collect = stk is not None and "_sel_pages" in cache
+        # opt-in sparsity telemetry (repro.obs): the engine plants
+        # "_telemetry" [n_layers, B, 4] and every sparse attention layer
+        # reports [blocks, pages, forced, budget] per slot.
+        collect_tel = stk is not None and "_telemetry" in cache
 
         def run_layer(p, kind, x, entry, lay, offs):
             h = layers.rms_norm(p["norm1"], x, cfg.norm_eps)
@@ -912,7 +925,7 @@ class Transformer:
             if kind == "attn":
                 h, new_entry = self._attn_decode(
                     p["attn"], h, entry, lay, offs, positions,
-                    collect=collect,
+                    collect=collect, collect_tel=collect_tel,
                 )
             elif kind == "local_attn":
                 h, new_entry = self._local_attn_decode(
@@ -948,6 +961,8 @@ class Transformer:
         if collect:
             sel_acc = jnp.zeros_like(cache["_sel_pages"])
             pre_acc = jnp.zeros_like(cache["_pre_pages"])
+        if collect_tel:
+            tel_acc = jnp.zeros_like(cache["_telemetry"])   # [L, B, 4]
         if self.plan.n_cycles > 0:
             cyc_cache_in = {f"pos{i}": cache[f"pos{i}"] for i in range(len(pat))}
             x, new_cyc = jax.lax.scan(
@@ -960,6 +975,10 @@ class Transformer:
                 if collect and kind == "attn":
                     sel_acc |= jnp.any(entry.pop("_selq"), axis=0)
                     pre_acc |= jnp.any(entry.pop("_preq"), axis=0)
+                if collect_tel and kind == "attn":
+                    # layer index of cycle c, position i is c*len(pat)+i
+                    rows = jnp.arange(self.plan.n_cycles) * len(pat) + i
+                    tel_acc = tel_acc.at[rows].set(entry.pop("_telq"))
                 cache[f"pos{i}"] = entry
         for i, kind in enumerate(self.plan.rest_kinds):
             lay_idx = self.plan.n_cycles * len(pat) + i
@@ -971,10 +990,14 @@ class Transformer:
             if collect and kind == "attn":
                 sel_acc |= new_entry.pop("_selq")
                 pre_acc |= new_entry.pop("_preq")
+            if collect_tel and kind == "attn":
+                tel_acc = tel_acc.at[lay_idx].set(new_entry.pop("_telq"))
             cache["rest"][i] = new_entry
         if collect:
             cache["_sel_pages"] = sel_acc
             cache["_pre_pages"] = pre_acc
+        if collect_tel:
+            cache["_telemetry"] = tel_acc
 
         x = layers.rms_norm(params["final_norm"], x, cfg.norm_eps)
         logits = self.unembed(params, x[:, 0])
@@ -984,7 +1007,8 @@ class Transformer:
 
     # -- decode helpers ---------------------------------------------------
 
-    def _attn_decode(self, p, h, entry, lay, offs, positions, collect=False):
+    def _attn_decode(self, p, h, entry, lay, offs, positions, collect=False,
+                     collect_tel=False):
         cfg = self.cfg
         B = h.shape[0]
         hd = cfg.resolved_head_dim
@@ -1050,9 +1074,18 @@ class Transformer:
         # kernel output arrives kv-head-sharded, and out_project must reduce
         # over the FULL head axis in single-device order for the sharded
         # path to stay token-identical (identity outside a context).
-        out, _ = self.backend.decode(
-            q, k_cache, v_cache, store, lay, cfg.sparse, seq_len=live
-        )
+        if collect_tel:
+            # sparsity counters piggyback on the estimation scores the
+            # decode itself ranks (staged: same tensor; fused: an identical
+            # recompute inside the backend) — no second pass over the store.
+            out, _, new_entry["_telq"] = self.backend.decode(
+                q, k_cache, v_cache, store, lay, cfg.sparse, seq_len=live,
+                collect_tel=True,
+            )
+        else:
+            out, _ = self.backend.decode(
+                q, k_cache, v_cache, store, lay, cfg.sparse, seq_len=live
+            )
         if collect:
             # re-run the (cheap) estimation stage against the post-append
             # store — identical scores to the ones backend.decode just

@@ -42,6 +42,22 @@ from repro.distributed import params as pshard
 from repro.distributed.kernel_partition import serving_rules
 from repro.distributed.sharding import sharding_rules
 from repro.models import Transformer
+from repro.obs.telemetry import (
+    BLOCKS,
+    BUDGET,
+    FORCED,
+    N_COUNTERS,
+    PAGES,
+    SparsityAggregate,
+    prefill_block_candidates,
+)
+from repro.obs.trace import (
+    PID_ENGINE,
+    PID_KERNEL,
+    PID_MEMORY,
+    PID_SCHED,
+    TraceRecorder,
+)
 from repro.serving.metrics import ServingMetrics
 from repro.serving.sampler import sample
 from repro.serving.scheduler import (
@@ -59,6 +75,14 @@ class EngineStalled(RuntimeError):
     """``run_until_done`` exhausted its tick budget with work still queued."""
 
 
+#: series names of the per-tick counter tracks (see Engine._trace_counters).
+_COUNTER_KEYS = {
+    "pool": ("used_pages", "free_pages"),
+    "queue": ("waiting", "running"),
+    "residency": ("hbm_pages", "host_pages"),
+}
+
+
 class Engine:
     def __init__(
         self,
@@ -69,6 +93,8 @@ class Engine:
         clock: Callable[[], float] = time.monotonic,
         mesh=None,
         shard_rules: Optional[Dict] = None,
+        trace: Optional[TraceRecorder] = None,
+        telemetry: Optional[bool] = None,
     ):
         """Batch capacity and context length come from ``serve_cfg``
         (``ServeConfig.max_batch`` / ``ServeConfig.max_context``) — the
@@ -85,6 +111,16 @@ class Engine:
         :mod:`repro.distributed.kernel_partition`), and cache donation is
         preserved.  Sharded serving is token-identical to the single-device
         path.  ``shard_rules`` overrides individual logical-axis rules.
+
+        ``trace`` (a :class:`~repro.obs.trace.TraceRecorder`) turns on
+        timeline recording across every subsystem — scheduler, engine,
+        memory manager, prefix cache all emit through this one recorder.
+        ``telemetry`` turns on device-side sparsity counters (defaults to
+        following ``trace``; requires the sparse decode path): the decode
+        step emits a per-layer ``[blocks, pages, forced, budget]`` array
+        that rides along on the host transfers the engine already makes.
+        Both default OFF, and when off the cache carries no telemetry
+        entries at all — the traced/untraced compiled steps are identical.
         """
         self.cfg = model_cfg
         self.serve = serve_cfg
@@ -181,6 +217,10 @@ class Engine:
         self.slots: List[Optional[SeqState]] = [None] * self.max_batch
         self.finished: List[Request] = []
         self.metrics = ServingMetrics(clock=clock)
+        self.trace = trace
+        self.metrics.trace = trace
+        # last emitted value per counter track (see _trace_counters dedup).
+        self._last_counters: Dict[str, tuple] = {}
         self._chunkable = (
             serve_cfg.prefill_chunk > 0
             and self.model.supports_chunked_prefill()
@@ -190,6 +230,8 @@ class Engine:
             if (serve_cfg.enable_prefix_cache and self._chunkable)
             else None
         )
+        if self.prefix_cache is not None:
+            self.prefix_cache.trace = trace
         #: sparse prefill active => chunk boundaries and reused prefix spans
         #: must align to the query-block size (chunked selection is then
         #: token-identical to single-shot sparse prefill).
@@ -244,6 +286,60 @@ class Engine:
             self.cache["_sel_pages"] = jnp.zeros((self.max_batch, nP), bool)
             self.cache["_pre_pages"] = jnp.zeros((self.max_batch, nP), bool)
             self.memory = MemoryManager(self, self.pool)
+        # opt-in device-side sparsity telemetry (repro.obs): plant the
+        # per-layer counter outputs so the jit'd steps emit them; they ride
+        # along on the per-tick host syncs (zero extra transfers when off).
+        self._telemetry_on = False
+        self._plan_layouts = None
+        # raw (ts, tel, slots) samples awaiting export-time materialization
+        # into "sparsity" counter events (see _flush_sparsity_counters).
+        self._tel_pending: List[tuple] = []
+        self._tel_flush_recorder: Optional[TraceRecorder] = None
+        self.set_tracing(trace, telemetry=telemetry)
+
+    def set_tracing(
+        self,
+        trace: Optional[TraceRecorder],
+        telemetry: Optional[bool] = None,
+    ):
+        """Attach/detach the trace recorder and device-side telemetry on a
+        live engine.  Telemetry toggling adds/removes the counter entries
+        from the decode cache, which swaps the jit'd step signature — the
+        first tick after a toggle compiles that variant unless it already
+        ran.  The overhead benchmark uses this to A/B traced vs untraced on
+        ONE engine (same params / cache buffers), which removes per-engine
+        allocation bias from the comparison."""
+        self.trace = trace
+        self.metrics.trace = trace
+        self._last_counters = {}
+        if trace is not None and self._tel_flush_recorder is not trace:
+            trace.add_flush_hook(
+                lambda t=trace: self._flush_sparsity_counters(t)
+            )
+            self._tel_flush_recorder = trace
+        if telemetry is None:
+            telemetry = trace is not None
+        on = bool(telemetry and self.model.use_sparse(self.max_context))
+        if on == self._telemetry_on:
+            return
+        self._telemetry_on = on
+        L = self.cfg.n_layers
+        self.cache = dict(self.cache)
+        if on:
+            self.cache["_telemetry"] = jnp.zeros(
+                (L, self.max_batch, N_COUNTERS), jnp.int32
+            )
+            if self._sparse_prefill:
+                self.cache["_ptel"] = jnp.zeros((L,), jnp.int32)
+            if self.metrics.sparsity is None:
+                self.metrics.sparsity = SparsityAggregate(L)
+            if self._plan_layouts is None:
+                self._plan_layouts = self.model.attention_plan(
+                    self.max_context
+                ).layouts
+        else:
+            self.cache.pop("_telemetry", None)
+            self.cache.pop("_ptel", None)
 
     def _sample_batch(self, base_key, seq_ids, positions, logits):
         t, k, p = self.serve.temperature, self.serve.top_k, self.serve.top_p
@@ -351,10 +447,26 @@ class Engine:
         n = len(ch.tokens)
         buf = np.zeros((self._chunk_len,), np.int32)
         buf[:n] = ch.tokens
-        logits, self.cache = self._chunk(
-            self.params, self.cache, np.int32(seq.slot), buf,
-            np.int32(ch.offset), np.int32(n),
+        ctx = (
+            self.trace.span(
+                "prefill.chunk", PID_ENGINE,
+                args={"seq": seq.seq_id, "offset": ch.offset, "tokens": n},
+            )
+            if self.trace is not None
+            else nullcontext()
         )
+        with ctx:
+            logits, self.cache = self._chunk(
+                self.params, self.cache, np.int32(seq.slot), buf,
+                np.int32(ch.offset), np.int32(n),
+            )
+            if self._telemetry_on and self._sparse_prefill:
+                attended = np.asarray(self.cache["_ptel"])
+                cands = prefill_block_candidates(
+                    self._plan_layouts, ch.offset, n,
+                    self.cfg.sparse.prefill_block_q,
+                )
+                self.metrics.on_prefill_sparsity(attended, cands)
         self._seq_len[seq.slot] = ch.offset + n
         self.metrics.on_prefill(n)
         if ch.is_last:
@@ -392,10 +504,20 @@ class Engine:
                     )
             return dst
 
-        self.cache = jax.tree.map(
-            scatter, self.cache, cache1,
+        # engine-private cache keys (telemetry / selection-emission outputs)
+        # don't exist in the single-sequence prefill cache: hold them aside
+        # so the tree structures match, then restore.
+        cache = dict(self.cache)
+        private = {
+            k: cache.pop(k) for k in list(cache)
+            if k.startswith("_") and k not in cache1
+        }
+        cache = jax.tree.map(
+            scatter, cache, {k: cache1[k] for k in cache},
             is_leaf=lambda x: isinstance(x, jnp.ndarray),
         )
+        cache.update(private)
+        self.cache = cache
         self._seq_len[slot] = seq.n_prefill
         self.metrics.on_prefill(seq.n_prefill)
         self._finish_prefill(seq, logits)
@@ -511,6 +633,22 @@ class Engine:
         if mem is not None:
             sel = np.asarray(self.cache["_sel_pages"])
             pre = np.asarray(self.cache["_pre_pages"])
+        if self._telemetry_on:
+            # ONE owned copy upfront: np.asarray alone returns a zero-copy
+            # view of the device buffer, and every downstream read of that
+            # view (fancy indexing, reductions) pays uncached-memory cost —
+            # in situ that is several times the price of this 256-byte copy.
+            # Everything downstream is deferred off the tick: the metrics
+            # aggregate folds lazily at snapshot time, and the per-step
+            # trace counters are queued raw and materialized by the
+            # recorder's export-time flush hook (_flush_sparsity_counters).
+            tel = np.array(self.cache["_telemetry"])     # [L, B, 4] owned
+            live_slots = [s.slot for s in active]
+            self.metrics.on_sparsity(tel, live_slots, owned=True)
+            if self.trace is not None:
+                self._tel_pending.append(
+                    (self.trace.clock(), tel, live_slots)
+                )
         for seq in active:
             slot = seq.slot
             if mem is not None and not mem.on_step(
@@ -539,6 +677,61 @@ class Engine:
     def step(self) -> int:
         """One engine tick: admit, prefill chunks, decode, retire.
         Returns the number of occupied slots."""
+        if self.trace is not None:
+            with self.trace.span("engine.tick", PID_ENGINE,
+                                 args={"tick": self.metrics.ticks}):
+                n = self._step_body()
+            self._trace_counters()
+            return n
+        return self._step_body()
+
+    def _flush_sparsity_counters(self, trace: TraceRecorder):
+        """Materialize queued per-step sparsity samples into "sparsity"
+        counter events (runs as the recorder's export-time flush hook —
+        the reductions and event construction stay off the decode tick)."""
+        pending, self._tel_pending = self._tel_pending, []
+        for ts, tel, slots in pending:
+            per_slot = tel.sum(axis=0, dtype=np.int64)   # [B, 4]
+            live = (
+                per_slot.sum(axis=0)
+                if len(slots) == per_slot.shape[0]
+                else per_slot[slots].sum(axis=0)
+            )
+            budget = max(int(live[BUDGET]), 1)
+            trace.counter_at(
+                "sparsity",
+                {
+                    "blocks_attended": int(live[BLOCKS]),
+                    "pages_dma": int(live[PAGES]),
+                    "forced_blocks": int(live[FORCED]),
+                    "budget_util_pct": 100.0 * int(live[BLOCKS]) / budget,
+                },
+                ts,
+                pid=PID_KERNEL,
+            )
+
+    def _trace_counters(self):
+        """Per-tick counter tracks: pool occupancy, queue depth, HBM/host
+        residency (tiered runs).  Counter tracks render as step functions,
+        so a sample equal to the previous one is invisible — dedup keeps
+        steady-state decode (constant pool/queue) nearly event-free."""
+        t = self.trace
+        last = self._last_counters
+        for name, pid, values in (
+            ("pool", PID_MEMORY, (self.pool.used_pages, self.pool.free_pages)),
+            ("queue", PID_SCHED,
+             (len(self.scheduler.waiting), len(self.scheduler.running))),
+        ) + ((
+            ("residency", PID_MEMORY,
+             (self.metrics.hbm_resident_pages,
+              self.metrics.host_resident_pages)),
+        ) if self.memory is not None else ()):
+            if last.get(name) != values:
+                last[name] = values
+                keys = _COUNTER_KEYS[name]
+                t.counter(name, dict(zip(keys, values)), pid=pid)
+
+    def _step_body(self) -> int:
         if self.memory is not None:
             # apply staged host->HBM promotions (stall targets first, then
             # predictions into free headroom) and rebuild the demotion
@@ -558,6 +751,11 @@ class Engine:
             ]
             if starved:
                 victim = max(starved, key=lambda s: s.arrival)
+                if self.trace is not None:
+                    self.trace.instant(
+                        "mem.starvation_breaker", PID_MEMORY,
+                        args={"victim_seq": victim.seq_id},
+                    )
                 self.scheduler.preempt(victim)
                 self.memory.forget(victim.seq_id)
                 self.slots[victim.slot] = None
@@ -566,6 +764,12 @@ class Engine:
         free = [i for i, s in enumerate(self.slots) if s is None]
         plan = self.scheduler.plan_tick(free)
         for adm in plan.admitted:
+            if self.trace is not None:
+                self.trace.instant(
+                    "sched.admit", PID_SCHED,
+                    args={"seq": adm.seq.seq_id, "slot": adm.slot,
+                          "prefix_tokens": adm.prefix_tokens},
+                )
             self._install(adm)
         for ch in plan.chunks:
             self._run_chunk(ch)
@@ -584,21 +788,32 @@ class Engine:
             self.slots[seq.slot] = None
             self._seq_len[seq.slot] = 0
             seq.slot = -1
-        self._decode_tick()
+        if self.trace is not None:
+            with self.trace.span("engine.decode", PID_ENGINE):
+                self._decode_tick()
+        else:
+            self._decode_tick()
         if self.memory is not None:
             self.memory.end_tick()
         self.metrics.ticks += 1
         return len([s for s in self.slots if s is not None])
 
-    def run_until_done(self, max_ticks: int = 10_000) -> List[Request]:
+    def run_until_done(
+        self,
+        max_ticks: int = 10_000,
+        tick_callback: Optional[Callable[["Engine", int], None]] = None,
+    ) -> List[Request]:
         """Tick until queue and slots drain; -> the requests retired DURING
         this call, in retirement order (a copy — the engine's cumulative
         record stays in ``self.finished``).  Raises :class:`EngineStalled`
         if ``max_ticks`` elapse with work still pending — a partial result
-        must not masquerade as success."""
+        must not masquerade as success.  ``tick_callback(engine, tick)``
+        fires after every tick (periodic metrics snapshots)."""
         start = len(self.finished)
-        for _ in range(max_ticks):
+        for tick in range(max_ticks):
             self.step()
+            if tick_callback is not None:
+                tick_callback(self, tick)
             if not self.scheduler.has_work:
                 break
         else:

@@ -16,6 +16,8 @@ import time
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
 
+from repro.obs.trace import PID_MEMORY, PID_SEQ, TraceRecorder
+
 
 @dataclass
 class RequestMetrics:
@@ -59,10 +61,17 @@ class RequestMetrics:
 def _pct(xs: List[float], q: float) -> float:
     """Nearest-rank percentile.  Pure Python on purpose: this is a
     hot-path-free bookkeeping module, and a numpy dependency here would be
-    overkill."""
+    overkill.  Empty input -> 0.0 (an empty-run snapshot must stay
+    all-zeros and JSON-serializable, never raise or produce NaN)."""
+    if not xs:
+        return 0.0
     xs = sorted(xs)
     idx = min(len(xs) - 1, max(0, int(round(q * (len(xs) - 1)))))
     return xs[idx]
+
+
+def _mean(xs: List[float]) -> float:
+    return sum(xs) / len(xs) if xs else 0.0
 
 
 class ServingMetrics:
@@ -70,6 +79,18 @@ class ServingMetrics:
 
     def __init__(self, clock: Callable[[], float] = time.monotonic):
         self.clock = clock
+        #: optional :class:`~repro.obs.trace.TraceRecorder`.  When set, the
+        #: lifecycle events below double as per-sequence timeline spans (one
+        #: Perfetto track per request: queued -> prefill -> decode, stalls
+        #: nested inside decode, preemption instants) — the engine wires
+        #: this up so every subsystem traces through one recorder.
+        self.trace: Optional[TraceRecorder] = None
+        #: optional :class:`~repro.obs.telemetry.SparsityAggregate`; decode
+        #: and prefill sparsity counters fold in via :meth:`on_sparsity` /
+        #: :meth:`on_prefill_sparsity` and surface in :meth:`snapshot`.
+        self.sparsity = None
+        self._phase: Dict[int, str] = {}     # req_id -> open lifecycle span
+        self._stall_open: set = set()        # req_ids with an open stall span
         self.requests: Dict[int, RequestMetrics] = {}
         self.ticks = 0
         self.prefill_tokens_computed = 0
@@ -92,6 +113,28 @@ class ServingMetrics:
     def _req(self, req_id: int) -> RequestMetrics:
         return self.requests.setdefault(req_id, RequestMetrics(req_id))
 
+    def _set_phase(self, req_id: int, phase: Optional[str]):
+        """Transition a request's lifecycle span on its Perfetto track.
+
+        Closes any open stall span first (spans on one track nest, and a
+        stall only ever lives inside decode), then ends the previous phase
+        and begins the new one.  No-op without a trace or on a repeat."""
+        if self.trace is None:
+            return
+        prev = self._phase.get(req_id)
+        if prev == phase:
+            return
+        if req_id in self._stall_open:
+            self.trace.end("seq.stall", PID_SEQ, req_id)
+            self._stall_open.discard(req_id)
+        if prev is not None:
+            self.trace.end(prev, PID_SEQ, req_id)
+        if phase is not None:
+            self.trace.begin(phase, PID_SEQ, req_id)
+            self._phase[req_id] = phase
+        else:
+            self._phase.pop(req_id, None)
+
     # -- lifecycle events ----------------------------------------------------
 
     def on_submit(self, req_id: int, prompt_tokens: int):
@@ -99,6 +142,9 @@ class ServingMetrics:
         r.prompt_tokens = prompt_tokens
         if r.t_submit is None:
             r.t_submit = self.clock()
+        if self.trace is not None:
+            self.trace.name_thread(PID_SEQ, req_id, f"req {req_id}")
+        self._set_phase(req_id, "seq.queued")
 
     def on_admit(self, req_id: int, prefix_hit_tokens: int = 0):
         r = self._req(req_id)
@@ -106,6 +152,12 @@ class ServingMetrics:
             r.t_admit = self.clock()
         r.prefix_hit_tokens += prefix_hit_tokens
         self.prefix_hit_tokens += prefix_hit_tokens
+        if self.trace is not None and prefix_hit_tokens:
+            self.trace.instant(
+                "prefix.hit", PID_SEQ, req_id,
+                args={"reused_tokens": prefix_hit_tokens},
+            )
+        self._set_phase(req_id, "seq.prefill")
 
     def on_prefill(self, n_tokens: int):
         self.prefill_tokens_computed += n_tokens
@@ -114,6 +166,7 @@ class ServingMetrics:
         r = self._req(req_id)
         if r.t_first_token is None:
             r.t_first_token = self.clock()
+        self._set_phase(req_id, "seq.decode")
 
     def on_decode_token(self, req_id: int):
         self._req(req_id).output_tokens += 1
@@ -122,6 +175,11 @@ class ServingMetrics:
     def on_preempt(self, req_id: int):
         self._req(req_id).preemptions += 1
         self.preemptions += 1
+        # the engine preempts BEFORE memory.forget fires on_stall_end, so
+        # _set_phase closes any open stall span here (stack discipline).
+        self._set_phase(req_id, "seq.queued")
+        if self.trace is not None:
+            self.trace.instant("seq.preempt", PID_SEQ, req_id)
 
     def on_finish(self, req_id: int):
         # idempotent like every other lifecycle event: a duplicate retire
@@ -129,6 +187,7 @@ class ServingMetrics:
         r = self._req(req_id)
         if r.t_finish is None:
             r.t_finish = self.clock()
+        self._set_phase(req_id, None)
 
     # -- memory tiering events -----------------------------------------------
 
@@ -139,27 +198,57 @@ class ServingMetrics:
 
     def on_prefetch_hit(self, n: int = 1):
         self.prefetch_hits += n
+        if self.trace is not None:
+            self.trace.instant("prefetch.hit", PID_MEMORY, args={"pages": n})
 
     def on_prefetch_miss(self, n: int = 1):
         self.prefetch_misses += n
+        if self.trace is not None:
+            self.trace.instant("prefetch.miss", PID_MEMORY, args={"pages": n})
 
     def on_prefetch_staged(self, n: int = 1):
         self.prefetch_staged += n
+        if self.trace is not None:
+            self.trace.instant("prefetch.stage", PID_MEMORY, args={"pages": n})
 
     def on_migration(self, nbytes: int, demote: bool):
         self.migrations += 1
         self.migration_bytes += nbytes
+        if self.trace is not None:
+            self.trace.instant(
+                "mem.demote" if demote else "mem.promote",
+                PID_MEMORY, args={"bytes": nbytes},
+            )
 
     def on_stall_begin(self, req_id: int):
         r = self._req(req_id)
         r.stalls += 1
         self.stalls += 1
         self._stall_start.setdefault(req_id, self.clock())
+        if self.trace is not None and req_id not in self._stall_open:
+            self.trace.begin("seq.stall", PID_SEQ, req_id)
+            self._stall_open.add(req_id)
 
     def on_stall_end(self, req_id: int):
         t0 = self._stall_start.pop(req_id, None)
         if t0 is not None:
             self._req(req_id).stall_time += self.clock() - t0
+        # no-op if _set_phase already closed the span (preempt-while-stalled)
+        if self.trace is not None and req_id in self._stall_open:
+            self.trace.end("seq.stall", PID_SEQ, req_id)
+            self._stall_open.discard(req_id)
+
+    # -- device-side sparsity telemetry (repro.obs) --------------------------
+
+    def on_sparsity(self, tel, slots, owned=False):
+        """Fold one decode tick's ``[n_layers, B, 4]`` counter array."""
+        if self.sparsity is not None:
+            self.sparsity.update_decode(tel, slots, owned=owned)
+
+    def on_prefill_sparsity(self, attended, candidates=None):
+        """Fold one prefill chunk's per-layer attended-block counts."""
+        if self.sparsity is not None:
+            self.sparsity.update_prefill(attended, candidates)
 
     # -- aggregation ---------------------------------------------------------
 
@@ -184,15 +273,16 @@ class ServingMetrics:
                 self.prefix_hit_tokens / processed if processed else 0.0
             ),
         }
-        if ttfts:
-            snap["ttft_mean"] = sum(ttfts) / len(ttfts)
-            snap["ttft_p50"] = _pct(ttfts, 0.50)
-            snap["ttft_p95"] = _pct(ttfts, 0.95)
-        if tpots:
-            snap["tpot_mean"] = sum(tpots) / len(tpots)
-            snap["tpot_p95"] = _pct(tpots, 0.95)
-        if queues:
-            snap["queue_time_mean"] = sum(queues) / len(queues)
+        # latency keys are ALWAYS present (zero on an empty run) so
+        # downstream JSON consumers never key-error on a snapshot.
+        snap["ttft_mean"] = _mean(ttfts)
+        snap["ttft_p50"] = _pct(ttfts, 0.50)
+        snap["ttft_p95"] = _pct(ttfts, 0.95)
+        snap["tpot_mean"] = _mean(tpots)
+        snap["tpot_p95"] = _pct(tpots, 0.95)
+        snap["queue_time_mean"] = _mean(queues)
+        if self.sparsity is not None:
+            snap.update(self.sparsity.snapshot())
         if self.tiering:
             lookups = self.prefetch_hits + self.prefetch_misses
             stall_times = [r.stall_time for r in done]
@@ -226,15 +316,20 @@ class ServingMetrics:
             f"decode={snap['decode_tokens']:.0f}tok",
             f"preemptions={snap['preemptions']:.0f}",
         ]
-        if "ttft_p50" in snap:
+        if snap["requests_finished"]:
             parts.append(
                 f"ttft p50/p95={snap['ttft_p50'] * 1e3:.0f}/"
                 f"{snap['ttft_p95'] * 1e3:.0f}ms"
             )
-        if "tpot_mean" in snap:
             parts.append(f"tpot={snap['tpot_mean'] * 1e3:.1f}ms")
-        if "queue_time_mean" in snap:
             parts.append(f"queue={snap['queue_time_mean'] * 1e3:.0f}ms")
+        if self.sparsity is not None and snap.get("sparsity_steps"):
+            parts.append(
+                f"sparsity blocks/step={snap['blocks_per_step']:.0f} "
+                f"pages/step={snap['pages_per_step']:.0f} "
+                f"budget_util={100 * snap['budget_utilization']:.0f}% "
+                f"forced={100 * snap['forced_frac']:.0f}%"
+            )
         if self.tiering:
             parts.append(
                 f"mem hbm/host={snap['hbm_resident_pages']:.0f}/"
