@@ -1,0 +1,214 @@
+"""Chaos benchmark: serving correctness under a seeded fault storm.
+
+Drives Poisson request traffic through two tiered-memory engines running
+the identical arrival schedule:
+
+- **baseline** — no fault injector installed (the hot path is
+  byte-for-byte the production path).
+- **chaos** — a seeded :func:`~repro.resilience.default_storm` fault plan
+  (device errors, NaN logits, pool-allocation failures, host-I/O faults,
+  promotion delays, a stuck tick) injected mid-flight.
+
+The gate asserts the failure-domain invariants the resilience subsystem
+promises (see README "Resilience & fault injection"):
+
+- **no request lost** — every submitted request retires (finished or
+  FAILED with a structured reason); nothing hangs or vanishes.
+- **token identity** — every within-budget request's token stream is
+  byte-identical to the fault-free run of the same seed: sampling is
+  (seq_id, position)-keyed and resume replays committed tokens through
+  the decode path, so checkpoint restores, preemptions and degradation
+  re-runs cannot change the output.
+- **clean drain** — the page-pool audit passes with zero leaks after the
+  storm.
+- **bounded TTFT inflation** — chaos p99 time-to-first-token (in ticks,
+  wall-clock-noise-free) stays within a fixed factor of baseline.
+
+Writes ``BENCH_chaos.json`` at the repo root for the CI bench-gate.
+
+    PYTHONPATH=src python benchmarks/chaos_bench.py
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+TTFT_FACTOR = 8.0    # chaos p99 TTFT <= factor * baseline + slack (ticks)
+TTFT_SLACK = 40.0
+
+
+def _make_traffic(cfg, n_requests, new_tokens, seed):
+    """Poisson arrivals (tick-valued) with mixed-length prompts; the same
+    seed reproduces the identical schedule for both engines."""
+    from repro.serving import Request
+
+    rng = np.random.default_rng(seed)
+    arrivals = np.floor(np.cumsum(rng.exponential(4.0, n_requests))).astype(int)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, int(rng.integers(150, 300)))
+        .astype(np.int32)
+        for _ in range(n_requests)
+    ]
+    reqs = [
+        Request(rid, prompts[rid].copy(), max_new_tokens=new_tokens)
+        for rid in range(n_requests)
+    ]
+    return reqs, list(arrivals)
+
+
+def _drive(eng, reqs, arrivals, max_ticks=3000):
+    """Submit per the arrival schedule, run to drain.  TTFT is measured in
+    ticks (deterministic) rather than wall clock (runner noise)."""
+    order = sorted(range(len(reqs)), key=lambda i: arrivals[i])
+    submit_tick, first_tick = {}, {}
+    i = tick = 0
+    t0 = time.monotonic()
+    while i < len(order) or eng.scheduler.has_work:
+        while i < len(order) and arrivals[order[i]] <= tick:
+            rid = order[i]
+            eng.submit(reqs[rid])
+            submit_tick[rid] = tick
+            i += 1
+        eng.step()
+        tick += 1
+        for r in reqs:
+            if r.req_id not in first_tick and r.output:
+                first_tick[r.req_id] = tick
+        if tick > max_ticks:
+            raise RuntimeError(
+                f"no drain after {tick} ticks; running="
+                f"{sorted(eng.scheduler.running)} "
+                f"waiting={[s.seq_id for s in eng.scheduler.waiting]}"
+            )
+    dt = time.monotonic() - t0
+    ttfts = [
+        first_tick[rid] - submit_tick[rid] for rid in first_tick
+    ]
+    return ttfts, tick, dt
+
+
+def run(
+    n_requests=6,
+    new_tokens=12,
+    max_batch=3,
+    max_context=512,
+    hbm_pages=30,
+    host_pages=70,
+    chaos_seed=7,
+    traffic_seed=0,
+):
+    from repro.config import ServeConfig
+    from repro.configs import get_config, smoke_variant
+    from repro.models import Transformer
+    from repro.resilience import FaultInjector, default_storm
+    from repro.serving import Engine
+
+    cfg = smoke_variant(get_config("llama3.2-3b"))
+    model = Transformer(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    serve_cfg = ServeConfig(
+        max_batch=max_batch,
+        max_context=max_context,
+        prefill_chunk=128,
+        prefill_tokens_per_tick=512,
+        hbm_pages=hbm_pages,
+        host_pages=host_pages,
+    )
+
+    # -- baseline: same traffic, no injector ---------------------------------
+    eng_base = Engine(cfg, params, serve_cfg)
+    reqs_base, arrivals = _make_traffic(cfg, n_requests, new_tokens,
+                                        traffic_seed)
+    ttft_base, ticks_base, dt_base = _drive(eng_base, reqs_base, arrivals)
+
+    # -- chaos: identical traffic under the seeded default storm -------------
+    eng = Engine(cfg, params, serve_cfg)
+    injector = FaultInjector(default_storm(), seed=chaos_seed)
+    eng.set_fault_injector(injector)
+    reqs, _ = _make_traffic(cfg, n_requests, new_tokens, traffic_seed)
+    ttft_chaos, ticks_chaos, dt_chaos = _drive(eng, reqs, arrivals)
+
+    # -- invariants ----------------------------------------------------------
+    lost = sum(1 for r in reqs if not r.done)
+    assert lost == 0, f"{lost} requests lost under the storm"
+    failed = [r for r in reqs if r.status == "failed"]
+    ok = [r for r in reqs if r.status != "failed"]
+    mismatches = sum(
+        1 for r in ok if list(r.output) != list(reqs_base[r.req_id].output)
+    )
+    assert mismatches == 0, (
+        f"{mismatches} within-budget requests diverged from the fault-free "
+        f"run: chaos={[list(r.output) for r in ok]} "
+        f"base={[list(reqs_base[r.req_id].output) for r in ok]}"
+    )
+    for e in (eng_base, eng):
+        known = e.prefix_cache.pages() if e.prefix_cache else set()
+        leaks = e.pool.assert_consistent(known_pins=known)
+        assert not leaks, f"leaked pages at drain: {leaks}"
+
+    p99_base = float(np.percentile(ttft_base, 99)) if ttft_base else 0.0
+    p99_chaos = float(np.percentile(ttft_chaos, 99)) if ttft_chaos else 0.0
+    bound = TTFT_FACTOR * p99_base + TTFT_SLACK
+    assert p99_chaos <= bound, (
+        f"chaos p99 TTFT {p99_chaos} ticks exceeds bound {bound} "
+        f"(baseline {p99_base})"
+    )
+
+    snap = eng.metrics.snapshot()
+    return {
+        "n_requests": n_requests,
+        "new_tokens": new_tokens,
+        "max_batch": max_batch,
+        "hbm_pages": hbm_pages,
+        "host_pages": host_pages,
+        "chaos_seed": chaos_seed,
+        "faults_injected": injector.snapshot(),
+        "requests_lost": lost,
+        "requests_failed": len(failed),
+        "failed_by_reason": snap["failed_by_reason"],
+        "token_mismatches": mismatches,
+        "retries": int(snap["retries"]),
+        "checkpoints_taken": int(snap["checkpoints_taken"]),
+        "checkpoints_restored": int(snap["checkpoints_restored"]),
+        "replayed_tokens": int(snap["replayed_tokens"]),
+        "degradations": int(snap["degradations"]),
+        "degradations_by_rung": snap["degradations_by_rung"],
+        "repromotions": int(snap["repromotions"]),
+        "watchdog_fires": int(snap["watchdog_fires"]),
+        "sampler_anomalies": int(snap["sampler_anomalies"]),
+        "host_io_errors": int(snap["host_io_errors"]),
+        "preemptions": int(snap["preemptions"]),
+        "ttft_p99_ticks_baseline": p99_base,
+        "ttft_p99_ticks_chaos": p99_chaos,
+        "ttft_inflation": round(p99_chaos / p99_base, 2) if p99_base else 0.0,
+        "ticks_baseline": ticks_base,
+        "ticks_chaos": ticks_chaos,
+        "wall_s_baseline": round(dt_base, 1),
+        "wall_s_chaos": round(dt_chaos, 1),
+        "token_identical": True,
+        "pool_clean": True,
+    }
+
+
+if __name__ == "__main__":
+    from provenance import provenance
+
+    config = dict(
+        n_requests=6, new_tokens=12, max_batch=3, max_context=512,
+        hbm_pages=30, host_pages=70, chaos_seed=7, traffic_seed=0,
+    )
+    result = run(**config)
+    result["provenance"] = provenance(config)
+    path = ROOT / "BENCH_chaos.json"
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print(f"wrote {path}")
+    for k, v in result.items():
+        print(f"  {k}: {v}")

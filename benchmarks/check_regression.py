@@ -3,8 +3,9 @@
 Reads the benchmark artifacts written by ``benchmarks/decode_latency.py``
 (``BENCH_decode.json``), ``benchmarks/prefill_latency.py``
 (``BENCH_prefill.json``), ``benchmarks/memory_bench.py``
-(``BENCH_memory.json``) and ``benchmarks/serving_bench.py``
-(``BENCH_serving.json``) and checks them against the floors below.
+(``BENCH_memory.json``), ``benchmarks/serving_bench.py``
+(``BENCH_serving.json``) and ``benchmarks/chaos_bench.py``
+(``BENCH_chaos.json``) and checks them against the floors below.
 
 Floors are deliberately conservative: interpret-mode wall clock on shared
 CI runners is noisy, so the timing floors sit far under the measured
@@ -54,6 +55,15 @@ FLOORS = {
     # is noise-hardened (per-tick floors over interleaved reps, one
     # engine for both modes); measured ~1-2.5%.
     "serving.trace_overhead_max": 0.05,
+    # resilience: the seeded fault storm must never lose a request (every
+    # submission retires, finished or FAILED-with-reason) and every
+    # within-budget request's token stream must match the fault-free run
+    # byte-for-byte.  Both are deterministic: exact-zero gates.
+    "chaos.requests_lost_max": 0,
+    "chaos.token_mismatches_max": 0,
+    # the storm must actually exercise the failure domains — a silently
+    # disarmed injector would green-light a broken recovery path.
+    "chaos.faults_injected_min": 5,
 }
 
 
@@ -70,12 +80,14 @@ def main() -> None:
     ap.add_argument("--prefill", default=str(ROOT / "BENCH_prefill.json"))
     ap.add_argument("--memory", default=str(ROOT / "BENCH_memory.json"))
     ap.add_argument("--serving", default=str(ROOT / "BENCH_serving.json"))
+    ap.add_argument("--chaos", default=str(ROOT / "BENCH_chaos.json"))
     args = ap.parse_args()
 
     decode = _load(pathlib.Path(args.decode))
     prefill = _load(pathlib.Path(args.prefill))
     memory = _load(pathlib.Path(args.memory))
     serving = _load(pathlib.Path(args.serving))
+    chaos = _load(pathlib.Path(args.chaos))
 
     checks = [
         (
@@ -117,6 +129,21 @@ def main() -> None:
             "serving.trace_overhead",
             serving.get("trace_overhead_frac", 1.0),
             "<=", FLOORS["serving.trace_overhead_max"],
+        ),
+        (
+            "chaos.requests_lost",
+            chaos.get("requests_lost", 99),
+            "<=", FLOORS["chaos.requests_lost_max"],
+        ),
+        (
+            "chaos.token_mismatches",
+            chaos.get("token_mismatches", 99),
+            "<=", FLOORS["chaos.token_mismatches_max"],
+        ),
+        (
+            "chaos.faults_injected",
+            chaos.get("faults_injected", {}).get("total_fired", 0),
+            ">=", FLOORS["chaos.faults_injected_min"],
         ),
     ]
     failed = []

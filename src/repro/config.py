@@ -318,6 +318,35 @@ class TrainConfig:
 
 
 @dataclass(frozen=True)
+class ResilienceConfig:
+    """Failure-domain policy for the serving engine (:mod:`repro.resilience`).
+
+    Governs how the engine responds to step faults — injected or real:
+    kernel exceptions and non-finite logits re-run down the degradation
+    ladder; ladder-floor faults restore the implicated sequences from
+    their last checkpoint under a bounded per-request retry budget; a
+    tick watchdog converts silent no-progress into the starvation
+    breaker's forced preemption.
+    """
+
+    #: step faults tolerated per request before it retires as FAILED
+    #: (with a structured reason on ``Request.failure``).
+    failure_budget: int = 3
+    #: base re-admission backoff in ticks after a checkpoint restore;
+    #: doubles with each accumulated failure (exponential backoff).
+    retry_backoff_ticks: int = 2
+    #: committed decode tokens between per-sequence checkpoints (the
+    #: admission checkpoint is always taken).
+    checkpoint_interval: int = 16
+    #: consecutive no-progress ticks (with work still pending) before the
+    #: watchdog fires the starvation breaker.
+    watchdog_ticks: int = 8
+    #: clean decode ticks at a degraded ladder rung before re-promoting
+    #: one rung back toward the configured backend.
+    repromote_after: int = 8
+
+
+@dataclass(frozen=True)
 class ServeConfig:
     max_batch: int = 128
     max_context: int = 524288
@@ -355,3 +384,8 @@ class ServeConfig:
     #: radix prefix cache: page-granular KV reuse across requests that
     #: share a prompt prefix (system prompts, few-shot headers, ...).
     enable_prefix_cache: bool = True
+    # -- failure domains (:mod:`repro.resilience`) ---------------------------
+    #: retry budgets, checkpoint cadence, watchdog and degradation-ladder
+    #: policy; the defaults are always on — they only act when a fault
+    #: (injected or real) actually surfaces.
+    resilience: ResilienceConfig = field(default_factory=ResilienceConfig)

@@ -80,6 +80,16 @@ def main():
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="JSONL destination for --metrics-interval "
                          "(default: stdout)")
+    ap.add_argument("--chaos-seed", type=int, default=None, metavar="SEED",
+                    help="install a seeded FaultInjector running the "
+                         "default fault storm (host-I/O failures, NaN "
+                         "logits, pool exhaustion, device errors, stuck "
+                         "ticks) — see README 'Resilience & fault "
+                         "injection'")
+    ap.add_argument("--chaos-plan", default=None, metavar="PLAN.JSON",
+                    help="JSON fault plan (list of FaultSpec dicts) to "
+                         "inject instead of the default storm; implies "
+                         "--chaos-seed 0 unless given")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -111,6 +121,17 @@ def main():
         hbm_pages=args.hbm_pages,
         host_pages=args.host_pages,
     ), mesh=mesh, trace=trace)
+    injector = None
+    if args.chaos_seed is not None or args.chaos_plan is not None:
+        from repro.resilience import FaultInjector, default_storm, load_plan
+
+        specs = (
+            load_plan(args.chaos_plan) if args.chaos_plan else default_storm()
+        )
+        injector = FaultInjector(specs, seed=args.chaos_seed or 0)
+        eng.set_fault_injector(injector)
+        print(f"chaos: {len(specs)} fault specs armed "
+              f"(seed={args.chaos_seed or 0})")
     rng = np.random.default_rng(0)
     prefixes = [
         rng.integers(0, cfg.vocab_size, args.prefix_len).astype(np.int32)
@@ -153,6 +174,18 @@ def main():
           f"(backend={plan.backend}, "
           f"sparse_prefill={plan.active and cfg.sparse.sparse_prefill})")
     print(f"metrics: {eng.metrics.format_snapshot()}")
+    if injector is not None:
+        snap = eng.metrics.snapshot()
+        failed = [r for r in done if r.status == "failed"]
+        print(f"chaos: injected={injector.snapshot()} "
+              f"retries={snap['retries']:.0f} "
+              f"restores={snap['checkpoints_restored']:.0f} "
+              f"degradations={snap['degradations']:.0f} "
+              f"watchdog={snap['watchdog_fires']:.0f}")
+        for r in failed:
+            print(f"chaos: request {r.req_id} FAILED: {r.failure}")
+        lost = args.requests - len(done)
+        assert lost == 0, f"chaos: {lost} requests lost (never retired)"
     known = eng.prefix_cache.pages() if eng.prefix_cache else set()
     leaks = eng.pool.assert_consistent(known_pins=known)
     assert not leaks, f"leaked pages at drain: {leaks}"

@@ -54,8 +54,28 @@ class MemoryManager:
         self.prefetched: Set[int] = set()
         #: seq_id -> consecutive ticks its stall's miss-promote failed.
         self._starved: Dict[int, int] = {}
+        #: optional :class:`~repro.resilience.FaultInjector` — installed by
+        #: ``Engine.set_fault_injector``; ``None`` leaves every I/O path
+        #: untouched.
+        self.fault = None
         pool.set_callbacks(self._on_demote, self._on_promote,
                            self._on_drop_host)
+
+    def _io_fault(self, op: str, owners):
+        """Fault-injection gate for host-tier page I/O.  Raises
+        :class:`~repro.resilience.HostIOError` BEFORE any migration state
+        mutates — the page's bytes stay wherever they were, so an injected
+        I/O failure can never lose data, only delay it."""
+        if self.fault is None:
+            return
+        sid = owners[0][0] if owners else None
+        try:
+            self.fault.check_raise(
+                "host_io", tick=self.metrics.ticks, seq_id=sid, detail=op
+            )
+        except Exception:
+            self.metrics.on_host_io_error(op)
+            raise
 
     # -- pool migration callbacks (byte movement) ----------------------------
 
@@ -66,6 +86,7 @@ class MemoryManager:
         return self.engine.scheduler.running[seq_id].slot
 
     def _on_demote(self, page: int, owners):
+        self._io_fault("gather", owners)
         entry = self._entry()
         sid0, li0 = owners[0]
         # all owners' rows hold identical bytes (prefix sharing is
@@ -82,6 +103,9 @@ class MemoryManager:
             # SNAPSHOT: no live rows were poisoned; the forking sequence's
             # bytes arrive via the engine's prefix-KV install.
             return
+        # the injection gate must run before the host_store pop: a fault
+        # raised after it would drop the page's only byte copy.
+        self._io_fault("restore", owners)
         kb, vb = self.host_store.pop(page)
         entry = self._entry()
         for sid, li in owners:
@@ -100,20 +124,34 @@ class MemoryManager:
             if self.pool.tier_of(page) != HOST:
                 self.queue.skipped += 1  # freed or promoted meanwhile
                 continue
+            if self.fault is not None and self.fault.fires(
+                "promote_delay", self.metrics.ticks
+            ):
+                # injected slow host link: the staged promotion sits out
+                # this tick and retries on the next drain.
+                self.queue.requeue(page, kind)
+                continue
             if kind == PrefetchQueue.MISS:
                 try:
                     self.pool.promote_for_miss(page)
                     self.queue.applied += 1
                 except PoolExhausted:
-                    # shield covers the whole budget; retry next tick once
-                    # other sequences commit/retire.
+                    # shield covers the whole budget (or the host link
+                    # failed — HostIOError subclasses PoolExhausted); retry
+                    # next tick once other sequences commit/retire.
                     self.queue.requeue(page, kind)
-            elif self.pool.prefetch_promote(page):
-                self.prefetched.add(page)
-                self.metrics.on_prefetch_staged()
-                self.queue.applied += 1
             else:
-                self.queue.skipped += 1
+                try:
+                    ok = self.pool.prefetch_promote(page)
+                except PoolExhausted:     # injected host-I/O failure
+                    self.queue.requeue(page, kind)
+                    continue
+                if ok:
+                    self.prefetched.add(page)
+                    self.metrics.on_prefetch_staged()
+                    self.queue.applied += 1
+                else:
+                    self.queue.skipped += 1
         # starvation accounting: a stalled sequence whose missing pages are
         # still host-resident after the drain made no progress this tick.
         self._starved = {

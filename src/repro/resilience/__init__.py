@@ -1,0 +1,46 @@
+"""Fault injection + failure-domain hardening for the serving engine.
+
+``FaultInjector`` (seeded, scheduleable fault plans threaded through the
+memory manager, page pool, backend dispatch and scheduler clock) plus the
+records the engine's failure domains run on: per-sequence checkpoints,
+structured failure reasons, and the typed faults the degradation ladder
+catches.  Attach with ``Engine.set_fault_injector``; see
+``benchmarks/chaos_bench.py`` for the invariants this layer guarantees.
+"""
+from repro.resilience.failure import (
+    FAIL_DEVICE,
+    FAIL_HOST_IO,
+    FAIL_SAMPLER,
+    Checkpoint,
+    FailureInfo,
+)
+from repro.resilience.inject import (
+    DEVICE_FAULTS,
+    SITES,
+    FaultInjector,
+    FaultSpec,
+    HostIOError,
+    InjectedDeviceError,
+    InjectedFault,
+    default_storm,
+    dump_plan,
+    load_plan,
+)
+
+__all__ = [
+    "Checkpoint",
+    "DEVICE_FAULTS",
+    "FAIL_DEVICE",
+    "FAIL_HOST_IO",
+    "FAIL_SAMPLER",
+    "FailureInfo",
+    "FaultInjector",
+    "FaultSpec",
+    "HostIOError",
+    "InjectedDeviceError",
+    "InjectedFault",
+    "SITES",
+    "default_storm",
+    "dump_plan",
+    "load_plan",
+]

@@ -26,9 +26,10 @@ config is enabled for the engine's max_context.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from contextlib import nullcontext
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -58,8 +59,16 @@ from repro.obs.trace import (
     PID_SCHED,
     TraceRecorder,
 )
+from repro.resilience import (
+    DEVICE_FAULTS,
+    FAIL_DEVICE,
+    FAIL_SAMPLER,
+    Checkpoint,
+    FailureInfo,
+    FaultInjector,
+)
 from repro.serving.metrics import ServingMetrics
-from repro.serving.sampler import sample
+from repro.serving.sampler import SamplerAnomaly, finite_mask, sample
 from repro.serving.scheduler import (
     AdmitDecision,
     ChunkPlan,
@@ -72,7 +81,29 @@ from repro.serving.scheduler import (
 
 
 class EngineStalled(RuntimeError):
-    """``run_until_done`` exhausted its tick budget with work still queued."""
+    """``run_until_done`` exhausted its tick budget with work still queued.
+
+    Carries a post-mortem: ``diagnostics`` (queue depths, per-sequence
+    phase / slot / tier residency / retry state, pool occupancy, the last
+    metrics snapshot) so a stall can be analyzed without re-running under
+    ``--trace``, and ``retired`` — the requests that DID complete during
+    the call, which must not be discarded with the exception."""
+
+    def __init__(self, message: str, diagnostics: Optional[Dict] = None,
+                 retired: Optional[List[Request]] = None):
+        super().__init__(message)
+        self.diagnostics = diagnostics or {}
+        self.retired = list(retired or [])
+
+
+#: step faults the degradation ladder catches: injected or real device /
+#: kernel errors plus non-finite sampler input.  Anything else is a bug
+#: and propagates.
+_STEP_FAULTS = DEVICE_FAULTS + (SamplerAnomaly,)
+
+
+def _fault_reason(exc: BaseException) -> str:
+    return FAIL_SAMPLER if isinstance(exc, SamplerAnomaly) else FAIL_DEVICE
 
 
 #: series names of the per-tick counter tracks (see Engine._trace_counters).
@@ -80,6 +111,7 @@ _COUNTER_KEYS = {
     "pool": ("used_pages", "free_pages"),
     "queue": ("waiting", "running"),
     "residency": ("hbm_pages", "host_pages"),
+    "resilience": ("retries", "degradations", "requests_failed"),
 }
 
 
@@ -295,6 +327,20 @@ class Engine:
         # into "sparsity" counter events (see _flush_sparsity_counters).
         self._tel_pending: List[tuple] = []
         self._tel_flush_recorder: Optional[TraceRecorder] = None
+        # -- failure domains (repro.resilience) ------------------------------
+        self.resilience = serve_cfg.resilience
+        #: optional FaultInjector; None keeps every injection point a
+        #: single attribute check (the hot path is byte-for-byte unchanged).
+        self._fault: Optional[FaultInjector] = None
+        #: degradation ladder: rung 0 is the configured backend; later
+        #: rungs are progressively more conservative decode/prefill paths
+        #: (fused -> staged -> reference).  Rung step fns jit lazily.
+        self._ladder = self._build_ladder()
+        self._rung_fns: Dict[int, Tuple] = {0: (self._decode, self._chunk)}
+        self._rung = 0              # current (sticky) operating rung
+        self._clean_ticks = 0       # clean decode ticks since a degradation
+        self._tick_had_fault = False
+        self._idle_ticks = 0        # consecutive no-progress ticks (watchdog)
         self.set_tracing(trace, telemetry=telemetry)
 
     def set_tracing(
@@ -341,6 +387,199 @@ class Engine:
             self.cache.pop("_telemetry", None)
             self.cache.pop("_ptel", None)
 
+    # -- fault injection / degradation ladder (repro.resilience) -------------
+
+    def set_fault_injector(self, injector: Optional[FaultInjector]):
+        """Attach/detach a :class:`~repro.resilience.FaultInjector` on a
+        live engine — the same attach pattern as :meth:`set_tracing`.  The
+        injector threads through the page pool's allocator, the memory
+        manager's host-tier I/O, the decode/prefill dispatch and the tick
+        clock; with ``None`` installed every one of those points is a
+        single ``is not None`` check and no code path changes."""
+        self._fault = injector
+        self.pool.fault_hook = None if injector is None else self._pool_fault
+        if self.memory is not None:
+            self.memory.fault = injector
+
+    def _pool_fault(self, reason: str, need: int):
+        self._fault.check_raise(
+            "pool_alloc", tick=self.metrics.ticks, detail=f"{reason} x{need}"
+        )
+
+    def _build_ladder(self) -> List[Tuple[str, Optional[Dict]]]:
+        """Rungs of ``(name, sparse-config overrides)``; ``None`` = the
+        configured backend as-is.  The reference rung disables the kernel
+        paths entirely — it is the exact oracle every backend is parity-
+        tested against, so it is the safe floor for anomalous steps."""
+        sp = self.cfg.sparse
+        ref = {"backend": "reference", "fused_decode": False,
+               "sparse_prefill": False}
+        if sp.backend == "pallas" and sp.fused_decode:
+            return [("fused", None), ("staged", {"fused_decode": False}),
+                    ("reference", ref)]
+        if sp.backend == "pallas":
+            return [("staged", None), ("reference", ref)]
+        return [(sp.backend, None)]
+
+    def _rung_step_fns(self, rung: int) -> Tuple:
+        """(decode_step, prefill_chunk) jit'd for ``rung``, built lazily.
+        All rungs share the engine's params and cache: the paged KV / store
+        layout is backend-independent (PR 1's byte-identical stores), so a
+        degraded re-run picks up the exact device state the failed attempt
+        would have used."""
+        if rung not in self._rung_fns:
+            _, over = self._ladder[rung]
+            cfg = dataclasses.replace(
+                self.cfg, sparse=dataclasses.replace(self.cfg.sparse, **over)
+            )
+            model = Transformer(cfg)
+            self._rung_fns[rung] = (
+                self._under_mesh(
+                    jax.jit(model.decode_step, donate_argnums=(1,))
+                ),
+                self._under_mesh(
+                    jax.jit(model.prefill_chunk, donate_argnums=(1,))
+                ),
+            )
+        return self._rung_fns[rung]
+
+    def _with_ladder(self, seqs_of, attempt) -> bool:
+        """Run ``attempt(rung)`` under the degradation ladder: a step fault
+        re-runs the attempt at the next rung down (fused -> staged ->
+        reference) within the same tick; re-running is byte-safe because
+        decode KV writes land at the host-authoritative ``seq_len`` and
+        nothing advances until the attempt returns.  Success at a degraded
+        rung makes that rung sticky (re-promotion after
+        ``resilience.repromote_after`` clean ticks).  At the ladder floor
+        the fault is charged to ``seqs_of(exc)`` — each implicated sequence
+        restores from its last checkpoint or, past its failure budget,
+        retires as FAILED.  -> True when the attempt ran to completion."""
+        rung = self._rung
+        while True:
+            try:
+                attempt(rung)
+            except _STEP_FAULTS as exc:
+                self._tick_had_fault = True
+                if rung + 1 < len(self._ladder):
+                    rung += 1
+                    self.metrics.on_degrade(
+                        self._ladder[rung][0], _fault_reason(exc)
+                    )
+                    continue
+                self._on_step_failure(seqs_of(exc), exc)
+                return False
+            break
+        if rung != self._rung:
+            self._rung = rung
+            self._clean_ticks = 0
+        return True
+
+    def _on_step_failure(self, seqs: List[SeqState], exc: BaseException):
+        """Ladder floor: charge the fault to each implicated sequence's
+        failure budget — restore from checkpoint with exponential backoff,
+        or retire as FAILED once the budget is spent."""
+        reason = _fault_reason(exc)
+        for seq in list(seqs):
+            if self.scheduler.running.get(seq.seq_id) is not seq:
+                continue
+            seq.retries += 1
+            self.metrics.on_retry(seq.seq_id, reason)
+            if seq.retries > self.resilience.failure_budget:
+                self._fail_seq(seq, reason, exc)
+            else:
+                self._restore_seq(seq)
+
+    def _restore_seq(self, seq: SeqState):
+        """Re-admit ``seq`` from its last checkpoint: output truncated to
+        the watermark, pages freed, re-queued behind an exponential
+        backoff.  Token-identical by construction — sampling is keyed by
+        (seq_id, position) and the resume prefill rebuilds KV exactly."""
+        if self.memory is not None:
+            self.memory.forget(seq.seq_id)
+        slot = seq.slot
+        backoff = self.resilience.retry_backoff_ticks * (
+            2 ** max(0, seq.retries - 1)
+        )
+        self.scheduler.restore(seq, self.metrics.ticks + backoff)
+        if slot >= 0:
+            self.slots[slot] = None
+            self._seq_len[slot] = 0
+        seq.slot = -1
+
+    def _fail_seq(self, seq: SeqState, reason: str, exc: BaseException):
+        """Failure budget exhausted: retire as FAILED with a structured
+        reason instead of poisoning the tick loop."""
+        if self.memory is not None:
+            self.memory.forget(seq.seq_id)
+        slot = seq.slot
+        self.scheduler.fail(seq, reason)
+        if slot >= 0:
+            self.slots[slot] = None
+            self._seq_len[slot] = 0
+        seq.slot = -1
+        req = seq.req
+        req.done = True
+        req.status = "failed"
+        req.failure = FailureInfo(
+            reason=reason, detail=str(exc),
+            tick=self.metrics.ticks, retries=seq.retries,
+        ).as_dict()
+        self.finished.append(req)
+
+    def _take_checkpoint(self, seq: SeqState):
+        """O(1) restore point: the committed-output watermark is all a
+        restore needs (page bytes recompute exactly; see
+        :mod:`repro.resilience.failure`)."""
+        seq.checkpoint = Checkpoint(
+            n_output=len(seq.req.output),
+            n_pages=len(self.pool.table(seq.seq_id).physical),
+            tick=self.metrics.ticks,
+        )
+        self.metrics.on_checkpoint(seq.seq_id)
+
+    def diagnostics(self) -> Dict:
+        """Post-mortem state dump (attached to :class:`EngineStalled` and
+        usable any time): queue depths, per-sequence phase / slot / retry /
+        tier residency, pool occupancy, ladder rung, metrics snapshot."""
+        seqs = {}
+        for sid, seq in self.scheduler.running.items():
+            d = {
+                "phase": seq.state,
+                "slot": seq.slot,
+                "prefilled": int(seq.prefilled),
+                "output_tokens": len(seq.req.output),
+                "retries": seq.retries,
+            }
+            if self.memory is not None:
+                d["stalled"] = sid in self.memory.stalled
+                d["host_resident_pages"] = len(
+                    self.pool.host_resident_logical(sid)
+                )
+            seqs[sid] = d
+        diag = {
+            "tick": self.metrics.ticks,
+            "waiting": len(self.scheduler.waiting),
+            "running": len(self.scheduler.running),
+            "in_backoff": [
+                [s.seq_id, s.retry_after]
+                for s in self.scheduler.waiting
+                if s.retry_after > self.metrics.ticks
+            ],
+            "rung": self._ladder[self._rung][0],
+            "idle_ticks": self._idle_ticks,
+            "pool": {
+                "used_pages": self.pool.used_pages,
+                "free_pages": self.pool.free_pages,
+            },
+            "sequences": seqs,
+            "last_snapshot": self.metrics.snapshot(),
+        }
+        if self._fault is not None:
+            diag["faults_injected"] = self._fault.snapshot()
+        return diag
+
+    # -- sampling -------------------------------------------------------------
+
     def _sample_batch(self, base_key, seq_ids, positions, logits):
         t, k, p = self.serve.temperature, self.serve.top_k, self.serve.top_p
 
@@ -348,7 +587,9 @@ class Engine:
             kk = jax.random.fold_in(jax.random.fold_in(base_key, sid), pos)
             return sample(kk, lg[None], t, k, p)[0]
 
-        return jax.vmap(one)(seq_ids, positions, logits)
+        # the finite mask rides the same host transfer as the tokens, so
+        # non-finite detection is free on the fault-free path.
+        return jax.vmap(one)(seq_ids, positions, logits), finite_mask(logits)
 
     def _shard_ctx(self):
         if self.mesh is None:
@@ -442,8 +683,30 @@ class Engine:
         if seq.state != PREFILL:      # preempted after planning
             return
         if not self.scheduler._seq_chunkable(seq):
-            self._prefill_monolithic(seq)
+            # monolithic prefill has no kernel rungs to fall back to; a
+            # step fault goes straight to the per-sequence failure budget.
+            try:
+                self._prefill_monolithic(seq)
+            except _STEP_FAULTS as exc:
+                self._tick_had_fault = True
+                self._on_step_failure([seq], exc)
             return
+        self._with_ladder(
+            lambda exc: [seq],
+            lambda rung: self._attempt_chunk(rung, ch),
+        )
+
+    def _attempt_chunk(self, rung: int, ch: ChunkPlan):
+        """One ladder attempt at ``ch``: chunk prefill writes KV at explicit
+        offsets, so a degraded re-run of the same chunk is byte-identical
+        (``on_prefill`` may count the recomputed tokens twice — that is
+        work genuinely performed)."""
+        seq = ch.seq
+        if self._fault is not None:
+            # raised BEFORE dispatch so the donated cache stays valid.
+            self._fault.check_raise(
+                "prefill", tick=self.metrics.ticks, seq_id=seq.seq_id
+            )
         n = len(ch.tokens)
         buf = np.zeros((self._chunk_len,), np.int32)
         buf[:n] = ch.tokens
@@ -456,7 +719,7 @@ class Engine:
             else nullcontext()
         )
         with ctx:
-            logits, self.cache = self._chunk(
+            logits, self.cache = self._rung_step_fns(rung)[1](
                 self.params, self.cache, np.int32(seq.slot), buf,
                 np.int32(ch.offset), np.int32(n),
             )
@@ -476,6 +739,10 @@ class Engine:
         """Fallback for models without chunked-prefill support (recurrent /
         local-attention stacks) and prefix-embedding requests: single-shot
         prefill, scattered into the batch slot."""
+        if self._fault is not None:
+            self._fault.check_raise(
+                "prefill", tick=self.metrics.ticks, seq_id=seq.seq_id
+            )
         req = seq.req
         tokens = jnp.asarray(seq.prefill_tokens, jnp.int32)[None]
         prefix = (
@@ -524,7 +791,32 @@ class Engine:
 
     def _finish_prefill(self, seq: SeqState, logits: jax.Array):
         """Prompt complete: rebuild the slot's centroid store, publish the
-        prompt's pages to the prefix cache, emit the first token."""
+        prompt's pages to the prefix cache, emit the first token.
+
+        The finite gate runs FIRST: poisoned prompt logits must raise
+        :class:`SamplerAnomaly` before the refresh / prefix-cache insert
+        side effects, so a ladder re-run of the chunk starts from the same
+        state the failed attempt saw."""
+        if seq.replay:
+            # resumed: the first committed token is the next decode input;
+            # its sample was already taken in the original run, so the
+            # prompt logits are discarded (the remaining replay tokens are
+            # drained by _decode_tick, one forced input per tick).
+            tok = seq.replay.pop(0)
+            self.metrics.on_replay_token(seq.seq_id)
+            resumed = True
+        else:
+            first, fin = self._sample(
+                self.key,
+                np.asarray([seq.seq_id], np.int32),
+                np.asarray([len(seq.req.output)], np.int32),
+                logits,
+            )
+            if not bool(np.asarray(fin)[0]):
+                self.metrics.on_sampler_anomaly(1)
+                raise SamplerAnomaly([seq.seq_id], detail="prefill logits")
+            tok = int(np.asarray(first)[0])
+            resumed = False
         if self.scheduler._seq_chunkable(seq):
             if self.model.use_sparse(self.max_context):
                 self.cache = self._refresh(
@@ -538,17 +830,7 @@ class Engine:
                     self.prefix_cache.insert(
                         tokens, pages, self._page_snapshot_fn(seq.slot, n_pages)
                     )
-        if seq.resume_token is not None:
-            tok = seq.resume_token          # resumed: replay, don't re-sample
-            seq.resume_token = None
-        else:
-            first = self._sample(
-                self.key,
-                np.asarray([seq.seq_id], np.int32),
-                np.asarray([len(seq.req.output)], np.int32),
-                logits,
-            )
-            tok = int(np.asarray(first)[0])
+        if not resumed:
             seq.req.output.append(tok)
             self.metrics.on_first_token(seq.seq_id)
             self.metrics.on_decode_token(seq.seq_id)
@@ -556,6 +838,10 @@ class Engine:
         seq.state = DECODE
         if self._is_finished(seq):
             self._retire(seq)
+        else:
+            # checkpoint on decode entry: every restorable sequence carries
+            # a watermark from its first committed token on.
+            self._take_checkpoint(seq)
 
     def _page_snapshot_fn(self, slot: int, n_pages: int):
         """Lazy host snapshot of one slot's prompt-span KV, sliced per page
@@ -604,12 +890,47 @@ class Engine:
         self.finished.append(seq.req)
         seq.slot = -1
 
-    def _decode_tick(self):
+    def _attempt_decode(self, rung: int, active: List[SeqState], res: Dict):
+        """One ladder attempt at the batched decode step.  Tokens and the
+        finite mask land in ``res`` BEFORE any anomaly raises: at the
+        ladder floor the healthy rows still commit while only the poisoned
+        sequences go to the failure budget."""
+        if self._fault is not None:
+            # raised BEFORE dispatch so the donated cache is never
+            # invalidated by an injected device error.
+            self._fault.check_raise("decode", tick=self.metrics.ticks)
+        self.cache = dict(self.cache)
+        self.cache["seq_len"] = jnp.asarray(self._seq_len)
+        logits, self.cache = self._rung_step_fns(rung)[0](
+            self.params, self.cache, jnp.asarray(self._tokens_buf)
+        )
+        if self._fault is not None:
+            rows = self._fault.poison_rows(
+                self.metrics.ticks, [(s.seq_id, s.slot) for s in active]
+            )
+            if rows:
+                lg = np.array(logits)
+                lg[rows, :] = np.nan
+                logits = jnp.asarray(lg)
+        sids = np.zeros((self.max_batch,), np.int32)
+        poss = np.zeros((self.max_batch,), np.int32)
+        for s in active:
+            sids[s.slot] = s.seq_id
+            poss[s.slot] = len(s.req.output)
+        toks, fin = self._sample(self.key, sids, poss, logits)
+        res["tokens"] = np.asarray(toks)
+        res["finite"] = np.asarray(fin)
+        bad = [s.seq_id for s in active if not res["finite"][s.slot]]
+        if bad:
+            self.metrics.on_sampler_anomaly(len(bad))
+            raise SamplerAnomaly(bad)
+
+    def _decode_tick(self) -> int:
         active = [
             s for s in self.slots if s is not None and s.state == DECODE
         ]
         if not active:
-            return
+            return 0
         mem = self.memory
         if mem is not None:
             # {logical: physical} pages whose bytes sit in the host tier at
@@ -619,17 +940,21 @@ class Engine:
                 s.seq_id: mem.pool.host_resident_logical(s.seq_id)
                 for s in active
             }
-        self.cache = dict(self.cache)
-        self.cache["seq_len"] = jnp.asarray(self._seq_len)
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(self._tokens_buf)
+        res: Dict[str, np.ndarray] = {}
+        self._with_ladder(
+            lambda exc: (
+                [s for s in active if s.seq_id in exc.seq_ids]
+                if isinstance(exc, SamplerAnomaly)
+                else list(active)
+            ),
+            lambda rung: self._attempt_decode(rung, active, res),
         )
-        sids = np.zeros((self.max_batch,), np.int32)
-        poss = np.zeros((self.max_batch,), np.int32)
-        for s in active:
-            sids[s.slot] = s.seq_id
-            poss[s.slot] = len(s.req.output)
-        nt = np.asarray(self._sample(self.key, sids, poss, logits))
+        if "tokens" not in res:
+            # a device fault reached the ladder floor before any attempt
+            # produced tokens: every implicated sequence was restored or
+            # failed above; there is nothing to commit this tick.
+            return len(active)
+        nt, fin = res["tokens"], res["finite"]
         if mem is not None:
             sel = np.asarray(self.cache["_sel_pages"])
             pre = np.asarray(self.cache["_pre_pages"])
@@ -651,6 +976,10 @@ class Engine:
                 )
         for seq in active:
             slot = seq.slot
+            if self.scheduler.running.get(seq.seq_id) is not seq or slot < 0:
+                continue    # restored / failed at the ladder floor
+            if not fin[slot]:
+                continue    # anomalous row (already charged above)
             if mem is not None and not mem.on_step(
                 seq,
                 np.nonzero(sel[slot])[0],
@@ -662,6 +991,17 @@ class Engine:
                 # the missing pages are promoted.  Only this sequence
                 # stalls; the rest of the batch commits below.
                 continue
+            if seq.replay:
+                # resume replay: this step rebuilt one committed token's KV
+                # through the decode path (byte-identical by induction); the
+                # sampled token is discarded and the next committed token is
+                # forced as input.  Once the queue drains, the following
+                # step's sample lands at position len(output) with the same
+                # fold_in key the original run would have used.
+                self._tokens_buf[slot] = seq.replay.pop(0)
+                self._seq_len[slot] += 1
+                self.metrics.on_replay_token(seq.seq_id)
+                continue
             tok = int(nt[slot])
             seq.req.output.append(tok)
             self._tokens_buf[slot] = tok
@@ -669,10 +1009,18 @@ class Engine:
             self.metrics.on_decode_token(seq.seq_id)
             if self._is_finished(seq):
                 self._retire(seq)
+            else:
+                ck = seq.checkpoint
+                if ck is None or (
+                    len(seq.req.output) - ck.n_output
+                    >= self.resilience.checkpoint_interval
+                ):
+                    self._take_checkpoint(seq)
         # host lengths are authoritative (the batched step incremented
         # every slot, including ones still prefilling or stalled).
         self.cache = dict(self.cache)
         self.cache["seq_len"] = jnp.asarray(self._seq_len)
+        return len(active)
 
     def step(self) -> int:
         """One engine tick: admit, prefill chunks, decode, retire.
@@ -721,6 +1069,10 @@ class Engine:
             ("pool", PID_MEMORY, (self.pool.used_pages, self.pool.free_pages)),
             ("queue", PID_SCHED,
              (len(self.scheduler.waiting), len(self.scheduler.running))),
+            ("resilience", PID_ENGINE,
+             (self.metrics.retries,
+              sum(self.metrics.degradations.values()),
+              len(self.metrics.requests_failed))),
         ) + ((
             ("residency", PID_MEMORY,
              (self.metrics.hbm_resident_pages,
@@ -731,7 +1083,81 @@ class Engine:
                 keys = _COUNTER_KEYS[name]
                 t.counter(name, dict(zip(keys, values)), pid=pid)
 
+    def _progress_sig(self) -> tuple:
+        """Monotone counters that move whenever the engine does useful (or
+        at least state-changing) work in a tick; the watchdog compares the
+        signature across the tick to detect silent no-progress loops."""
+        m = self.metrics
+        return (
+            m.decode_tokens,
+            m.prefill_tokens_computed,
+            m.prefix_hit_tokens,
+            len(self.finished),
+            m.preemptions,
+            m.checkpoints_restored,
+            m.replayed_tokens,
+            len(m.requests_failed),
+            self.memory.queue.applied if self.memory is not None else 0,
+        )
+
+    def _watchdog_break(self):
+        """No-progress ticks hit ``resilience.watchdog_ticks``: force the
+        latest-arrival running sequence out (the same ops as the memory
+        starvation breaker) so whatever it is pinning frees up.  A no-op
+        when nothing is running (e.g. every sequence sits in backoff)."""
+        running = [s for s in self.slots if s is not None]
+        if not running:
+            return
+        victim = max(running, key=lambda s: s.arrival)
+        if self.trace is not None:
+            self.trace.instant(
+                "engine.watchdog", PID_ENGINE,
+                args={"victim_seq": victim.seq_id,
+                      "idle_ticks": self.resilience.watchdog_ticks},
+            )
+        self.scheduler.preempt(victim)
+        if self.memory is not None:
+            self.memory.forget(victim.seq_id)
+        self.slots[victim.slot] = None
+        self._seq_len[victim.slot] = 0
+        victim.slot = -1
+
     def _step_body(self) -> int:
+        self._tick_had_fault = False
+        had_work = self.scheduler.has_work
+        sig0 = self._progress_sig()
+        stuck = self._fault is not None and self._fault.fires(
+            "tick_stuck", self.metrics.ticks
+        )
+        if stuck:
+            # injected stuck clock: the whole tick body is skipped — only
+            # the idle accounting below runs, which is exactly what the
+            # watchdog must catch.
+            decoded = 0
+        else:
+            decoded = self._tick_work()
+            if self._rung > 0 and decoded and not self._tick_had_fault:
+                # clean decode tick on a degraded rung: count toward
+                # re-promotion one rung up.
+                self._clean_ticks += 1
+                if self._clean_ticks >= self.resilience.repromote_after:
+                    self._rung -= 1
+                    self._clean_ticks = 0
+                    self.metrics.on_repromote(self._ladder[self._rung][0])
+        if had_work and self._progress_sig() == sig0:
+            self._idle_ticks += 1
+            if self._idle_ticks >= self.resilience.watchdog_ticks:
+                self.metrics.on_watchdog(self._idle_ticks)
+                self._idle_ticks = 0
+                self._watchdog_break()
+        else:
+            self._idle_ticks = 0
+        self.metrics.ticks += 1
+        return len([s for s in self.slots if s is not None])
+
+    def _tick_work(self) -> int:
+        """admit -> prefill chunks -> decode -> retire (one tick's work);
+        -> the number of decoding slots stepped."""
         if self.memory is not None:
             # apply staged host->HBM promotions (stall targets first, then
             # predictions into free headroom) and rebuild the demotion
@@ -790,13 +1216,12 @@ class Engine:
             seq.slot = -1
         if self.trace is not None:
             with self.trace.span("engine.decode", PID_ENGINE):
-                self._decode_tick()
+                decoded = self._decode_tick()
         else:
-            self._decode_tick()
+            decoded = self._decode_tick()
         if self.memory is not None:
             self.memory.end_tick()
-        self.metrics.ticks += 1
-        return len([s for s in self.slots if s is not None])
+        return decoded
 
     def run_until_done(
         self,
@@ -821,6 +1246,8 @@ class Engine:
                 raise EngineStalled(
                     f"max_ticks={max_ticks} exhausted with "
                     f"{len(self.scheduler.waiting)} queued and "
-                    f"{len(self.scheduler.running)} running requests"
+                    f"{len(self.scheduler.running)} running requests",
+                    diagnostics=self.diagnostics(),
+                    retired=list(self.finished[start:]),
                 )
         return list(self.finished[start:])

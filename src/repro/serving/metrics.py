@@ -14,9 +14,9 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
-from repro.obs.trace import PID_MEMORY, PID_SEQ, TraceRecorder
+from repro.obs.trace import PID_ENGINE, PID_MEMORY, PID_SEQ, TraceRecorder
 
 
 @dataclass
@@ -32,6 +32,8 @@ class RequestMetrics:
     #: (tiered KV memory only; see :mod:`repro.memory`).
     stalls: int = 0
     stall_time: float = 0.0
+    #: step-fault retries charged against this request's failure budget.
+    retries: int = 0
     t_submit: Optional[float] = None
     t_admit: Optional[float] = None          # first admission
     t_first_token: Optional[float] = None
@@ -109,6 +111,18 @@ class ServingMetrics:
         self.migration_bytes = 0
         self.stalls = 0
         self._stall_start: Dict[int, float] = {}
+        # -- failure domains (repro.resilience); always present so the
+        # snapshot carries the counters whether or not faults ever fire --
+        self.retries = 0
+        self.replayed_tokens = 0
+        self.checkpoints_taken = 0
+        self.checkpoints_restored = 0
+        self.degradations: Dict[str, int] = {}      # rung name -> count
+        self.repromotions = 0
+        self.watchdog_fires = 0
+        self.sampler_anomalies = 0
+        self.host_io_errors = 0
+        self.requests_failed: Dict[int, str] = {}   # req_id -> reason
 
     def _req(self, req_id: int) -> RequestMetrics:
         return self.requests.setdefault(req_id, RequestMetrics(req_id))
@@ -238,6 +252,74 @@ class ServingMetrics:
             self.trace.end("seq.stall", PID_SEQ, req_id)
             self._stall_open.discard(req_id)
 
+    # -- failure domains (repro.resilience) ----------------------------------
+
+    def on_retry(self, req_id: int, reason: str):
+        self._req(req_id).retries += 1
+        self.retries += 1
+        if self.trace is not None:
+            self.trace.instant(
+                "seq.retry", PID_SEQ, req_id, args={"reason": reason}
+            )
+
+    def on_checkpoint(self, req_id: int):
+        self.checkpoints_taken += 1
+
+    def on_replay_token(self, req_id: int):
+        """A resumed sequence rebuilt one committed token's KV through the
+        decode path (forced input, sample discarded)."""
+        self.replayed_tokens += 1
+
+    def on_restore(self, req_id: int):
+        """Checkpoint restore: the request re-queues (backoff) with its
+        output truncated to the last checkpoint's watermark."""
+        self.checkpoints_restored += 1
+        self._set_phase(req_id, "seq.queued")
+        if self.trace is not None:
+            self.trace.instant("seq.restore", PID_SEQ, req_id)
+
+    def on_degrade(self, rung: str, reason: str):
+        self.degradations[rung] = self.degradations.get(rung, 0) + 1
+        if self.trace is not None:
+            self.trace.instant(
+                "engine.degrade", PID_ENGINE,
+                args={"rung": rung, "reason": reason},
+            )
+
+    def on_repromote(self, rung: str):
+        self.repromotions += 1
+        if self.trace is not None:
+            self.trace.instant(
+                "engine.repromote", PID_ENGINE, args={"rung": rung}
+            )
+
+    def on_watchdog(self, idle_ticks: int):
+        self.watchdog_fires += 1
+        if self.trace is not None:
+            self.trace.instant(
+                "engine.watchdog", PID_ENGINE,
+                args={"idle_ticks": idle_ticks},
+            )
+
+    def on_sampler_anomaly(self, n: int = 1):
+        self.sampler_anomalies += n
+
+    def on_host_io_error(self, op: str):
+        self.host_io_errors += 1
+        if self.trace is not None:
+            self.trace.instant("mem.io_error", PID_MEMORY, args={"op": op})
+
+    def on_request_failed(self, req_id: int, reason: str):
+        """Failure budget exhausted: terminal, with a structured reason.
+        The request is NOT counted as finished (t_finish stays unset) so
+        latency aggregates only cover completed requests."""
+        self.requests_failed[req_id] = reason
+        self._set_phase(req_id, None)
+        if self.trace is not None:
+            self.trace.instant(
+                "seq.failed", PID_SEQ, req_id, args={"reason": reason}
+            )
+
     # -- device-side sparsity telemetry (repro.obs) --------------------------
 
     def on_sparsity(self, tel, slots, owned=False):
@@ -252,7 +334,7 @@ class ServingMetrics:
 
     # -- aggregation ---------------------------------------------------------
 
-    def snapshot(self) -> Dict[str, float]:
+    def snapshot(self) -> Dict[str, Any]:
         """Aggregate view over finished requests (plus fleet counters)."""
         done = [r for r in self.requests.values() if r.t_finish is not None]
         ttfts = [r.ttft for r in done if r.ttft is not None]
@@ -281,6 +363,23 @@ class ServingMetrics:
         snap["tpot_mean"] = _mean(tpots)
         snap["tpot_p95"] = _pct(tpots, 0.95)
         snap["queue_time_mean"] = _mean(queues)
+        # failure counters are ALWAYS present too (zero / empty when no
+        # faults fired) — chaos tooling and the bench gate key on them.
+        failed_by_reason: Dict[str, int] = {}
+        for reason in self.requests_failed.values():
+            failed_by_reason[reason] = failed_by_reason.get(reason, 0) + 1
+        snap["retries"] = self.retries
+        snap["replayed_tokens"] = self.replayed_tokens
+        snap["checkpoints_taken"] = self.checkpoints_taken
+        snap["checkpoints_restored"] = self.checkpoints_restored
+        snap["degradations"] = sum(self.degradations.values())
+        snap["degradations_by_rung"] = dict(self.degradations)
+        snap["repromotions"] = self.repromotions
+        snap["watchdog_fires"] = self.watchdog_fires
+        snap["sampler_anomalies"] = self.sampler_anomalies
+        snap["host_io_errors"] = self.host_io_errors
+        snap["requests_failed"] = len(self.requests_failed)
+        snap["failed_by_reason"] = failed_by_reason
         if self.sparsity is not None:
             snap.update(self.sparsity.snapshot())
         if self.tiering:

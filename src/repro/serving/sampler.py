@@ -1,8 +1,58 @@
-"""Top-k / top-p / temperature sampling (Qwen3 recommended defaults)."""
+"""Top-k / top-p / temperature sampling (Qwen3 recommended defaults).
+
+Hardened against non-finite logits: a NaN/Inf row would otherwise sail
+silently through the top-p softmax (NaN propagates through sort/cumsum and
+``categorical`` still returns *a* token).  :func:`finite_mask` is the
+jit-safe detector (the engine folds it into its batched sampling step so
+detection rides the existing host sync), and :func:`guarded_sample` is the
+host-level convenience that raises a typed :class:`SamplerAnomaly` the
+engine's degradation ladder catches.
+"""
 from __future__ import annotations
+
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+
+
+class SamplerAnomaly(RuntimeError):
+    """Non-finite logits reached the sampler.
+
+    Carries the implicated ``seq_ids`` so the engine can restore exactly
+    the poisoned sequences and commit the rest of the batch.
+    """
+
+    def __init__(self, seq_ids: Sequence[int], detail: str = ""):
+        self.seq_ids = list(seq_ids)
+        msg = f"non-finite logits for sequences {self.seq_ids}"
+        super().__init__(f"{msg} ({detail})" if detail else msg)
+
+
+def finite_mask(logits: jax.Array) -> jax.Array:
+    """Per-row all-finite mask: ``[B, V] -> [B]`` bool (jit-safe)."""
+    return jnp.isfinite(logits).all(axis=-1)
+
+
+def guarded_sample(
+    key: jax.Array,
+    logits: jax.Array,          # [B, V]
+    temperature: float = 0.6,
+    top_k: int = 20,
+    top_p: float = 0.95,
+    seq_ids: Sequence[int] = (),
+) -> jax.Array:
+    """:func:`sample`, but raise :class:`SamplerAnomaly` on non-finite
+    rows instead of sampling garbage.  ``seq_ids`` labels the rows (row
+    index is used when omitted)."""
+    bad = [
+        int(i)
+        for i in jnp.nonzero(jnp.logical_not(finite_mask(logits)))[0]
+    ]
+    if bad:
+        ids = [seq_ids[i] if i < len(seq_ids) else i for i in bad]
+        raise SamplerAnomaly(ids, detail=f"{len(bad)} poisoned rows")
+    return sample(key, logits, temperature, top_k, top_p)
 
 
 def sample(

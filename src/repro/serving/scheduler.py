@@ -45,9 +45,16 @@ class Request:
     # filled by the engine:
     output: List[int] = field(default_factory=list)
     done: bool = False
+    #: "ok" | "failed" — "failed" when the request exhausted its failure
+    #: budget and was retired without completing (see repro.resilience).
+    status: str = "ok"
+    #: structured failure record (reason / detail / tick / retries).
+    failure: Optional[Dict[str, Any]] = None
 
 
 QUEUED, PREFILL, DECODE, FINISHED = "queued", "prefill", "decode", "finished"
+#: terminal state for a request retired by the failure budget.
+FAILED = "failed"
 
 
 @dataclass
@@ -65,9 +72,22 @@ class SeqState:
     prefilled: int = 0
     #: prefix-cache tokens installed at this admission (skipped compute).
     prefix_tokens: int = 0
-    #: pending next input token after a resume (the last sampled token,
-    #: whose KV is not in the cache yet) — replaces first-token sampling.
-    resume_token: Optional[int] = None
+    #: committed output tokens to replay through the DECODE path after a
+    #: resume (preemption or failure-domain restore): fed as forced inputs
+    #: one per tick, samples discarded, so the regenerated KV is
+    #: byte-identical to the original decode-time KV.  Recomputing them via
+    #: chunked prefill instead is NOT exact when sparse decode is active —
+    #: dense prefill and sparse decode see different hidden states for the
+    #: same token, and the drift can flip later samples.
+    replay: List[int] = field(default_factory=list)
+    #: last checkpoint (:class:`repro.resilience.Checkpoint`) — the
+    #: committed-output watermark a failure-domain restore truncates to.
+    checkpoint: Optional[Any] = None
+    #: step-fault retries consumed (counts toward the failure budget).
+    retries: int = 0
+    #: earliest tick this sequence may be re-admitted after a restore
+    #: (exponential backoff); admission skips it without blocking peers.
+    retry_after: int = 0
 
     def __post_init__(self):
         if self.prefill_tokens is None:
@@ -175,8 +195,14 @@ class Scheduler:
 
     def _admit(self, free_slots: List[int]) -> List[AdmitDecision]:
         out: List[AdmitDecision] = []
-        while self.waiting and free_slots:
-            seq = self.waiting[0]
+        idx = 0
+        while idx < len(self.waiting) and free_slots:
+            seq = self.waiting[idx]
+            if seq.retry_after > self.metrics.ticks:
+                # restore backoff: not eligible yet — skip it instead of
+                # head-of-line blocking the queue behind a failing request.
+                idx += 1
+                continue
             tokens = seq.prefill_tokens
             matched, pages, kvs = 0, [], []
             if self.prefix_cache is not None and self._seq_chunkable(seq):
@@ -206,7 +232,7 @@ class Scheduler:
                 # or the host spill tier may be full.  Head-of-line block;
                 # decode progress (or retirement) frees tier room.
                 break
-            self.waiting.pop(0)
+            self.waiting.pop(idx)
             seq.state = PREFILL
             seq.slot = free_slots.pop(0)
             seq.prefilled = matched
@@ -303,22 +329,53 @@ class Scheduler:
         self._preempt(seq)
 
     def _preempt(self, seq: SeqState):
+        self._release(seq)
+        self.metrics.on_preempt(seq.seq_id)
+
+    def _release(self, seq: SeqState):
+        """Free the sequence's pages and re-queue it with its generated
+        output preserved (shared with preemption and the failure-domain
+        restore).  Only the PROMPT re-prefills on resume (and typically
+        re-matches the prefix cache, whose snapshots are the original
+        bytes); the committed output replays through the decode path —
+        see ``SeqState.replay`` for why prefill recompute would not be
+        byte-exact."""
         self.pool.free(seq.seq_id)
         del self.running[seq.seq_id]
-        out = seq.req.output
-        if out:
-            # KV exists for prompt + output[:-1]; the last sampled token is
-            # the pending next input — replay it on resume, don't re-sample.
-            seq.prefill_tokens = np.concatenate(
-                [np.asarray(seq.req.prompt, np.int32),
-                 np.asarray(out[:-1], np.int32)]
-            )
-            seq.resume_token = int(out[-1])
+        seq.prefill_tokens = np.asarray(seq.req.prompt, np.int32)
+        seq.replay = list(seq.req.output)
         seq.state = QUEUED
         seq.prefilled = 0
         seq.prefix_tokens = 0
         self._requeue(seq)
-        self.metrics.on_preempt(seq.seq_id)
+
+    # -- failure domains (repro.resilience) ----------------------------------
+
+    def restore(self, seq: SeqState, eligible_tick: int = 0):
+        """Failure-domain restore: truncate the output to the last
+        checkpoint's watermark and re-queue the request, not eligible for
+        re-admission before ``eligible_tick`` (exponential backoff).  The
+        truncated tokens regenerate byte-identically on re-admission —
+        sampling is keyed by (seq_id, position), and the resume prefill
+        rebuilds KV exactly."""
+        ck = seq.checkpoint
+        out = seq.req.output
+        if ck is not None and len(out) > ck.n_output:
+            del out[ck.n_output:]
+        seq.retry_after = eligible_tick
+        self._release(seq)
+        self.metrics.on_restore(seq.seq_id)
+
+    def fail(self, seq: SeqState, reason: str):
+        """Retire a request as FAILED (failure budget exhausted): free its
+        pages and drop it from the running set with a structured reason —
+        the tick loop keeps serving everyone else."""
+        self.pool.free(seq.seq_id)
+        self.running.pop(seq.seq_id, None)
+        if seq in self.waiting:
+            self.waiting.remove(seq)
+        seq.state = FAILED
+        self.metrics.on_request_failed(seq.seq_id, reason)
 
     # -- retirement ----------------------------------------------------------
 

@@ -332,6 +332,67 @@ def test_forced_miss_stalls_then_recovers(setup):
     ) == []
 
 
+def test_starvation_breaker_preempts_and_recovers_identical(setup):
+    """Deterministic starvation: a forced host-tier miss whose recovery
+    promotes are killed by injected host-I/O faults for consecutive ticks
+    must trip the liveness breaker (forced preemption of the starved
+    sequence), after which the replay-style resume reproduces the
+    baseline token stream exactly."""
+    from repro.config import ServeConfig
+    from repro.resilience import FaultInjector, FaultSpec
+    from repro.serving import Engine, Request
+    from repro.serving.scheduler import DECODE
+    from repro.memory import HBM
+
+    cfg, params = setup
+    common = dict(max_batch=2, max_context=512)
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab_size, 200).astype(np.int32)
+
+    eng_b = Engine(cfg, params, ServeConfig(pool_pages=64, **common))
+    req_b = Request(0, prompt.copy(), max_new_tokens=8)
+    eng_b.submit(req_b)
+    eng_b.run_until_done(max_ticks=200)
+
+    eng = Engine(cfg, params, ServeConfig(
+        hbm_pages=32, host_pages=32, **common,
+    ))
+    req = Request(0, prompt.copy(), max_new_tokens=8)
+    eng.submit(req)
+    forced = False
+    for _ in range(300):
+        if req.done:
+            break
+        seq = eng.scheduler.running.get(0)
+        if not forced and seq is not None and seq.state == DECODE and (
+            len(req.output) >= 2
+        ):
+            sink = eng.pool.table(0).physical[0]
+            if eng.pool.tier_of(sink) == HBM:
+                # demote the sink page (pinned into every selection) to
+                # guarantee a miss, then break the host link for the next
+                # few ticks so every miss-promote fails and the stall
+                # counts as starvation.
+                eng.pool._protected.discard(sink)
+                eng.pool._auto_protected.discard(sink)
+                eng.pool._demote(sink)
+                t = eng.metrics.ticks
+                eng.set_fault_injector(FaultInjector([
+                    FaultSpec("host_io", from_tick=t, until_tick=t + 3),
+                ]))
+                forced = True
+        eng.step()
+    assert forced and req.done
+    snap = eng.metrics.snapshot()
+    assert snap["host_io_errors"] >= 2, "host link never failed"
+    assert eng.metrics.preemptions >= 1, "starvation breaker never fired"
+    assert eng.metrics.stalls >= 1
+    assert list(req.output) == list(req_b.output)
+    assert eng.pool.assert_consistent(
+        known_pins=eng.prefix_cache.pages()
+    ) == []
+
+
 def test_tiered_requires_sparse_decode(setup):
     from repro.config import ServeConfig
     from repro.serving import Engine

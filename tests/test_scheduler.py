@@ -93,12 +93,14 @@ def test_prepare_decode_preempts_latest_arrival():
     preempted = sched.prepare_decode([a, b])
     assert preempted == [b]
     assert b.state == QUEUED and sched.waiting == [b]
-    assert b.resume_token == 7 and len(b.prefill_tokens) == 64
+    # replay-style resume: only the prompt re-prefills, committed output
+    # replays through the decode path (byte-identical KV rebuild)
+    assert b.replay == [7] and len(b.prefill_tokens) == 64
     assert metrics.preemptions == 1
     assert pool.seq_tokens(0) == 65                # a got its reservation
 
 
-def test_preempted_resume_prefill_includes_output():
+def test_preempted_resume_replays_output_through_decode():
     sched, pool, _ = _sched(pool_pages=8)
     a = sched.submit(_req(0, n=64, max_new=64))
     sched.plan_tick(free_slots=[0])
@@ -106,10 +108,11 @@ def test_preempted_resume_prefill_includes_output():
     a.state = DECODE
     a.req.output.extend([3, 4, 5])
     sched._preempt(a)
-    # KV spans prompt + output[:-1]; the last token replays on resume
-    assert len(a.prefill_tokens) == 64 + 2
-    assert list(a.prefill_tokens[-2:]) == [3, 4]
-    assert a.resume_token == 5
+    # only the prompt re-prefills; every committed output token is queued
+    # for decode-path replay so the regenerated KV matches the original
+    # (sparse-decode KV differs from chunked-prefill KV for the same token)
+    assert len(a.prefill_tokens) == 64
+    assert a.replay == [3, 4, 5]
     assert pool.used_pages == 0
 
 
