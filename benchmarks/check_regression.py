@@ -4,16 +4,20 @@ Reads the benchmark artifacts written by ``benchmarks/decode_latency.py``
 (``BENCH_decode.json``), ``benchmarks/prefill_latency.py``
 (``BENCH_prefill.json``), ``benchmarks/memory_bench.py``
 (``BENCH_memory.json``), ``benchmarks/serving_bench.py``
-(``BENCH_serving.json``) and ``benchmarks/chaos_bench.py``
-(``BENCH_chaos.json``) and checks them against the floors below.
+(``BENCH_serving.json``), ``benchmarks/chaos_bench.py``
+(``BENCH_chaos.json``) and ``benchmarks/scenarios.py``
+(``BENCH_scenarios.json``) and checks them against the floors below.
 
-Floors are deliberately conservative: interpret-mode wall clock on shared
-CI runners is noisy, so the timing floors sit far under the measured
-values (fused decode measures ~2 orders of magnitude above its floor),
-while the structural metrics (work actually skipped, launch counts) are
-deterministic and gate tightly.
+Floors are deliberately conservative where wall clock is involved
+(interpret mode on shared CI runners is noisy), and exact where the metric
+is deterministic: structural counts, token identity, and everything the
+scenario suite measures on its virtual tick clock.
 
-Usage: python benchmarks/check_regression.py [--decode PATH] [--prefill PATH]
+A floor whose key is MISSING from the measured JSON is a hard failure —
+a renamed metric must break the gate loudly, not skip it silently.  On any
+failure the full floors-vs-measured table is printed.
+
+Usage: python benchmarks/check_regression.py [--decode PATH] [--scenarios PATH] ...
 """
 from __future__ import annotations
 
@@ -21,50 +25,108 @@ import argparse
 import json
 import pathlib
 import sys
+from typing import Any, List, Tuple
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 
+_MISSING = object()
+
 #: committed floors — raise them deliberately, never lower them casually.
-FLOORS = {
+#: Each entry: (check name, artifact key, dotted path into that artifact's
+#: JSON, op, floor).  ``op`` is ">=" for floors and "<=" for ceilings.
+CHECKS: List[Tuple[str, str, str, str, float]] = [
     # fused single-launch decode must stay meaningfully faster than the
     # staged three-kernel pipeline (measured ~300x in interpret mode).
-    "decode.fused_speedup_min": 3.0,
+    ("decode.fused_speedup", "decode", "fused_speedup", ">=", 3.0),
     # the fused path must remain a single launch per layer.
-    "decode.launches_per_layer_fused_max": 1,
+    ("decode.launches_per_layer_fused", "decode",
+     "launches_per_layer_fused", "<=", 1),
     # sparse prefill must skip a real fraction of causal KV blocks at the
     # largest benchmarked context (deterministic, hardware-independent).
-    "prefill.blocks_attended_frac_max": 0.75,
+    ("prefill.blocks_attended_frac", "prefill",
+     "blocks_attended_frac", "<=", 0.75),
     # and must stay meaningfully faster than the dense flash kernel it
     # replaces (measured 2-4x in interpret mode; floor leaves >3x margin
     # for runner noise — the tight gate is the deterministic block frac).
-    "prefill.speedup_min": 1.2,
+    ("prefill.speedup", "prefill", "speedup", ">=", 1.2),
     # hierarchical KV memory: the tiered pool must sustain at least 2x the
     # concurrent sequences of a flat all-HBM pool at the same HBM budget
     # (the subsystem's whole point; deterministic given the workload).
-    "memory.concurrency_gain_min": 2.0,
+    ("memory.concurrency_gain", "memory", "concurrency_gain", ">=", 2.0),
     # overcommit must exercise real HBM<->host migration, not degenerate
     # into an all-resident run.
-    "memory.demotions_min": 1,
+    ("memory.demotions", "memory", "demotions", ">=", 1),
     # if the selection drifts into the host tier, the margin-rank
     # prefetcher must stage most of them ahead of time (1.0 when no
     # demand lookup happened at all — nothing drifted, nothing missed).
-    "memory.prefetch_hit_rate_min": 0.5,
-    # observability must stay near-free: traced serving throughput (trace
-    # recorder + device-side sparsity telemetry + per-step counter
-    # queueing) within 5% of untraced on the same engine.  The estimator
-    # is noise-hardened (per-tick floors over interleaved reps, one
-    # engine for both modes); measured ~1-2.5%.
-    "serving.trace_overhead_max": 0.05,
-    # resilience: the seeded fault storm must never lose a request (every
-    # submission retires, finished or FAILED-with-reason) and every
-    # within-budget request's token stream must match the fault-free run
-    # byte-for-byte.  Both are deterministic: exact-zero gates.
-    "chaos.requests_lost_max": 0,
-    "chaos.token_mismatches_max": 0,
+    ("memory.prefetch_hit_rate", "memory", "prefetch_hit_rate", ">=", 0.5),
+    # observability must stay near-free: traced serving throughput within
+    # 5% of untraced on the same engine (noise-hardened estimator;
+    # measured ~1-2.5%).
+    ("serving.trace_overhead", "serving", "trace_overhead_frac", "<=", 0.05),
+    # resilience: the seeded fault storm must never lose a request and
+    # every within-budget request's token stream must match the fault-free
+    # run byte-for-byte.  Both deterministic: exact-zero gates.
+    ("chaos.requests_lost", "chaos", "requests_lost", "<=", 0),
+    ("chaos.token_mismatches", "chaos", "token_mismatches", "<=", 0),
     # the storm must actually exercise the failure domains — a silently
     # disarmed injector would green-light a broken recovery path.
-    "chaos.faults_injected_min": 5,
-}
+    ("chaos.faults_injected", "chaos",
+     "faults_injected.total_fired", ">=", 5),
+    # -- scenario suite (benchmarks/scenarios.py): continuous-batching
+    # async serving under mixed traffic.  Everything below is measured on
+    # the virtual tick clock and fully deterministic, so the latency
+    # ceilings sit close to the committed BENCH_scenarios.json values
+    # (roughly +50% headroom for benign scheduling drift) and the
+    # identity/loss gates are exact zeros.
+    ("scenarios.poisson_burst.requests_lost", "scenarios",
+     "scenarios.poisson_burst.requests_lost", "<=", 0),
+    ("scenarios.poisson_burst.token_mismatches", "scenarios",
+     "scenarios.poisson_burst.token_mismatches", "<=", 0),
+    ("scenarios.poisson_burst.interactive_ttft_p99", "scenarios",
+     "scenarios.poisson_burst.per_class.interactive.ttft_p99_ticks",
+     "<=", 30),
+    ("scenarios.poisson_burst.interactive_tpot_p99", "scenarios",
+     "scenarios.poisson_burst.per_class.interactive.tpot_p99_ticks",
+     "<=", 8),
+    ("scenarios.poisson_burst.deadline_miss_rate", "scenarios",
+     "scenarios.poisson_burst.deadline_miss_rate", "<=", 0.0),
+    ("scenarios.longtail_mix.requests_lost", "scenarios",
+     "scenarios.longtail_mix.requests_lost", "<=", 0),
+    ("scenarios.longtail_mix.token_mismatches", "scenarios",
+     "scenarios.longtail_mix.token_mismatches", "<=", 0),
+    # EDF admission must keep chat TTFT low while 100k-style long prompts
+    # stream through chunked prefill.
+    ("scenarios.longtail_mix.interactive_ttft_p99", "scenarios",
+     "scenarios.longtail_mix.per_class.interactive.ttft_p99_ticks",
+     "<=", 30),
+    ("scenarios.longtail_mix.interactive_tpot_p99", "scenarios",
+     "scenarios.longtail_mix.per_class.interactive.tpot_p99_ticks",
+     "<=", 8),
+    ("scenarios.longtail_mix.deadline_miss_rate", "scenarios",
+     "scenarios.longtail_mix.deadline_miss_rate", "<=", 0.0),
+    ("scenarios.preemption_storm.requests_lost", "scenarios",
+     "scenarios.preemption_storm.requests_lost", "<=", 0),
+    ("scenarios.preemption_storm.token_mismatches", "scenarios",
+     "scenarios.preemption_storm.token_mismatches", "<=", 0),
+    # the storm must actually preempt — a quietly right-sized pool would
+    # green-light a broken preemption path.
+    ("scenarios.preemption_storm.preemptions", "scenarios",
+     "scenarios.preemption_storm.preemptions", ">=", 1),
+    ("scenarios.preemption_storm.deadline_miss_rate", "scenarios",
+     "scenarios.preemption_storm.deadline_miss_rate", "<=", 0.5),
+    ("scenarios.prefix_churn.requests_lost", "scenarios",
+     "scenarios.prefix_churn.requests_lost", "<=", 0),
+    ("scenarios.prefix_churn.token_mismatches", "scenarios",
+     "scenarios.prefix_churn.token_mismatches", "<=", 0),
+    # churn or not, the radix cache must still convert a real fraction of
+    # the shared-prefix traffic into hits.
+    ("scenarios.prefix_churn.prefix_hit_rate", "scenarios",
+     "scenarios.prefix_churn.prefix_hit_rate", ">=", 0.3),
+    ("scenarios.prefix_churn.interactive_ttft_p99", "scenarios",
+     "scenarios.prefix_churn.per_class.interactive.ttft_p99_ticks",
+     "<=", 30),
+]
 
 
 def _load(path: pathlib.Path) -> dict:
@@ -74,6 +136,39 @@ def _load(path: pathlib.Path) -> dict:
         return json.load(f)
 
 
+def _lookup(blob: Any, dotted: str) -> Any:
+    """Walk ``a.b.c`` through nested dicts; -> _MISSING on any absent key
+    (the gate treats that as a hard failure, never a silent skip)."""
+    cur = blob
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return _MISSING
+        cur = cur[part]
+    return cur
+
+
+def _fmt(value: Any) -> str:
+    if value is _MISSING:
+        return "MISSING"
+    if isinstance(value, float):
+        return f"{value:.4g}"
+    return str(value)
+
+
+def _print_table(rows) -> None:
+    """Floors-vs-measured table, printed in full on any failure."""
+    headers = ("check", "measured", "op", "floor", "status")
+    cols = [
+        [h] + [str(r[i]) for r in rows] for i, h in enumerate(headers)
+    ]
+    widths = [max(len(x) for x in col) for col in cols]
+    line = "  ".join(h.ljust(w) for h, w in zip(headers, widths))
+    print(line)
+    print("  ".join("-" * w for w in widths))
+    for r in rows:
+        print("  ".join(str(x).ljust(w) for x, w in zip(r, widths)))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--decode", default=str(ROOT / "BENCH_decode.json"))
@@ -81,79 +176,38 @@ def main() -> None:
     ap.add_argument("--memory", default=str(ROOT / "BENCH_memory.json"))
     ap.add_argument("--serving", default=str(ROOT / "BENCH_serving.json"))
     ap.add_argument("--chaos", default=str(ROOT / "BENCH_chaos.json"))
+    ap.add_argument("--scenarios",
+                    default=str(ROOT / "BENCH_scenarios.json"))
     args = ap.parse_args()
 
-    decode = _load(pathlib.Path(args.decode))
-    prefill = _load(pathlib.Path(args.prefill))
-    memory = _load(pathlib.Path(args.memory))
-    serving = _load(pathlib.Path(args.serving))
-    chaos = _load(pathlib.Path(args.chaos))
+    artifacts = {
+        name: _load(pathlib.Path(getattr(args, name)))
+        for name in ("decode", "prefill", "memory", "serving",
+                     "chaos", "scenarios")
+    }
 
-    checks = [
-        (
-            "decode.fused_speedup",
-            decode.get("fused_speedup", 0.0),
-            ">=", FLOORS["decode.fused_speedup_min"],
-        ),
-        (
-            "decode.launches_per_layer_fused",
-            decode.get("launches_per_layer_fused", 99),
-            "<=", FLOORS["decode.launches_per_layer_fused_max"],
-        ),
-        (
-            "prefill.blocks_attended_frac",
-            prefill.get("blocks_attended_frac", 1.0),
-            "<=", FLOORS["prefill.blocks_attended_frac_max"],
-        ),
-        (
-            "prefill.speedup",
-            prefill.get("speedup", 0.0),
-            ">=", FLOORS["prefill.speedup_min"],
-        ),
-        (
-            "memory.concurrency_gain",
-            memory.get("concurrency_gain", 0.0),
-            ">=", FLOORS["memory.concurrency_gain_min"],
-        ),
-        (
-            "memory.demotions",
-            memory.get("demotions", 0),
-            ">=", FLOORS["memory.demotions_min"],
-        ),
-        (
-            "memory.prefetch_hit_rate",
-            memory.get("prefetch_hit_rate", 0.0),
-            ">=", FLOORS["memory.prefetch_hit_rate_min"],
-        ),
-        (
-            "serving.trace_overhead",
-            serving.get("trace_overhead_frac", 1.0),
-            "<=", FLOORS["serving.trace_overhead_max"],
-        ),
-        (
-            "chaos.requests_lost",
-            chaos.get("requests_lost", 99),
-            "<=", FLOORS["chaos.requests_lost_max"],
-        ),
-        (
-            "chaos.token_mismatches",
-            chaos.get("token_mismatches", 99),
-            "<=", FLOORS["chaos.token_mismatches_max"],
-        ),
-        (
-            "chaos.faults_injected",
-            chaos.get("faults_injected", {}).get("total_fired", 0),
-            ">=", FLOORS["chaos.faults_injected_min"],
-        ),
-    ]
+    rows = []
     failed = []
-    for name, value, op, floor in checks:
-        ok = value >= floor if op == ">=" else value <= floor
-        status = "ok  " if ok else "FAIL"
-        print(f"{status} {name} = {value} (must be {op} {floor})")
+    for name, artifact, dotted, op, floor in CHECKS:
+        value = _lookup(artifacts[artifact], dotted)
+        if value is _MISSING:
+            ok = False       # a renamed metric must fail LOUDLY
+        elif op == ">=":
+            ok = value >= floor
+        else:
+            ok = value <= floor
+        status = "ok" if ok else "FAIL"
+        rows.append((name, _fmt(value), op, _fmt(floor), status))
+        print(f"{'ok  ' if ok else 'FAIL'} {name} = {_fmt(value)} "
+              f"(must be {op} {floor})")
         if not ok:
-            failed.append(name)
+            failed.append(
+                f"{name} (MISSING from artifact)" if value is _MISSING
+                else name
+            )
     if failed:
+        print("\nbench-gate failure — floors vs measured:")
+        _print_table(rows)
         sys.exit(f"bench-gate: regression in {', '.join(failed)}")
     print("bench-gate: all floors hold")
 

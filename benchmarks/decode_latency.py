@@ -106,6 +106,15 @@ def run(D=64, n_kv=4, g=2, B=2, budget=512):
         }
         t_total += ts
     out["fused_vs_staged"] = fused = run_fused_vs_staged()
+    from provenance import provenance
+
+    fused = dict(fused)
+    fused["provenance"] = provenance({
+        "D": D, "n_kv": n_kv, "g": g, "B": B, "budget": budget,
+        "fused_vs_staged": {
+            k: fused[k] for k in ("B", "context")
+        },
+    })
     BENCH_PATH.write_text(json.dumps(fused, indent=2) + "\n")
     return {
         "name": "fig10_decode_latency",

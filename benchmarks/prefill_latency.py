@@ -115,7 +115,12 @@ def run_sparse_vs_dense(
 
 
 def run(**kw):
+    from provenance import provenance
+
     res = run_sparse_vs_dense(**kw)
+    res["provenance"] = provenance({
+        k: res[k] for k in ("B", "contexts", "block_q", "token_budget")
+    })
     BENCH_PATH.write_text(json.dumps(res, indent=2) + "\n")
     t = sum(v["sparse_ms"] for v in res["per_context"].values())
     return {

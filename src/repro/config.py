@@ -384,8 +384,32 @@ class ServeConfig:
     #: radix prefix cache: page-granular KV reuse across requests that
     #: share a prompt prefix (system prompts, few-shot headers, ...).
     enable_prefix_cache: bool = True
+    # -- SLO classes (:mod:`repro.serving.scheduler`) ------------------------
+    #: first-token latency target for ``interactive`` requests, in clock
+    #: units (seconds under the wall clock; ticks under a virtual clock).
+    #: Admission is earliest-effective-deadline-first and preemption
+    #: victimizes the farthest effective deadline, so these targets ARE the
+    #: scheduling priority — not just reporting thresholds.
+    interactive_ttft_slo: float = 1.0
+    #: first-token latency target for ``batch`` requests (throughput
+    #: traffic; large so interactive and deadline traffic outranks it).
+    batch_ttft_slo: float = 60.0
+    #: prefix-cache-aware admission grouping: a request whose prompt shares
+    #: a page-aligned prefix with a sequence still prefilling is deferred up
+    #: to this many ticks so it admits AFTER the peer publishes the shared
+    #: span to the radix cache (one prefill instead of two).  0 disables.
+    prefix_wait_ticks: int = 8
     # -- failure domains (:mod:`repro.resilience`) ---------------------------
     #: retry budgets, checkpoint cadence, watchdog and degradation-ladder
     #: policy; the defaults are always on — they only act when a fault
     #: (injected or real) actually surfaces.
     resilience: ResilienceConfig = field(default_factory=ResilienceConfig)
+
+    def slo_target(self, slo_class: str) -> float:
+        """First-token latency target for a non-``deadline`` SLO class
+        (``deadline`` requests carry their own ``Request.deadline_s``)."""
+        if slo_class == "interactive":
+            return self.interactive_ttft_slo
+        if slo_class == "batch":
+            return self.batch_ttft_slo
+        raise ValueError(f"unknown SLO class {slo_class!r}")

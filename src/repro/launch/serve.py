@@ -36,6 +36,37 @@ from repro.obs import TraceRecorder
 from repro.serving import Engine, Request
 
 
+def _serve_async(eng, arrivals, tick_cb=None):
+    """Drive the continuous-batching front-end with (tick, request)
+    arrivals: each request is submitted mid-flight once the engine reaches
+    its tick (immediately when the engine idles early — nothing else would
+    advance the clock).  -> the retired requests."""
+    import asyncio
+
+    from repro.serving import AsyncFrontend
+
+    pending = {}
+    for tick, req in arrivals:
+        pending.setdefault(tick, []).append(req)
+
+    async def run():
+        fe = AsyncFrontend(eng)
+        if tick_cb is not None:
+            fe.on_tick = lambda f, t: tick_cb(eng, t - 1)
+        task = asyncio.create_task(fe.run())
+        while pending:
+            t = min(pending)
+            if fe.ticks >= t or not eng.scheduler.has_work:
+                for req in pending.pop(t):
+                    fe.submit(req)
+            await asyncio.sleep(0)
+        await fe.drain()
+        fe.shutdown()
+        return await task
+
+    return asyncio.run(run())
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-3b")
@@ -90,6 +121,21 @@ def main():
                     help="JSON fault plan (list of FaultSpec dicts) to "
                          "inject instead of the default storm; implies "
                          "--chaos-seed 0 unless given")
+    ap.add_argument("--slo-class", default="interactive",
+                    choices=["interactive", "batch", "deadline", "mixed"],
+                    help="SLO class for the generated traffic; 'mixed' "
+                         "round-robins all three (EDF admission + "
+                         "deadline-aware preemption act on it)")
+    ap.add_argument("--deadline-s", type=float, default=30.0,
+                    help="completion deadline (seconds) for "
+                         "deadline-class requests")
+    ap.add_argument("--arrival-trace", default=None, metavar="TRACE.JSON",
+                    help="serve through the async continuous-batching "
+                         "front-end with arrivals from a JSON trace: a "
+                         "list of {tick, prompt_tokens, new_tokens, "
+                         "slo_class, deadline_s} objects (missing fields "
+                         "fall back to the CLI flags); requests are "
+                         "submitted mid-flight at their engine tick")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -137,12 +183,45 @@ def main():
         rng.integers(0, cfg.vocab_size, args.prefix_len).astype(np.int32)
         for _ in range(args.prefix_groups)
     ]
-    for rid in range(args.requests):
-        plen = int(rng.integers(64, args.max_context // 2))
+
+    def _slo_for(rid):
+        if args.slo_class == "mixed":
+            cls = ["interactive", "batch", "deadline"][rid % 3]
+        else:
+            cls = args.slo_class
+        return cls, (args.deadline_s if cls == "deadline" else None)
+
+    def _mkreq(rid, plen, new_tokens, slo_class=None, deadline_s=None):
         body = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
         if prefixes:
             body = np.concatenate([prefixes[rid % len(prefixes)], body])
-        eng.submit(Request(rid, body, max_new_tokens=args.new_tokens))
+        if slo_class is None:
+            slo_class, deadline_s = _slo_for(rid)
+        return Request(rid, body, max_new_tokens=new_tokens,
+                       slo_class=slo_class, deadline_s=deadline_s)
+
+    arrivals = None
+    if args.arrival_trace is not None:
+        with open(args.arrival_trace) as f:
+            entries = json.load(f)
+        arrivals = []
+        for rid, e in enumerate(entries):
+            cls = e.get("slo_class")
+            arrivals.append((int(e.get("tick", 0)), _mkreq(
+                rid,
+                int(e.get("prompt_tokens", max(64, args.max_context // 4))),
+                int(e.get("new_tokens", args.new_tokens)),
+                slo_class=cls,
+                deadline_s=e.get(
+                    "deadline_s",
+                    args.deadline_s if cls == "deadline" else None,
+                ),
+            )))
+        arrivals.sort(key=lambda te: te[0])
+    else:
+        for rid in range(args.requests):
+            plen = int(rng.integers(64, args.max_context // 2))
+            eng.submit(_mkreq(rid, plen, args.new_tokens))
     metrics_f = None
     tick_cb = None
     if args.metrics_interval > 0:
@@ -159,7 +238,10 @@ def main():
             metrics_f.flush()
 
     t0 = time.monotonic()
-    done = eng.run_until_done(tick_callback=tick_cb)
+    if arrivals is not None:
+        done = _serve_async(eng, arrivals, tick_cb)
+    else:
+        done = eng.run_until_done(tick_callback=tick_cb)
     dt = time.monotonic() - t0
     if metrics_f is not None and metrics_f is not sys.stdout:
         metrics_f.close()
@@ -174,6 +256,14 @@ def main():
           f"(backend={plan.backend}, "
           f"sparse_prefill={plan.active and cfg.sparse.sparse_prefill})")
     print(f"metrics: {eng.metrics.format_snapshot()}")
+    snap = eng.metrics.snapshot()
+    for cls, m in snap["per_class"].items():
+        print(f"  slo[{cls}]: finished={m['finished']} "
+              f"ttft p50/p99={m['ttft_p50'] * 1e3:.0f}/"
+              f"{m['ttft_p99'] * 1e3:.0f}ms "
+              f"tpot p99={m['tpot_p99'] * 1e3:.1f}ms "
+              f"deadline_miss={m['deadline_misses']} "
+              f"({100 * m['deadline_miss_rate']:.0f}%)")
     if injector is not None:
         snap = eng.metrics.snapshot()
         failed = [r for r in done if r.status == "failed"]

@@ -1,10 +1,21 @@
 """Serving subsystem: scheduler (chunked prefill, prefix-sharing admission,
-preemption), continuous-batching engine, sampling, lifecycle metrics."""
+SLO-aware EDF admission + deadline-aware preemption), continuous-batching
+engine, async streaming front-end, sampling, lifecycle metrics."""
 from repro.serving.engine import Engine, EngineStalled
+from repro.serving.frontend import AsyncFrontend, TokenStream
 from repro.serving.metrics import RequestMetrics, ServingMetrics
-from repro.serving.scheduler import Request, Scheduler, SeqState
+from repro.serving.scheduler import (
+    SLO_BATCH,
+    SLO_CLASSES,
+    SLO_DEADLINE,
+    SLO_INTERACTIVE,
+    Request,
+    Scheduler,
+    SeqState,
+)
 
 __all__ = [
+    "AsyncFrontend",
     "Engine",
     "EngineStalled",
     "Request",
@@ -12,4 +23,9 @@ __all__ = [
     "Scheduler",
     "SeqState",
     "ServingMetrics",
+    "TokenStream",
+    "SLO_BATCH",
+    "SLO_CLASSES",
+    "SLO_DEADLINE",
+    "SLO_INTERACTIVE",
 ]

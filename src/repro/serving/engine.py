@@ -1102,13 +1102,14 @@ class Engine:
 
     def _watchdog_break(self):
         """No-progress ticks hit ``resilience.watchdog_ticks``: force the
-        latest-arrival running sequence out (the same ops as the memory
-        starvation breaker) so whatever it is pinning frees up.  A no-op
-        when nothing is running (e.g. every sequence sits in backoff)."""
+        scheduler's preemption victim (farthest effective deadline) out —
+        the same ops as the memory starvation breaker — so whatever it is
+        pinning frees up.  A no-op when nothing is running (e.g. every
+        sequence sits in backoff)."""
         running = [s for s in self.slots if s is not None]
         if not running:
             return
-        victim = max(running, key=lambda s: s.arrival)
+        victim = self.scheduler.choose_victim(running)
         if self.trace is not None:
             self.trace.instant(
                 "engine.watchdog", PID_ENGINE,
@@ -1168,15 +1169,15 @@ class Engine:
             # sequences' working-set shields cover the whole HBM budget.
             # prepare_decode can't help (stalled seqs hold their
             # reservation and are excluded from it), so preempt the
-            # latest-arrival starved sequence directly; its freed pages
-            # restore room for everyone else.
+            # scheduler's victim (farthest effective deadline) among the
+            # starved directly; its freed pages restore room for the rest.
             starved = [
                 self.scheduler.running[sid]
                 for sid in self.memory.starved_seqs()
                 if sid in self.scheduler.running
             ]
             if starved:
-                victim = max(starved, key=lambda s: s.arrival)
+                victim = self.scheduler.choose_victim(starved)
                 if self.trace is not None:
                     self.trace.instant(
                         "mem.starvation_breaker", PID_MEMORY,

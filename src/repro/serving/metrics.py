@@ -24,6 +24,12 @@ class RequestMetrics:
     req_id: int
     prompt_tokens: int = 0
     output_tokens: int = 0
+    #: SLO class (``interactive`` / ``batch`` / ``deadline``); drives the
+    #: per-class latency aggregation in :meth:`ServingMetrics.snapshot`.
+    slo_class: str = "interactive"
+    #: absolute effective deadline (t_submit + SLO target / deadline_s);
+    #: ``None`` until the scheduler stamps it at submit.
+    deadline: Optional[float] = None
     #: prompt tokens whose prefill was skipped via the prefix cache
     #: (accumulated across re-admissions after preemption).
     prefix_hit_tokens: int = 0
@@ -58,6 +64,24 @@ class RequestMetrics:
         if self.output_tokens <= 1:
             return 0.0
         return (self.t_finish - self.t_first_token) / (self.output_tokens - 1)
+
+    @property
+    def deadline_missed(self) -> bool:
+        """Whether this request blew its effective deadline.
+
+        ``interactive`` / ``batch`` miss on first-token time (their deadline
+        is a TTFT SLO target); the ``deadline`` class misses on completion
+        time.  Unfinished requests never count as misses — the miss rate in
+        :meth:`ServingMetrics.snapshot` covers completed requests only.
+        """
+        if self.deadline is None:
+            return False
+        if self.slo_class == "deadline":
+            return self.t_finish is not None and self.t_finish > self.deadline
+        return (
+            self.t_first_token is not None
+            and self.t_first_token > self.deadline
+        )
 
 
 def _pct(xs: List[float], q: float) -> float:
@@ -99,6 +123,10 @@ class ServingMetrics:
         self.prefix_hit_tokens = 0
         self.decode_tokens = 0
         self.preemptions = 0
+        #: admissions deferred by prefix-cache-aware batching (a queued
+        #: request waited for a prefilling peer's shared prefix to land in
+        #: the radix cache before admitting).
+        self.prefix_deferrals = 0
         # -- memory tiering (populated only when the engine runs a
         # TieredPagePool; ``tiering`` gates the snapshot fields) --
         self.tiering = False
@@ -151,14 +179,20 @@ class ServingMetrics:
 
     # -- lifecycle events ----------------------------------------------------
 
-    def on_submit(self, req_id: int, prompt_tokens: int):
+    def on_submit(
+        self, req_id: int, prompt_tokens: int,
+        slo_class: str = "interactive",
+    ) -> RequestMetrics:
         r = self._req(req_id)
         r.prompt_tokens = prompt_tokens
+        r.slo_class = slo_class
         if r.t_submit is None:
             r.t_submit = self.clock()
         if self.trace is not None:
             self.trace.name_thread(PID_SEQ, req_id, f"req {req_id}")
         self._set_phase(req_id, "seq.queued")
+        # the scheduler stamps r.deadline from t_submit + the SLO target.
+        return r
 
     def on_admit(self, req_id: int, prefix_hit_tokens: int = 0):
         r = self._req(req_id)
@@ -172,6 +206,13 @@ class ServingMetrics:
                 args={"reused_tokens": prefix_hit_tokens},
             )
         self._set_phase(req_id, "seq.prefill")
+
+    def on_prefix_defer(self, req_id: int):
+        """Admission of ``req_id`` deferred to wait for a shared-prefix peer
+        still in prefill (prefix-cache-aware batching)."""
+        self.prefix_deferrals += 1
+        if self.trace is not None:
+            self.trace.instant("prefix.defer", PID_SEQ, req_id)
 
     def on_prefill(self, n_tokens: int):
         self.prefill_tokens_computed += n_tokens
@@ -351,6 +392,7 @@ class ServingMetrics:
             "prefix_hit_tokens": self.prefix_hit_tokens,
             "decode_tokens": self.decode_tokens,
             "preemptions": self.preemptions,
+            "prefix_deferrals": self.prefix_deferrals,
             "prefix_hit_rate": (
                 self.prefix_hit_tokens / processed if processed else 0.0
             ),
@@ -360,9 +402,35 @@ class ServingMetrics:
         snap["ttft_mean"] = _mean(ttfts)
         snap["ttft_p50"] = _pct(ttfts, 0.50)
         snap["ttft_p95"] = _pct(ttfts, 0.95)
+        snap["ttft_p99"] = _pct(ttfts, 0.99)
         snap["tpot_mean"] = _mean(tpots)
+        snap["tpot_p50"] = _pct(tpots, 0.50)
         snap["tpot_p95"] = _pct(tpots, 0.95)
+        snap["tpot_p99"] = _pct(tpots, 0.99)
         snap["queue_time_mean"] = _mean(queues)
+        # -- SLO accounting: overall + per-class latency/deadline-miss
+        # aggregates, always present and JSON-safe on an empty run --
+        misses = sum(1 for r in done if r.deadline_missed)
+        snap["deadline_misses"] = misses
+        snap["deadline_miss_rate"] = misses / len(done) if done else 0.0
+        per_class: Dict[str, Dict[str, float]] = {}
+        for cls in sorted({r.slo_class for r in done}):
+            cdone = [r for r in done if r.slo_class == cls]
+            cttft = [r.ttft for r in cdone if r.ttft is not None]
+            ctpot = [r.tpot for r in cdone if r.tpot is not None]
+            cmiss = sum(1 for r in cdone if r.deadline_missed)
+            per_class[cls] = {
+                "finished": len(cdone),
+                "ttft_p50": _pct(cttft, 0.50),
+                "ttft_p95": _pct(cttft, 0.95),
+                "ttft_p99": _pct(cttft, 0.99),
+                "tpot_p50": _pct(ctpot, 0.50),
+                "tpot_p95": _pct(ctpot, 0.95),
+                "tpot_p99": _pct(ctpot, 0.99),
+                "deadline_misses": cmiss,
+                "deadline_miss_rate": cmiss / len(cdone) if cdone else 0.0,
+            }
+        snap["per_class"] = per_class
         # failure counters are ALWAYS present too (zero / empty when no
         # faults fired) — chaos tooling and the bench gate key on them.
         failed_by_reason: Dict[str, int] = {}

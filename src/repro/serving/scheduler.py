@@ -1,4 +1,4 @@
-"""Serving scheduler: admission, chunked prefill, preemption.
+"""Serving scheduler: SLO-aware admission, chunked prefill, preemption.
 
 The :class:`Scheduler` owns the request lifecycle
 (``queued -> prefill -> decode -> finished``, with ``preempted`` looping
@@ -6,20 +6,32 @@ back to ``queued``) and all policy; the :class:`~repro.serving.engine.Engine`
 executes its decisions against the jit'd model steps.  Per tick it emits a
 :class:`TickPlan`:
 
-- **admission** — FCFS over the waiting queue into free batch slots, gated
-  by page-pool accounting.  Prompts are matched against the radix prefix
-  cache first: the shared page-aligned prefix is ``fork``'d (refcounted,
-  zero prefill compute) and only the divergent suffix needs fresh pages
-  (prefix-cache eviction is tried before giving up).
+- **admission** — earliest-effective-deadline-first (EDF) over the waiting
+  queue into free batch slots, gated by page-pool accounting.  Every
+  request carries an SLO class (``interactive`` / ``batch`` / ``deadline``)
+  that maps to an *effective deadline* at submit: ``deadline`` requests
+  bring their own completion deadline, ``interactive``/``batch`` get
+  ``t_submit + ServeConfig.{interactive,batch}_ttft_slo``.  Within one
+  class EDF degenerates to FCFS (deadlines grow with submit time), across
+  classes urgent traffic outranks throughput traffic.  Prompts are matched
+  against the radix prefix cache first: the shared page-aligned prefix is
+  ``fork``'d (refcounted, zero prefill compute) and only the divergent
+  suffix needs fresh pages (prefix-cache eviction is tried before giving
+  up).  A prompt whose prefix is *about* to be published — a sequence
+  sharing it is still prefilling — is deferred a bounded number of ticks
+  (``ServeConfig.prefix_wait_ticks``) so shared-prefix arrivals group into
+  one prefill plus cache hits instead of N parallel prefills.
 - **chunked prefill** — a token budget per tick
-  (``ServeConfig.prefill_tokens_per_tick``) is spread FCFS over prefilling
-  sequences in ``prefill_chunk``-sized chunks, so a long prompt no longer
-  stalls the running decode batch between chunks.
+  (``ServeConfig.prefill_tokens_per_tick``) is spread deadline-first over
+  prefilling sequences in ``prefill_chunk``-sized chunks, so a long prompt
+  no longer stalls the running decode batch between chunks.
 - **preemption** — before each decode tick every decoding sequence gets a
-  page reservation for its next token; on exhaustion the latest-arrival
-  running sequence is preempted: pages freed, generated output preserved,
-  and the request re-queued (its continuation is re-prefilled — and
-  typically re-matched against the prefix cache — on re-admission).
+  page reservation for its next token; on exhaustion the running sequence
+  with the *farthest effective deadline* is preempted (deadline-aware
+  victim selection — never a sequence with a nearer deadline than any
+  peer): pages freed, generated output preserved, and the request
+  re-queued with its original deadline (its continuation replays on
+  re-admission).
 """
 from __future__ import annotations
 
@@ -35,6 +47,13 @@ from repro.config import ServeConfig
 from repro.serving.metrics import ServingMetrics
 
 
+#: request SLO classes: ``interactive`` chat traffic (tight TTFT target),
+#: ``batch`` throughput traffic (loose TTFT target), ``deadline`` requests
+#: carrying an explicit completion deadline (``Request.deadline_s``).
+SLO_INTERACTIVE, SLO_BATCH, SLO_DEADLINE = "interactive", "batch", "deadline"
+SLO_CLASSES = (SLO_INTERACTIVE, SLO_BATCH, SLO_DEADLINE)
+
+
 @dataclass
 class Request:
     req_id: int
@@ -42,6 +61,12 @@ class Request:
     max_new_tokens: int = 32
     eos_token: Optional[int] = None
     prefix_emb: Optional[np.ndarray] = None
+    #: SLO class driving admission order and preemption victim selection
+    #: (see :data:`SLO_CLASSES`).
+    slo_class: str = SLO_INTERACTIVE
+    #: completion deadline in clock units relative to submit time; required
+    #: for (and only meaningful with) ``slo_class="deadline"``.
+    deadline_s: Optional[float] = None
     # filled by the engine:
     output: List[int] = field(default_factory=list)
     done: bool = False
@@ -62,9 +87,21 @@ class SeqState:
     """Scheduler-side bookkeeping for one request."""
 
     req: Request
-    arrival: int                        # admission priority (FCFS)
+    arrival: int                        # submission order (EDF tie-break)
     state: str = QUEUED
     slot: int = -1
+    #: submit timestamp (metrics clock) — fixed across re-admissions.
+    t_submit: float = 0.0
+    #: absolute effective deadline: ``deadline`` requests carry their own,
+    #: ``interactive``/``batch`` get ``t_submit + class TTFT target``.
+    #: Admission is earliest-deadline-first; preemption victimizes the
+    #: farthest.  Preserved across preemption / restore (a re-queued
+    #: request keeps its urgency instead of going to the back of the line).
+    deadline: float = float("inf")
+    #: ticks this admission has been deferred waiting for a shared prefix
+    #: still being prefilled by a peer (bounded by
+    #: ``ServeConfig.prefix_wait_ticks``).
+    prefix_deferred: int = 0
     #: the token span to prefill this admission: the prompt, extended with
     #: already-generated output after a preemption (recompute-style resume).
     prefill_tokens: np.ndarray = None   # type: ignore[assignment]
@@ -173,17 +210,51 @@ class Scheduler:
                 f"request {req.req_id} can never fit: needs {worst} pages, "
                 f"pool has {self.pool.total_pages}"
             )
+        if req.slo_class not in SLO_CLASSES:
+            raise ValueError(
+                f"request {req.req_id}: unknown SLO class {req.slo_class!r} "
+                f"(one of {SLO_CLASSES})"
+            )
+        if req.slo_class == SLO_DEADLINE and (
+            req.deadline_s is None or req.deadline_s <= 0
+        ):
+            raise ValueError(
+                f"request {req.req_id}: slo_class='deadline' requires a "
+                f"positive deadline_s, got {req.deadline_s!r}"
+            )
         seq = SeqState(req, next(self._arrival))
-        self.waiting.append(seq)
-        self.metrics.on_submit(req.req_id, len(req.prompt))
+        rm = self.metrics.on_submit(
+            req.req_id, len(req.prompt), slo_class=req.slo_class
+        )
+        seq.t_submit = rm.t_submit
+        if req.slo_class == SLO_DEADLINE:
+            seq.deadline = seq.t_submit + req.deadline_s
+        else:
+            seq.deadline = seq.t_submit + self.serve.slo_target(req.slo_class)
+        rm.deadline = seq.deadline
+        self._enqueue(seq)
         return seq
 
-    def _requeue(self, seq: SeqState):
-        """Re-insert preserving arrival (FCFS) order."""
+    @staticmethod
+    def _edf_key(seq: SeqState):
+        """Waiting-queue order: earliest effective deadline first, arrival
+        as the deterministic tie-break (within one SLO class this is FCFS,
+        since deadlines grow monotonically with submit time)."""
+        return (seq.deadline, seq.arrival)
+
+    def _enqueue(self, seq: SeqState):
+        """Insert into the waiting queue at its EDF position."""
+        key = self._edf_key(seq)
         i = 0
-        while i < len(self.waiting) and self.waiting[i].arrival < seq.arrival:
+        while i < len(self.waiting) and self._edf_key(self.waiting[i]) <= key:
             i += 1
         self.waiting.insert(i, seq)
+
+    def _requeue(self, seq: SeqState):
+        """Re-insert a preempted/restored sequence.  Its original deadline
+        is preserved, so EDF puts it back ahead of later, less-urgent
+        arrivals instead of at the back of the line."""
+        self._enqueue(seq)
 
     def _seq_chunkable(self, seq: SeqState) -> bool:
         return self.chunkable and seq.req.prefix_emb is None
@@ -192,6 +263,31 @@ class Scheduler:
 
     def plan_tick(self, free_slots: Sequence[int]) -> TickPlan:
         return TickPlan(self._admit(list(free_slots)), self._plan_chunks())
+
+    def _shared_prefix_pages(self, a: np.ndarray, b: np.ndarray) -> int:
+        """Leading whole pages on which prompts ``a`` and ``b`` agree."""
+        ps = self.pool.page_size
+        n = min(len(a), len(b)) // ps
+        shared = 0
+        for i in range(n):
+            if not np.array_equal(a[i * ps:(i + 1) * ps],
+                                  b[i * ps:(i + 1) * ps]):
+                break
+            shared += 1
+        return shared
+
+    def _pending_prefix_tokens(self, seq: SeqState) -> int:
+        """Longest page-aligned prefix of ``seq``'s prompt currently being
+        prefilled by a running peer — i.e. the span the radix cache will
+        serve once that peer completes and publishes its prompt pages."""
+        best = 0
+        for peer in self.running.values():
+            if peer.state != PREFILL or not self._seq_chunkable(peer):
+                continue
+            best = max(best, self._shared_prefix_pages(
+                seq.prefill_tokens, peer.prefill_tokens
+            ))
+        return best * self.pool.page_size
 
     def _admit(self, free_slots: List[int]) -> List[AdmitDecision]:
         out: List[AdmitDecision] = []
@@ -217,6 +313,19 @@ class Scheduler:
                     matched = (matched // self.chunk_align) * self.chunk_align
                     keep = matched // self.pool.page_size
                     pages, kvs = pages[:keep], kvs[:keep]
+                # prefix-cache-aware grouping: a peer is prefilling a
+                # longer shared prefix than the cache can serve right now —
+                # defer (bounded) so this request admits against the
+                # published pages instead of recomputing them in parallel.
+                if (
+                    self.serve.prefix_wait_ticks > 0
+                    and seq.prefix_deferred < self.serve.prefix_wait_ticks
+                    and self._pending_prefix_tokens(seq) > matched
+                ):
+                    seq.prefix_deferred += 1
+                    self.metrics.on_prefix_defer(seq.seq_id)
+                    idx += 1
+                    continue
             need_fresh = self.pool.pages_for(len(tokens)) - len(pages)
             if need_fresh > self.pool.free_pages:
                 ok = self.prefix_cache is not None and (
@@ -247,7 +356,7 @@ class Scheduler:
         chunks: List[ChunkPlan] = []
         prefilling = sorted(
             (s for s in self.running.values() if s.state == PREFILL),
-            key=lambda s: s.arrival,
+            key=self._edf_key,
         )
         for seq in prefilling:
             if not self._seq_chunkable(seq):
@@ -288,12 +397,21 @@ class Scheduler:
 
     # -- decode capacity / preemption ----------------------------------------
 
+    def choose_victim(self, candidates) -> SeqState:
+        """Deadline-aware victim selection: among ``candidates`` (an
+        iterable of running SeqStates) pick the FARTHEST effective
+        deadline, latest arrival as the tie-break.  The invariant the SLO
+        property tests assert: the victim never has a strictly nearer
+        deadline than any other candidate."""
+        return max(candidates, key=lambda s: (s.deadline, s.arrival))
+
     def prepare_decode(self, decode: Sequence[SeqState]) -> List[SeqState]:
         """Reserve one more token of page capacity for every decoding
-        sequence (oldest first); preempt latest arrivals on exhaustion.
+        sequence (nearest deadline first); preempt the farthest-deadline
+        running sequence on exhaustion.
         -> the preempted sequences (engine must clear their slots)."""
         preempted: List[SeqState] = []
-        for seq in sorted(decode, key=lambda s: s.arrival):
+        for seq in sorted(decode, key=self._edf_key):
             if seq.state != DECODE:      # preempted by an earlier iteration
                 continue
             while True:
@@ -311,9 +429,7 @@ class Scheduler:
                         and self.prefix_cache.evict_for(1)
                     ):
                         continue
-                    victim = max(
-                        self.running.values(), key=lambda s: s.arrival
-                    )
+                    victim = self.choose_victim(self.running.values())
                     self._preempt(victim)
                     preempted.append(victim)
                     if victim is seq:
@@ -347,6 +463,7 @@ class Scheduler:
         seq.state = QUEUED
         seq.prefilled = 0
         seq.prefix_tokens = 0
+        seq.prefix_deferred = 0
         self._requeue(seq)
 
     # -- failure domains (repro.resilience) ----------------------------------

@@ -1,9 +1,30 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS device forcing here — tests see the
 real (single-CPU) device; only launch/dryrun.py forces 512 devices."""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+try:
+    # pinned "ci" profile: derandomized with a fixed example budget, so a
+    # CI property-test failure replays identically with
+    # `HYPOTHESIS_PROFILE=ci pytest ...` locally.  ci.yml exports
+    # HYPOTHESIS_PROFILE=ci workflow-wide.  The _hypothesis_fallback shim
+    # (used when hypothesis isn't installed) is seeded-deterministic
+    # already and needs no profile.
+    from hypothesis import settings as _hyp_settings
+
+    _hyp_settings.register_profile(
+        "ci", derandomize=True, max_examples=60, deadline=None,
+        print_blob=True,
+    )
+    _hyp_settings.load_profile(
+        os.environ.get("HYPOTHESIS_PROFILE", "default")
+    )
+except ImportError:
+    pass
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,259 @@
+"""Async serving front-end (`repro.serving.frontend`).
+
+The load-bearing property: a request streamed through :class:`AsyncFrontend`
+yields EXACTLY the tokens the synchronous ``run_until_done`` drain produces
+for the same request set — under interleaved mid-flight arrivals, under
+preemption pressure, and across checkpoint restores (whose output
+truncation must never re-emit or reorder streamed tokens).  Sampling keyed
+by ``(seq_id, position)`` makes this possible; these tests make it
+enforced.  All async tests run via ``asyncio.run`` — no pytest-asyncio
+dependency.
+"""
+import asyncio
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import ServeConfig
+from repro.configs import get_config, smoke_variant
+from repro.models import Transformer
+from repro.resilience import FaultInjector, FaultSpec
+from repro.serving import AsyncFrontend, Engine, Request
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    import sys as _sys
+    from pathlib import Path as _Path
+
+    _sys.path.insert(0, str(_Path(__file__).parent))
+    from _hypothesis_fallback import given, settings, strategies as st
+
+
+_CACHE = {}
+
+
+def _setup():
+    """Module-cached tiny model.  A plain function (not a fixture) so the
+    hypothesis-fallback-wrapped property test can reach it too."""
+    if "cfg" not in _CACHE:
+        cfg = smoke_variant(get_config("llama3.2-3b"))
+        model = Transformer(cfg)
+        _CACHE["cfg"] = cfg
+        _CACHE["params"] = model.init(jax.random.PRNGKey(0))
+    return _CACHE["cfg"], _CACHE["params"]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    return _setup()
+
+
+def _prompts(cfg, n, tokens=80, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        rng.integers(0, cfg.vocab_size, tokens).astype(np.int32)
+        for _ in range(n)
+    ]
+
+
+def _mkreq(i, prompts, new_tokens=6):
+    return Request(i, prompts[i], max_new_tokens=new_tokens)
+
+
+def _sync_baseline(cfg, params, prompts, new_tokens=6, injector=None,
+                   **serve_kw):
+    """All requests submitted up front + run_until_done: the reference
+    token streams the async path must reproduce."""
+    eng = Engine(cfg, params, ServeConfig(**serve_kw))
+    if injector is not None:
+        eng.set_fault_injector(injector)
+    reqs = [_mkreq(i, prompts, new_tokens) for i in range(len(prompts))]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done(max_ticks=600)
+    return {r.req_id: list(r.output) for r in reqs}
+
+
+def _async_run(cfg, params, prompts, arrivals, new_tokens=6, injector=None,
+               **serve_kw):
+    """Drive the frontend with requests arriving at exact engine ticks
+    (``arrivals``: tick -> [req ids]; tick 0 = before the loop starts)."""
+    eng = Engine(cfg, params, ServeConfig(**serve_kw))
+    if injector is not None:
+        eng.set_fault_injector(injector)
+
+    async def main():
+        pending = {t: list(ids) for t, ids in arrivals.items()}
+        streams = {}
+        fe = AsyncFrontend(eng, max_ticks=600)
+        task = asyncio.create_task(fe.run())
+        # driver: submit each group once the engine reaches its tick; when
+        # the engine idles early, time fast-forwards — the next group
+        # arrives immediately (otherwise nothing would advance the clock).
+        while pending:
+            t = min(pending)
+            if fe.ticks >= t or not eng.scheduler.has_work:
+                for i in pending.pop(t):
+                    streams[i] = fe.submit(_mkreq(i, prompts, new_tokens))
+            await asyncio.sleep(0)
+        await fe.drain()
+        fe.shutdown()
+        await task
+        return {i: await s.collect() for i, s in streams.items()}
+
+    return eng, asyncio.run(main())
+
+
+def test_streamed_tokens_identical_under_interleaved_arrivals(setup):
+    cfg, params = setup
+    prompts = _prompts(cfg, 5)
+    sync = _sync_baseline(cfg, params, prompts,
+                          max_batch=2, max_context=512)
+    _, streamed = _async_run(
+        cfg, params, prompts,
+        arrivals={0: [0], 2: [1, 2], 5: [3], 9: [4]},
+        max_batch=2, max_context=512,
+    )
+    assert streamed == sync
+
+
+def test_streamed_tokens_identical_under_preemption(setup):
+    """A pool sized to force preemption storms mid-decode: streams stay
+    token-identical and every request completes."""
+    cfg, params = setup
+    prompts = _prompts(cfg, 4, tokens=64, seed=1)
+    kw = dict(max_batch=4, max_context=512, pool_pages=14)
+    sync = _sync_baseline(cfg, params, prompts, new_tokens=12, **kw)
+    eng, streamed = _async_run(
+        cfg, params, prompts, new_tokens=12,
+        arrivals={0: [0, 1], 3: [2, 3]}, **kw,
+    )
+    assert streamed == sync
+    assert eng.metrics.preemptions > 0, "scenario must actually preempt"
+
+
+@settings(max_examples=5, deadline=None)
+@given(ticks=st.lists(st.integers(min_value=0, max_value=12),
+                      min_size=3, max_size=3))
+def test_streamed_tokens_identical_property(ticks):
+    """Property form: ANY arrival-tick assignment yields the sync
+    baseline's tokens (sampling is keyed by (seq_id, position), so batch
+    composition and admission timing are invisible in the output)."""
+    cfg, params = _setup()
+    prompts = _prompts(cfg, 3, tokens=48, seed=2)
+    if "prop_sync" not in _CACHE:       # one baseline for all examples
+        _CACHE["prop_sync"] = _sync_baseline(
+            cfg, params, prompts, new_tokens=4,
+            max_batch=2, max_context=512,
+        )
+    sync = _CACHE["prop_sync"]
+    arrivals = {}
+    for i, t in enumerate(ticks):
+        arrivals.setdefault(t, []).append(i)
+    _, streamed = _async_run(cfg, params, prompts, arrivals=arrivals,
+                             new_tokens=4, max_batch=2, max_context=512)
+    assert streamed == sync
+
+
+def test_restore_preserves_stream_ordering(setup):
+    """An injected decode-NaN forces a checkpoint restore mid-stream: the
+    engine truncates ``req.output`` to the checkpoint watermark and
+    regenerates it byte-identically.  The frontend's max-watermark pump
+    must neither re-emit nor reorder — the streamed sequence equals the
+    fault-free sync baseline exactly."""
+    cfg, params = setup
+    prompts = _prompts(cfg, 2, seed=3)
+    kw = dict(max_batch=2, max_context=512)
+    sync = _sync_baseline(cfg, params, prompts, new_tokens=10, **kw)
+    inj = FaultInjector([
+        FaultSpec("decode_nan", from_tick=2, until_tick=8, seq_id=0,
+                  count=1),
+    ])
+    eng, streamed = _async_run(
+        cfg, params, prompts, new_tokens=10,
+        arrivals={0: [0], 1: [1]}, injector=inj, **kw,
+    )
+    assert inj.fired.get("decode_nan") == 1, "fault must actually fire"
+    assert eng.metrics.checkpoints_restored >= 1
+    assert streamed == sync
+
+
+def test_submit_after_shutdown_raises(setup):
+    cfg, params = setup
+    prompts = _prompts(cfg, 1, tokens=48)
+    eng = Engine(cfg, params, ServeConfig(max_batch=1, max_context=512))
+    fe = AsyncFrontend(eng)
+    fe.shutdown()
+    with pytest.raises(RuntimeError, match="shut down"):
+        fe.submit(_mkreq(0, prompts))
+
+
+def test_submit_validation_raises_synchronously(setup):
+    """Engine-side validation (oversize prompt) surfaces from submit(),
+    not later from inside the serve loop."""
+    cfg, params = setup
+    eng = Engine(cfg, params, ServeConfig(max_batch=1, max_context=128))
+    fe = AsyncFrontend(eng)
+    big = Request(0, np.zeros(120, np.int32), max_new_tokens=64)
+    with pytest.raises(ValueError, match="exceeds max_context"):
+        fe.submit(big)
+
+
+def test_drain_waits_without_closing_admission(setup):
+    """drain() returns once in-flight work completes but keeps the front
+    door open: a post-drain submit still serves; shutdown() then ends
+    run() with the cumulative finished list."""
+    cfg, params = setup
+    prompts = _prompts(cfg, 2, tokens=48, seed=4)
+    eng = Engine(cfg, params, ServeConfig(max_batch=1, max_context=512))
+
+    async def main():
+        fe = AsyncFrontend(eng, max_ticks=400)
+        s0 = fe.submit(_mkreq(0, prompts, new_tokens=4))
+        task = asyncio.create_task(fe.run())
+        await fe.drain()
+        assert s0.req.done and not task.done()
+        s1 = fe.submit(_mkreq(1, prompts, new_tokens=4))  # still accepting
+        await fe.drain()
+        assert s1.req.done
+        fe.shutdown()
+        finished = await task
+        assert sorted(r.req_id for r in finished) == [0, 1]
+        assert len(await s0.collect()) == 4
+        assert len(await s1.collect()) == 4
+
+    asyncio.run(main())
+
+
+def test_stream_surfaces_failed_requests(setup):
+    """A request that exhausts its failure budget closes its stream with
+    status='failed' instead of hanging the consumer."""
+    import dataclasses
+
+    cfg, params = setup
+    prompts = _prompts(cfg, 1, seed=5)
+    serve = ServeConfig(max_batch=1, max_context=512)
+    serve = dataclasses.replace(
+        serve, resilience=dataclasses.replace(
+            serve.resilience, failure_budget=1,
+        ),
+    )
+    eng = Engine(cfg, params, serve)
+    eng.set_fault_injector(FaultInjector([
+        FaultSpec("decode_nan", from_tick=0, until_tick=10_000, seq_id=0),
+    ]))
+
+    async def main():
+        fe = AsyncFrontend(eng, max_ticks=400)
+        stream = fe.submit(_mkreq(0, prompts, new_tokens=8))
+        task = asyncio.create_task(fe.run())
+        fe.shutdown()
+        await task
+        toks = await stream.collect()
+        return stream, toks
+
+    stream, toks = asyncio.run(main())
+    assert stream.failed and stream.status == "failed"
+    assert len(toks) < 8, "failure budget must cut the stream short"

@@ -1,0 +1,300 @@
+"""SLO-aware scheduling: EDF admission order, deadline-aware preemption
+(property-tested invariant: the victim never has a nearer deadline than any
+peer), per-class deadline-miss metrics, and prefix-cache-aware admission
+grouping.  Scheduler-level tests run without a model (pool + metrics only);
+the grouping end-to-end test drives a real engine."""
+import jax
+import numpy as np
+import pytest
+
+from repro.cache.paged_kv import PagePool
+from repro.cache.prefix_cache import PrefixCache
+from repro.config import ServeConfig
+from repro.configs import get_config, smoke_variant
+from repro.models import Transformer
+from repro.serving import Engine, Request
+from repro.serving.metrics import ServingMetrics
+from repro.serving.scheduler import (
+    DECODE,
+    SLO_BATCH,
+    SLO_DEADLINE,
+    SLO_INTERACTIVE,
+    Scheduler,
+    SeqState,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    import sys as _sys
+    from pathlib import Path as _Path
+
+    _sys.path.insert(0, str(_Path(__file__).parent))
+    from _hypothesis_fallback import given, settings, strategies as st
+
+
+def _sched(pool_pages=64, prefix=True, **serve_kw):
+    serve = ServeConfig(
+        max_batch=4, max_context=512, pool_pages=pool_pages, **serve_kw
+    )
+    pool = PagePool(pool_pages)
+    cache = PrefixCache(pool) if prefix else None
+    clock = iter(range(10_000))
+    metrics = ServingMetrics(clock=lambda: float(next(clock)))
+    return Scheduler(serve, pool, cache, metrics), pool, metrics
+
+
+def _req(rid, n=64, max_new=8, slo=SLO_INTERACTIVE, deadline_s=None):
+    rng = np.random.default_rng(rid)
+    return Request(rid, rng.integers(0, 200, n).astype(np.int32),
+                   max_new_tokens=max_new, slo_class=slo,
+                   deadline_s=deadline_s)
+
+
+# -- submit validation -------------------------------------------------------
+
+
+def test_submit_rejects_unknown_slo_class():
+    sched, _, _ = _sched()
+    with pytest.raises(ValueError, match="unknown SLO class"):
+        sched.submit(_req(0, slo="premium"))
+
+
+def test_submit_deadline_class_requires_deadline_s():
+    sched, _, _ = _sched()
+    with pytest.raises(ValueError, match="deadline_s"):
+        sched.submit(_req(0, slo=SLO_DEADLINE))
+    with pytest.raises(ValueError, match="deadline_s"):
+        sched.submit(_req(1, slo=SLO_DEADLINE, deadline_s=-3.0))
+
+
+# -- EDF admission order -----------------------------------------------------
+
+
+def test_interactive_outranks_earlier_batch_arrival():
+    """EDF admission: a later interactive arrival (deadline t+1) jumps an
+    earlier batch arrival (deadline t+60)."""
+    sched, _, _ = _sched()
+    sched.submit(_req(0, slo=SLO_BATCH))           # t=0, deadline 60
+    sched.submit(_req(1, slo=SLO_INTERACTIVE))     # t=1, deadline  2
+    plan = sched.plan_tick(free_slots=[0, 1])
+    assert [a.seq.seq_id for a in plan.admitted] == [1, 0]
+
+
+def test_tight_deadline_outranks_interactive():
+    sched, _, _ = _sched()
+    sched.submit(_req(0, slo=SLO_INTERACTIVE))           # t=0, deadline 1
+    sched.submit(_req(1, slo=SLO_DEADLINE, deadline_s=0.25))  # t=1, dl 1.25
+    sched.submit(_req(2, slo=SLO_DEADLINE, deadline_s=0.1))   # t=2, dl 2.1
+    plan = sched.plan_tick(free_slots=[0, 1, 2])
+    assert [a.seq.seq_id for a in plan.admitted] == [0, 1, 2]
+
+
+def test_same_class_edf_degenerates_to_fcfs():
+    """Within one class deadlines grow with submit time, so EDF == FCFS —
+    the pre-SLO admission order is preserved exactly."""
+    sched, _, _ = _sched()
+    for rid in range(4):
+        sched.submit(_req(rid, slo=SLO_BATCH))
+    plan = sched.plan_tick(free_slots=[0, 1, 2, 3])
+    assert [a.seq.seq_id for a in plan.admitted] == [0, 1, 2, 3]
+
+
+def test_preempted_request_keeps_its_deadline_in_queue():
+    """A preempted sequence re-queues at its ORIGINAL deadline's EDF
+    position — ahead of later, less-urgent arrivals — not at the back."""
+    sched, _, _ = _sched(pool_pages=8)
+    a = sched.submit(_req(0, n=64, max_new=64))            # deadline t0+1
+    sched.plan_tick(free_slots=[0])
+    a.prefilled = a.n_prefill
+    a.state = DECODE
+    a.req.output.append(7)
+    sched._preempt(a)
+    d0 = a.deadline
+    b = sched.submit(_req(1, n=64, slo=SLO_BATCH))         # deadline t+60
+    assert a.deadline == d0
+    assert sched.waiting == [a, b], "preempted seq outranks the batch req"
+
+
+# -- deadline-aware preemption (property-tested invariant) -------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    deadlines=st.lists(
+        st.integers(min_value=0, max_value=50), min_size=2, max_size=8
+    )
+)
+def test_choose_victim_never_picks_nearer_deadline(deadlines):
+    """The preemption victim's effective deadline is >= every candidate's:
+    deadline-aware selection never sacrifices a more urgent sequence."""
+    sched, _, _ = _sched()
+    seqs = []
+    for i, d in enumerate(deadlines):
+        s = SeqState(_req(i), arrival=i)
+        s.deadline = float(d)
+        seqs.append(s)
+    victim = sched.choose_victim(seqs)
+    assert all(victim.deadline >= s.deadline for s in seqs)
+    # deterministic tie-break: latest arrival among the farthest deadlines
+    far = [s for s in seqs if s.deadline == victim.deadline]
+    assert victim is max(far, key=lambda s: s.arrival)
+
+
+def test_prepare_decode_victimizes_farthest_deadline():
+    """Pool exhaustion preempts the BATCH sequence even though it arrived
+    first — the old latest-arrival policy would have chosen the
+    interactive one."""
+    sched, pool, metrics = _sched(pool_pages=8)
+    a = sched.submit(_req(0, n=64, max_new=64, slo=SLO_BATCH))
+    b = sched.submit(_req(1, n=64, max_new=64, slo=SLO_INTERACTIVE))
+    plan = sched.plan_tick(free_slots=[0, 1])
+    assert len(plan.admitted) == 2
+    for s in (a, b):
+        s.prefilled = s.n_prefill
+        s.state = DECODE
+        s.req.output.append(7)
+    # pool full (8/8): the next-token reservation forces a preemption
+    preempted = sched.prepare_decode([a, b])
+    assert preempted == [a], "farthest deadline (batch) must be the victim"
+    assert b.deadline < a.deadline
+    assert pool.seq_tokens(1) == 65       # interactive got its reservation
+    assert metrics.preemptions == 1
+
+
+# -- per-class metrics / deadline misses -------------------------------------
+
+
+def test_deadline_miss_accounting_per_class():
+    clock = iter(range(10_000))
+    m = ServingMetrics(clock=lambda: float(next(clock)))
+    # interactive req: submit t=0, deadline 2.0; first token at t=1 -> hit
+    r0 = m.on_submit(0, 8, slo_class=SLO_INTERACTIVE)
+    r0.deadline = 2.0
+    m.on_first_token(0)                   # t=1
+    m.on_decode_token(0)
+    m.on_finish(0)                        # t=2
+    # batch req: submit t=3, deadline 4.0; first token at t=5 -> miss
+    r1 = m.on_submit(1, 8, slo_class=SLO_BATCH)
+    r1.deadline = 4.0
+    m.on_admit(1)                         # t=4
+    m.on_first_token(1)                   # t=5
+    m.on_decode_token(1)
+    m.on_finish(1)                        # t=6
+    # deadline req: submit t=7, completion deadline 8.5; first token t=8
+    # (already past a TTFT deadline, but the class misses on FINISH time)
+    r2 = m.on_submit(2, 8, slo_class=SLO_DEADLINE)
+    r2.deadline = 8.5
+    m.on_first_token(2)                   # t=8
+    m.on_decode_token(2)
+    m.on_finish(2)                        # t=9 > 8.5 -> miss
+    assert not r0.deadline_missed
+    assert r1.deadline_missed
+    assert r2.deadline_missed
+    snap = m.snapshot()
+    assert snap["deadline_misses"] == 2
+    assert snap["deadline_miss_rate"] == pytest.approx(2 / 3)
+    per = snap["per_class"]
+    assert per["interactive"]["deadline_misses"] == 0
+    assert per["batch"]["deadline_miss_rate"] == 1.0
+    assert per["deadline"]["deadline_misses"] == 1
+    assert per["interactive"]["ttft_p99"] == pytest.approx(1.0)
+
+
+def test_snapshot_empty_run_is_json_safe():
+    import json
+
+    m = ServingMetrics(clock=lambda: 0.0)
+    snap = m.snapshot()
+    assert snap["deadline_miss_rate"] == 0.0
+    assert snap["per_class"] == {}
+    assert snap["ttft_p99"] == 0.0 and snap["tpot_p99"] == 0.0
+    json.dumps(snap)                      # must serialize
+
+
+# -- prefix-cache-aware admission grouping -----------------------------------
+
+
+def test_admission_defers_for_pending_shared_prefix():
+    """A request whose prompt's first pages are mid-prefill by a peer is
+    deferred (bounded) instead of admitted to recompute them in parallel."""
+    sched, _, metrics = _sched(
+        pool_pages=64, prefill_tokens_per_tick=32, prefill_chunk=32,
+        prefix_wait_ticks=4,
+    )
+    a = sched.submit(_req(0, n=128))
+    prompt_b = np.concatenate([
+        a.req.prompt[:64],
+        np.arange(64, dtype=np.int32) + 500,
+    ])
+    sched.plan_tick(free_slots=[0, 1])    # a admitted, starts prefilling
+    sched.submit(Request(1, prompt_b, max_new_tokens=8))
+    plan2 = sched.plan_tick(free_slots=[1])
+    assert plan2.admitted == [], "b must defer behind a's shared prefix"
+    assert metrics.prefix_deferrals == 1
+    # the deferral is bounded: after prefix_wait_ticks it admits anyway
+    for _ in range(4):
+        plan = sched.plan_tick(free_slots=[1])
+    assert [adm.seq.seq_id for adm in plan.admitted] == [1]
+    assert metrics.prefix_deferrals == 4
+
+
+def test_no_deferral_without_shared_prefix():
+    sched, _, metrics = _sched(
+        pool_pages=64, prefill_tokens_per_tick=32, prefill_chunk=32,
+        prefix_wait_ticks=4,
+    )
+    sched.submit(_req(0, n=128))
+    sched.plan_tick(free_slots=[0, 1])
+    sched.submit(_req(1, n=128))          # different rng -> no shared pages
+    plan = sched.plan_tick(free_slots=[1])
+    assert [adm.seq.seq_id for adm in plan.admitted] == [1]
+    assert metrics.prefix_deferrals == 0
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_variant(get_config("llama3.2-3b"))
+    model = Transformer(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_engine_grouping_turns_parallel_prefills_into_cache_hits(setup):
+    """End-to-end: two same-prefix requests arriving one tick apart.  With
+    grouping the second defers until the first publishes its pages, then
+    admits as a prefix-cache hit; without grouping it prefilled the shared
+    span in parallel (prefix_hit_tokens == 0)."""
+    cfg, params = setup
+    rng = np.random.default_rng(3)
+    shared = rng.integers(0, cfg.vocab_size, 128).astype(np.int32)
+    suffix = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
+
+    def reqs():
+        return [
+            Request(0, shared.copy(), max_new_tokens=4),
+            Request(1, np.concatenate([shared, suffix]), max_new_tokens=4),
+        ]
+
+    def run(wait_ticks):
+        eng = Engine(cfg, params, ServeConfig(
+            max_batch=2, max_context=512, prefill_chunk=64,
+            prefill_tokens_per_tick=64, prefix_wait_ticks=wait_ticks,
+        ))
+        r0, r1 = reqs()
+        eng.submit(r0)
+        eng.step()                        # r0 admitted, starts prefilling
+        eng.submit(r1)
+        eng.run_until_done(max_ticks=200)
+        return eng, (r0, r1)
+
+    grouped, (g0, g1) = run(wait_ticks=8)
+    parallel, (p0, p1) = run(wait_ticks=0)
+    assert all(r.done for r in (g0, g1, p0, p1))
+    # token identity is independent of the grouping policy
+    assert g0.output == p0.output and g1.output == p1.output
+    hits_grouped = grouped.metrics.requests[1].prefix_hit_tokens
+    hits_parallel = parallel.metrics.requests[1].prefix_hit_tokens
+    assert hits_grouped >= 128, hits_grouped
+    assert hits_parallel == 0, hits_parallel
+    assert grouped.metrics.prefix_deferrals > 0
