@@ -5,8 +5,10 @@ Reads the benchmark artifacts written by ``benchmarks/decode_latency.py``
 (``BENCH_prefill.json``), ``benchmarks/memory_bench.py``
 (``BENCH_memory.json``), ``benchmarks/serving_bench.py``
 (``BENCH_serving.json``), ``benchmarks/chaos_bench.py``
-(``BENCH_chaos.json``) and ``benchmarks/scenarios.py``
-(``BENCH_scenarios.json``) and checks them against the floors below.
+(``BENCH_chaos.json``), ``benchmarks/scenarios.py``
+(``BENCH_scenarios.json``) and the contract-verifier report written by
+``python -m repro.analysis.contracts`` (``BENCH_analysis.json``) and checks
+them against the floors below.
 
 Floors are deliberately conservative where wall clock is involved
 (interpret mode on shared CI runners is noisy), and exact where the metric
@@ -126,6 +128,13 @@ CHECKS: List[Tuple[str, str, str, str, float]] = [
     ("scenarios.prefix_churn.interactive_ttft_p99", "scenarios",
      "scenarios.prefix_churn.per_class.interactive.ttft_p99_ticks",
      "<=", 30),
+    # -- static-analysis lane (repro.analysis.contracts): the abstract
+    # kernel-contract verifier must keep covering the full backend registry
+    # x at least two zoo configs — coverage can't silently shrink — and the
+    # committed report must be violation-free.
+    ("analysis.backends_covered", "analysis", "backends_covered", ">=", 3),
+    ("analysis.configs_covered", "analysis", "configs_covered", ">=", 2),
+    ("analysis.n_failures", "analysis", "n_failures", "<=", 0),
 ]
 
 
@@ -178,12 +187,14 @@ def main() -> None:
     ap.add_argument("--chaos", default=str(ROOT / "BENCH_chaos.json"))
     ap.add_argument("--scenarios",
                     default=str(ROOT / "BENCH_scenarios.json"))
+    ap.add_argument("--analysis",
+                    default=str(ROOT / "BENCH_analysis.json"))
     args = ap.parse_args()
 
     artifacts = {
         name: _load(pathlib.Path(getattr(args, name)))
         for name in ("decode", "prefill", "memory", "serving",
-                     "chaos", "scenarios")
+                     "chaos", "scenarios", "analysis")
     }
 
     rows = []

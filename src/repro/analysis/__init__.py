@@ -1,0 +1,28 @@
+"""Repo-specific static analysis: hazard linter + kernel-contract verifier.
+
+Two entry points, both wired as the CI ``analysis`` lane:
+
+- ``python -m repro.analysis.lint src/`` — AST-based lint engine running the
+  RPR0xx rule set distilled from this repo's actual bug history (cached
+  tracers, donated-buffer reuse, host/device descriptor discipline, blocking
+  calls in async serving code, fault-hook placement, dead config flags,
+  import-time device state).  ``# noqa: RPR0xx`` pragmas suppress findings
+  per line; unused pragmas are themselves findings (RPR008).
+
+- ``python -m repro.analysis.contracts`` — abstract kernel-contract verifier:
+  pure ``jax.eval_shape`` (no device execution) over every registered
+  attention backend and a grid of config-zoo models, checking that plan
+  descriptors, cache entries and kernel outputs agree on shape/dtype/layout,
+  that ragged descriptors are host numpy at plan time, and that the sharding
+  rule table covers every cache pytree leaf.
+"""
+from repro.analysis.lint import LintEngine, lint_paths
+from repro.analysis.rules import ALL_RULES, Finding, Rule
+
+__all__ = [
+    "ALL_RULES",
+    "Finding",
+    "LintEngine",
+    "Rule",
+    "lint_paths",
+]

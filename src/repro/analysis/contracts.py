@@ -1,0 +1,361 @@
+"""Abstract kernel-contract verifier: ``python -m repro.analysis.contracts``.
+
+Pure ``jax.eval_shape`` / :class:`jax.ShapeDtypeStruct` abstract evaluation —
+NO device execution, no weights, no RNG draws — over every requested
+attention backend × a grid of config-zoo models (smoke variants, sparse
+enabled).  Per (config, backend) cell it verifies the contracts the runtime
+stack assumes but nothing previously checked end-to-end:
+
+- **plan hygiene** (the PR 3 tracer-capture guard at the contract level):
+  ``AttentionPlan`` / ``RaggedLayout`` descriptors — ``stacked`` layout
+  arrays, ``offsets``, ``row_offsets``/``n_blocks``/``top_k`` — are
+  host-resident numpy integers at plan time, never ``jax.Array``;
+- **cache agreement**: ``init_cache`` allocates the ``_layouts`` mirror with
+  exactly the plan's stacked shapes/dtypes, and ``seq_len`` is ``int32[B]``;
+- **step stability**: ``decode_step`` and ``prefill_chunk`` return a cache
+  pytree with the SAME treedef and identical leaf shape/dtype as their input
+  (the engine donates the cache buffer-for-buffer: any drift recompiles
+  every step and breaks donation), and decode logits are
+  ``[B, vocab]``.  Tracing the pallas backend abstractly also validates its
+  ``BlockSpec`` index maps and grids (``pallas_call`` checks them at trace
+  time), so kernel/block-shape agreement is covered without touching a
+  device;
+- **cross-backend agreement**: all backends produce identical output specs
+  for the same config (the parity oracle's precondition);
+- **sharding coverage**: every cache pytree leaf is explicitly covered by
+  the distributed rule table
+  (:func:`repro.distributed.params.cache_leaf_covered`) — silent
+  replicate-by-default of a new KV entry is a memory-scaling bug.
+
+Writes a machine-readable JSON report (``--output``) consumed by
+``benchmarks/check_regression.py`` so backend/config coverage can never
+silently shrink.  Exit status 1 on any contract violation.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_CONFIGS = ("llama3.2-3b", "qwen3-8b")
+DEFAULT_BACKENDS = ("dense", "reference", "pallas")
+
+
+class ContractFailure(Exception):
+    pass
+
+
+def _spec(x) -> Tuple[Tuple[int, ...], str]:
+    return (tuple(x.shape), str(x.dtype))
+
+
+def _leaf_specs(tree) -> List[Tuple[str, Tuple[Tuple[int, ...], str]]]:
+    from repro.distributed.params import _path_str
+
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(_path_str(path), _spec(leaf)) for path, leaf in flat]
+
+
+def _require(cond: bool, message: str) -> None:
+    if not cond:
+        raise ContractFailure(message)
+
+
+def _check_host_int(name: str, arr) -> None:
+    _require(
+        isinstance(arr, np.ndarray) and not isinstance(arr, jax.Array),
+        f"{name} must be host numpy at plan time, got {type(arr).__name__} "
+        "(a device value here rides the lru-cached plan into every trace — "
+        "the PR 3 cached-tracer bug shape)",
+    )
+    _require(
+        arr.dtype.kind in "iub",
+        f"{name} must be an integer/bool descriptor, got dtype {arr.dtype}",
+    )
+
+
+def check_plan_hygiene(model, context_len: int) -> None:
+    """Plan/layout descriptors are host numpy integers (PR 3 guard)."""
+    plan = model.attention_plan(context_len)
+    if not plan.active:
+        return
+    for i, leaf in enumerate(jax.tree_util.tree_leaves(plan.stacked)):
+        _check_host_int(f"plan.stacked leaf {i}", leaf)
+    _check_host_int("plan.offsets", plan.offsets)
+    layouts = model.sparse_layouts(context_len) or []
+    for li, lay in enumerate(layouts):
+        _check_host_int(f"layout[{li}].row_offsets", lay.row_offsets_arr)
+        _check_host_int(f"layout[{li}].n_blocks", lay.n_blocks_arr)
+        _check_host_int(f"layout[{li}].top_k", lay.top_k_arr)
+
+
+def check_cache_agreement(model, cache_spec, batch: int, context_len: int):
+    """init_cache's ``_layouts`` mirror matches the plan's stacked
+    descriptors leaf-for-leaf; ``seq_len`` is int32[batch]."""
+    sl = cache_spec["seq_len"]
+    _require(
+        tuple(sl.shape) == (batch,) and sl.dtype == jnp.int32,
+        f"cache seq_len must be int32[{batch}], got "
+        f"{sl.dtype}[{tuple(sl.shape)}]",
+    )
+    plan = model.attention_plan(context_len)
+    if not plan.active:
+        return
+    _require(
+        "_layouts" in cache_spec,
+        "sparse-active cache is missing the _layouts plan mirror",
+    )
+    plan_leaves = jax.tree_util.tree_leaves(plan.stacked)
+    cache_leaves = jax.tree_util.tree_leaves(cache_spec["_layouts"])
+    _require(
+        len(plan_leaves) == len(cache_leaves),
+        f"_layouts has {len(cache_leaves)} leaves, plan.stacked has "
+        f"{len(plan_leaves)}",
+    )
+    for i, (p, c) in enumerate(zip(plan_leaves, cache_leaves)):
+        _require(
+            tuple(p.shape) == tuple(c.shape),
+            f"_layouts leaf {i} shape {tuple(c.shape)} != plan.stacked "
+            f"{tuple(p.shape)}",
+        )
+
+
+def check_step_stability(model, params_spec, cache_spec, batch: int):
+    """decode_step/prefill_chunk preserve the cache pytree spec exactly and
+    decode emits [batch, vocab] logits.  Returns the decode output specs for
+    cross-backend comparison."""
+    tokens = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    logits, out_cache = jax.eval_shape(
+        model.decode_step, params_spec, cache_spec, tokens
+    )
+    _require(
+        tuple(logits.shape) == (batch, model.cfg.vocab_size),
+        f"decode logits {tuple(logits.shape)} != "
+        f"({batch}, {model.cfg.vocab_size})",
+    )
+    in_specs = _leaf_specs(cache_spec)
+    out_specs = _leaf_specs(out_cache)
+    _require(
+        len(in_specs) == len(out_specs),
+        f"decode_step changed the cache leaf count "
+        f"{len(in_specs)} -> {len(out_specs)} (breaks donation)",
+    )
+    for (pi, si), (po, so) in zip(in_specs, out_specs):
+        _require(
+            pi == po and si == so,
+            f"decode_step cache drift at {pi!r}: {si} -> ({po!r}, {so}) — "
+            "the engine donates the cache; spec drift recompiles every step",
+        )
+
+    sp = model.cfg.sparse
+    chunk = max(sp.prefill_block_q, sp.page_size)
+    scalar = jax.ShapeDtypeStruct((), jnp.int32)
+    _, pf_cache = jax.eval_shape(
+        model.prefill_chunk,
+        params_spec,
+        cache_spec,
+        scalar,
+        jax.ShapeDtypeStruct((chunk,), jnp.int32),
+        scalar,
+        scalar,
+    )
+    for (pi, si), (po, so) in zip(in_specs, _leaf_specs(pf_cache)):
+        _require(
+            pi == po and si == so,
+            f"prefill_chunk cache drift at {pi!r}: {si} -> ({po!r}, {so})",
+        )
+    return (_spec(logits), out_specs)
+
+
+def check_sharding_coverage(cache_spec) -> None:
+    """Every cache leaf must be EXPLICITLY covered by the sharding rule
+    table — no silent replicate-by-default."""
+    from repro.distributed.params import cache_leaf_covered
+
+    for path, (shape, dtype) in _leaf_specs(cache_spec):
+        _require(
+            cache_leaf_covered(path, len(shape)),
+            f"cache leaf {path!r} ({dtype}[{shape}]) is not covered by the "
+            "distributed _CACHE_RULES table and would silently replicate "
+            "across the model axis — add a rule (or whitelist a planted "
+            "entry) in repro.distributed.params",
+        )
+
+
+def verify_cell(
+    config_name: str,
+    backend: str,
+    batch: int,
+    context_len: int,
+) -> List[dict]:
+    """All contract checks for one (config, backend) cell.
+
+    Returns ``[{check, config, backend, message}]`` failures (empty = pass)
+    plus stashes the decode output specs on the returned list via the
+    ``specs`` attribute convention (tuple appended by the caller instead).
+    """
+    import dataclasses
+
+    from repro.configs import get_config, smoke_variant
+    from repro.models.transformer import Transformer
+
+    failures: List[dict] = []
+    cfg = smoke_variant(get_config(config_name))
+    cfg = dataclasses.replace(
+        cfg,
+        sparse=dataclasses.replace(cfg.sparse, enabled=True, backend=backend),
+    )
+    model = Transformer(cfg)
+
+    def run(check_name, fn):
+        try:
+            return fn()
+        except ContractFailure as e:
+            failures.append(
+                {
+                    "check": check_name,
+                    "config": config_name,
+                    "backend": backend,
+                    "message": str(e),
+                }
+            )
+        except Exception as e:  # abstract tracing itself failed
+            failures.append(
+                {
+                    "check": check_name,
+                    "config": config_name,
+                    "backend": backend,
+                    "message": f"{type(e).__name__}: {e}",
+                }
+            )
+        return None
+
+    run("plan_hygiene", lambda: check_plan_hygiene(model, context_len))
+
+    params_spec = run(
+        "abstract_init",
+        lambda: jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0))),
+    )
+    cache_spec = run(
+        "abstract_cache",
+        lambda: jax.eval_shape(lambda: model.init_cache(batch, context_len)),
+    )
+    if params_spec is None or cache_spec is None:
+        return failures, None
+
+    run(
+        "cache_agreement",
+        lambda: check_cache_agreement(model, cache_spec, batch, context_len),
+    )
+    decode_specs = run(
+        "step_stability",
+        lambda: check_step_stability(model, params_spec, cache_spec, batch),
+    )
+    run("sharding_coverage", lambda: check_sharding_coverage(cache_spec))
+    return failures, decode_specs
+
+
+def run_contracts(
+    configs: Sequence[str] = DEFAULT_CONFIGS,
+    backends: Sequence[str] = DEFAULT_BACKENDS,
+    batch: int = 2,
+    context_len: int = 512,
+) -> dict:
+    """Full grid -> report dict (the BENCH_analysis.json payload)."""
+    failures: List[dict] = []
+    cells = 0
+    for config_name in configs:
+        specs_by_backend: Dict[str, object] = {}
+        for backend in backends:
+            cells += 1
+            cell_failures, decode_specs = verify_cell(
+                config_name, backend, batch, context_len
+            )
+            failures.extend(cell_failures)
+            if decode_specs is not None:
+                specs_by_backend[backend] = decode_specs
+        # cross-backend agreement: identical output specs per config.
+        if len(specs_by_backend) > 1:
+            items = sorted(specs_by_backend.items())
+            ref_name, ref = items[0]
+            for name, specs in items[1:]:
+                if specs != ref:
+                    failures.append(
+                        {
+                            "check": "cross_backend_agreement",
+                            "config": config_name,
+                            "backend": name,
+                            "message": (
+                                f"output specs differ from backend "
+                                f"{ref_name!r} on {config_name!r} — parity "
+                                "oracles compare these outputs elementwise"
+                            ),
+                        }
+                    )
+    return {
+        "tool": "repro.analysis.contracts",
+        "configs": list(configs),
+        "backends": list(backends),
+        "configs_covered": len(configs),
+        "backends_covered": len(backends),
+        "cells": cells,
+        "batch": batch,
+        "context_len": context_len,
+        "n_failures": len(failures),
+        "failures": failures,
+    }
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis.contracts",
+        description=(
+            "Abstract (eval_shape-only) kernel-contract verifier over "
+            "backends x config-zoo models."
+        ),
+    )
+    parser.add_argument(
+        "--configs", nargs="+", default=list(DEFAULT_CONFIGS)
+    )
+    parser.add_argument(
+        "--backends", nargs="+", default=list(DEFAULT_BACKENDS)
+    )
+    parser.add_argument("--batch", type=int, default=2)
+    parser.add_argument("--context-len", type=int, default=512)
+    parser.add_argument(
+        "--output", default=None, help="write the JSON report here"
+    )
+    args = parser.parse_args(argv)
+
+    report = run_contracts(
+        configs=args.configs,
+        backends=args.backends,
+        batch=args.batch,
+        context_len=args.context_len,
+    )
+    for f in report["failures"]:
+        print(
+            f"FAIL [{f['config']} x {f['backend']}] {f['check']}: "
+            f"{f['message']}"
+        )
+    print(
+        f"contracts: {report['cells']} cells "
+        f"({report['backends_covered']} backends x "
+        f"{report['configs_covered']} configs), "
+        f"{report['n_failures']} failure(s)"
+    )
+    if args.output:
+        from pathlib import Path
+
+        Path(args.output).write_text(json.dumps(report, indent=2) + "\n")
+    return 1 if report["n_failures"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,180 @@
+"""Lint engine + CLI: ``python -m repro.analysis.lint src/ [tests/ ...]``.
+
+Walks the given paths, parses every ``.py`` file once, runs each
+:class:`~repro.analysis.rules.Rule` (per-file hooks, then project-wide
+hooks), applies ``# noqa: RPR0xx`` pragma suppression, and finally emits
+RPR008 for every pragma that suppressed nothing.  Exit status 1 on any
+finding — this is the CI ``analysis`` lane's lint half.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence
+
+from repro.analysis.pragmas import Pragma, collect_pragmas, suppressed
+from repro.analysis.rules import (
+    ALL_RULES,
+    FileContext,
+    Finding,
+    Rule,
+    UNUSED_PRAGMA_CODE,
+)
+
+import ast
+
+
+def _iter_py_files(paths: Sequence[str]) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            out.extend(sorted(path.rglob("*.py")))
+        elif path.suffix == ".py":
+            out.append(path)
+    # de-dup while keeping order (a file listed and inside a listed dir).
+    seen, uniq = set(), []
+    for f in out:
+        r = f.resolve()
+        if r not in seen:
+            seen.add(r)
+            uniq.append(f)
+    return uniq
+
+
+class LintEngine:
+    """Runs a rule set over a file tree with pragma suppression."""
+
+    def __init__(self, rules: Optional[Sequence[Rule]] = None):
+        self.rules: Sequence[Rule] = tuple(rules) if rules else ALL_RULES
+
+    def run(self, paths: Sequence[str]) -> List[Finding]:
+        contexts: List[FileContext] = []
+        pragma_maps: Dict[str, Dict[int, Pragma]] = {}
+        findings: List[Finding] = []
+
+        for path in _iter_py_files(paths):
+            try:
+                source = path.read_text()
+            except (OSError, UnicodeDecodeError) as e:
+                findings.append(
+                    Finding("RPR000", f"unreadable: {e}", str(path), 1)
+                )
+                continue
+            try:
+                tree = ast.parse(source, filename=str(path))
+            except SyntaxError as e:
+                findings.append(
+                    Finding(
+                        "RPR000",
+                        f"syntax error: {e.msg}",
+                        str(path),
+                        e.lineno or 1,
+                    )
+                )
+                continue
+            contexts.append(FileContext(str(path), source, tree))
+            pragma_maps[str(path)] = collect_pragmas(source)
+
+        raw: List[Finding] = []
+        for ctx in contexts:
+            for rule in self.rules:
+                raw.extend(rule.check_file(ctx))
+        for rule in self.rules:
+            raw.extend(rule.check_project(contexts))
+
+        for f in raw:
+            pragmas = pragma_maps.get(f.path, {})
+            if not suppressed(pragmas, f.line, f.code):
+                findings.append(f)
+
+        # RPR008: pragmas that suppressed nothing are stale — real
+        # violations sneak back in behind them.
+        for path, pragmas in pragma_maps.items():
+            for pragma in pragmas.values():
+                for code in pragma.unused_codes:
+                    findings.append(
+                        Finding(
+                            UNUSED_PRAGMA_CODE,
+                            f"unused suppression: no {code} finding on this "
+                            "line — remove the stale pragma",
+                            path,
+                            pragma.line,
+                        )
+                    )
+
+        findings.sort(key=lambda f: (f.path, f.line, f.code))
+        return findings
+
+
+def lint_paths(
+    paths: Sequence[str],
+    select: Optional[Iterable[str]] = None,
+) -> List[Finding]:
+    """Convenience wrapper: lint ``paths``, optionally restricted to the
+    given RPR codes (RPR008 pragma accounting always runs)."""
+    rules: Optional[List[Rule]] = None
+    if select is not None:
+        wanted = set(select)
+        rules = [r for r in ALL_RULES if r.code in wanted]
+    return LintEngine(rules).run(paths)
+
+
+def _report(findings: List[Finding], fmt: str, n_files: int) -> str:
+    if fmt == "json":
+        return json.dumps(
+            {
+                "tool": "repro.analysis.lint",
+                "n_files": n_files,
+                "n_findings": len(findings),
+                "findings": [f.as_dict() for f in findings],
+            },
+            indent=2,
+        )
+    lines = [f.format() for f in findings]
+    lines.append(
+        f"{len(findings)} finding(s) in {n_files} file(s)"
+        if findings
+        else f"clean: 0 findings in {n_files} file(s)"
+    )
+    return "\n".join(lines)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="Repo-specific JAX/Pallas hazard linter (RPR0xx rules).",
+    )
+    parser.add_argument("paths", nargs="+", help="files or directories")
+    parser.add_argument(
+        "--format", choices=("text", "json"), default="text", dest="fmt"
+    )
+    parser.add_argument(
+        "--output", default=None, help="also write the report to this path"
+    )
+    parser.add_argument(
+        "--select",
+        default=None,
+        help="comma-separated RPR codes to run (default: all)",
+    )
+    args = parser.parse_args(argv)
+
+    select = (
+        [c.strip() for c in args.select.split(",") if c.strip()]
+        if args.select
+        else None
+    )
+    n_files = len(_iter_py_files(args.paths))
+    findings = lint_paths(args.paths, select=select)
+    report = _report(findings, args.fmt, n_files)
+    print(report)
+    if args.output:
+        out = _report(findings, "json", n_files)
+        Path(args.output).write_text(out + "\n")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

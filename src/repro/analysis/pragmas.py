@@ -1,0 +1,68 @@
+"""``# noqa: RPR0xx`` pragma parsing and suppression accounting.
+
+Only RPR codes are handled here: a bare ``# noqa`` or foreign codes
+(``F401`` ...) are ruff's territory and pass through untouched, so the two
+gates never overlap.  A pragma that suppresses nothing is itself a finding
+(RPR008, reported by the engine) — stale suppressions are how real
+violations sneak back in.
+"""
+from __future__ import annotations
+
+import re
+import tokenize
+from dataclasses import dataclass, field
+from io import StringIO
+from typing import Dict, FrozenSet, List
+
+#: Matches a pragma comment: "# noqa: RPR001" or "# noqa: RPR001, RPR004",
+#: possibly mixed with foreign codes — only the RPR codes are extracted.
+#: Anchored at the comment start so prose merely *mentioning* the syntax
+#: (like this very block) never registers as a suppression.
+_NOQA_RE = re.compile(
+    r"\A#\s*noqa\s*:\s*(?P<codes>[A-Z0-9,\s]+)", re.IGNORECASE
+)
+_RPR_RE = re.compile(r"\bRPR\d{3}\b")
+
+
+@dataclass
+class Pragma:
+    line: int
+    codes: FrozenSet[str]
+    used: set = field(default_factory=set)
+
+    @property
+    def unused_codes(self) -> List[str]:
+        return sorted(self.codes - self.used)
+
+
+def collect_pragmas(source: str) -> Dict[int, Pragma]:
+    """-> {line: Pragma} for every ``# noqa: RPR...`` comment in ``source``.
+
+    Tokenize-based (not regex over raw lines) so string literals containing
+    the pragma text never register as suppressions.
+    """
+    pragmas: Dict[int, Pragma] = {}
+    try:
+        tokens = tokenize.generate_tokens(StringIO(source).readline)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = _NOQA_RE.search(tok.string)
+            if not m:
+                continue
+            codes = frozenset(_RPR_RE.findall(m.group("codes").upper()))
+            if codes:
+                pragmas[tok.start[0]] = Pragma(tok.start[0], codes)
+    except tokenize.TokenError:
+        pass  # the AST parse will report the syntax problem
+    return pragmas
+
+
+def suppressed(pragmas: Dict[int, Pragma], line: int, code: str) -> bool:
+    """True (and marks the pragma used) when ``code`` at ``line`` is
+    covered by a same-line pragma."""
+    p = pragmas.get(line)
+    if p is not None and code in p.codes:
+        p.used.add(code)
+        return True
+    return False

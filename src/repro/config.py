@@ -57,11 +57,9 @@ class SparseConfig:
     centroid_method: str = "quest"
     #: "none" | "int8_asym" | "int8_sym" | "int4_asym" | "int4_sym" | "int2_asym"
     quant: str = "int4_asym"
-    #: recall-retention threshold τ in Eq. (2).
+    #: recall-retention threshold τ in Eq. (2); consumed by
+    #: :func:`repro.core.calibrate_for_config`.
     tau: float = 0.98
-    #: block selection granularity: "kv_head" (scores max-pooled over the GQA
-    #: group; selected pages shared within the group) or "q_head".
-    selection_granularity: str = "kv_head"
     #: number of initial (sink) and trailing (local) pages always kept, in pages.
     sink_pages: int = 1
     local_pages: int = 4
@@ -351,9 +349,6 @@ class ServeConfig:
     max_batch: int = 128
     max_context: int = 524288
     page_size: int = PAGE_SIZE
-    #: physical pages per sequence slot are over-allocated by this factor to
-    #: amortize page-table rebuilds during decode.
-    page_headroom: float = 1.0
     temperature: float = 0.6
     top_k: int = 20
     top_p: float = 0.95

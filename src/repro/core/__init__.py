@@ -12,6 +12,7 @@ from repro.core.calibration import (
     CalibrationResult,
     assign_block_sizes,
     calibrate,
+    calibrate_for_config,
 )
 from repro.core.centroids import build_rank_keys, rank_query
 from repro.core.quantization import QuantizedTensor, dequantize, fake_quantize, quantize
@@ -29,6 +30,7 @@ __all__ = [
     "assign_block_sizes",
     "build_rank_keys",
     "calibrate",
+    "calibrate_for_config",
     "dense_decode_attention",
     "dequantize",
     "fake_quantize",

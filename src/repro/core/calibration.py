@@ -257,3 +257,42 @@ def calibrate(
         )
     sizes = assign_block_sizes(recall, candidates, tau)
     return CalibrationResult(candidates, recall, sizes, tau)
+
+
+def calibrate_for_config(
+    key: jax.Array,
+    cfg,
+    seq_len: int = 4096,
+    n_samples: int = 4,
+    backend: str = "reference",
+):
+    """Config-driven calibration: profile under the model's own sparse
+    settings (``tau``, candidate block sizes, token budget, centroid method,
+    quantization) and return ``(new_cfg, result)`` with the Eq.-2 per-(layer,
+    kv-head) assignment installed in ``new_cfg.sparse.block_sizes``.
+
+    This is the offline step a deployment runs once per checkpoint; the
+    recall-retention threshold comes from :attr:`SparseConfig.tau` so the
+    config knob and the assignment can never drift apart.
+    """
+    import dataclasses
+
+    sp = cfg.sparse
+    result = calibrate(
+        key,
+        n_layers=cfg.n_layers,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim,
+        seq_len=seq_len,
+        candidates=sp.candidate_block_sizes,
+        token_budget=sp.budget_for(seq_len),
+        tau=sp.tau,
+        n_samples=n_samples,
+        method=sp.centroid_method,
+        backend=backend,
+        quant=sp.quant,
+    )
+    new_cfg = dataclasses.replace(
+        cfg, sparse=dataclasses.replace(sp, block_sizes=result.as_tuple())
+    )
+    return new_cfg, result

@@ -7,8 +7,8 @@ Contract: given per-sequence flattened rank keys ``[B, N_total, D']``
 (optionally INT4/INT8-quantized) and rank queries ``[B, n_q, D']``, produce
 block-importance scores in the padded 2-D per-kv-head view
 ``[B, n_kv_heads, max_blocks]`` with -inf in pad slots.  GQA aggregation:
-scores of the query heads in a group are max-pooled onto their kv head
-(``selection_granularity == "kv_head"``).
+scores of the query heads in a group are max-pooled onto their kv head, so
+selected pages are shared within the GQA group.
 """
 from __future__ import annotations
 

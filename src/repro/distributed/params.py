@@ -225,8 +225,25 @@ _CACHE_RULES = [
 ]
 
 
-def logical_axes_for_cache(path_str: str, ndim: int) -> Tuple[Optional[str], ...]:
-    if path_str.startswith("_layouts") or path_str.startswith("_offsets"):
+#: cache entries planted by the engine/obs layers (plan layout mirrors,
+#: telemetry counters, selected/predicted page masks): replicated small
+#: tensors by design, exempt from the suffix rule table.
+_PLANTED_CACHE_PREFIXES = (
+    "_layouts",
+    "_offsets",
+    "_telemetry",
+    "_ptel",
+    "_ptelq",
+    "_sel_pages",
+    "_pre_pages",
+)
+
+
+def _match_cache_rule(
+    path_str: str, ndim: int
+) -> Optional[Tuple[Optional[str], ...]]:
+    """The rule-table axes for a cache leaf, or None when nothing matches."""
+    if path_str.startswith(_PLANTED_CACHE_PREFIXES):
         return (None,) * ndim
     # rest-layer entries have no leading cycle axis: match against the rule
     # minus its leading cycle dim so a paged rest KV entry (ndim 5) never
@@ -239,7 +256,21 @@ def logical_axes_for_cache(path_str: str, ndim: int) -> Tuple[Optional[str], ...
                     return tuple(axes[1:])
             elif len(axes) == ndim:
                 return axes
-    return (None,) * ndim
+    return None
+
+
+def logical_axes_for_cache(path_str: str, ndim: int) -> Tuple[Optional[str], ...]:
+    axes = _match_cache_rule(path_str, ndim)
+    return axes if axes is not None else (None,) * ndim
+
+
+def cache_leaf_covered(path_str: str, ndim: int) -> bool:
+    """True when a cache leaf is EXPLICITLY covered by the sharding rule
+    table (or a sanctioned engine-planted entry) rather than falling through
+    to the silent replicate-by-default branch.  The contracts verifier uses
+    this to fail loudly on uncovered leaves — silent replication of a new
+    KV-cache entry is a memory-scaling bug, not a default."""
+    return _match_cache_rule(path_str, ndim) is not None
 
 
 # ---------------------------------------------------------------------------

@@ -195,7 +195,12 @@ class AsyncFrontend:
                             diagnostics=self.engine.diagnostics(),
                             retired=list(self.engine.finished),
                         )
-                    self.engine.step()
+                    # Deliberately synchronous: the engine tick IS the
+                    # loop's unit of work on the deterministic virtual-tick
+                    # clock (async-vs-sync token identity is asserted on
+                    # tick-exact interleavings).  Off-loop execution via
+                    # to_thread would unorder submits relative to ticks.
+                    self.engine.step()  # noqa: RPR004
                     self.ticks += 1
                     self._pump()
                     if self.on_tick is not None:

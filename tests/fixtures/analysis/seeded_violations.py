@@ -1,0 +1,55 @@
+"""Seeded-violation fixture for the CLI round-trip test.
+
+Every RPR rule fires at least once in this file; tests/test_analysis.py
+runs ``python -m repro.analysis.lint`` over this directory and asserts the
+expected codes (and ONLY those) are reported.  Never imported.
+"""
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from functools import cached_property
+
+
+@dataclass
+class SparseConfig:
+    ghost_knob: int = 0  # RPR006: never read anywhere in this tree
+
+X = jnp.ones((4,))  # RPR007: module-level device constant
+
+
+class AttentionPlan:
+    @cached_property
+    def stacked(self):
+        # RPR001 (the PR 3 bug shape) + RPR003 (jnp in a host-only zone):
+        # first touch under eval_shape caches a tracer forever.
+        return jnp.stack([jnp.arange(4), jnp.arange(4)])
+
+
+def build_plan(context_len):
+    return jnp.arange(context_len)  # RPR003: host-only builder
+
+
+def donate_and_reuse(params, cache):
+    step = jax.jit(lambda p, c: c, donate_argnums=(1,))
+    out = step(params, cache)
+    return cache, out  # RPR002: cache was donated above
+
+
+async def serve_loop(engine):
+    while True:
+        engine.step()  # RPR004: blocking engine tick on the event loop
+        time.sleep(0.1)  # RPR004: blocking sleep on the event loop
+
+
+class Engine:
+    def tick(self, tokens):
+        out = self.decode_step_fn(tokens)
+        # RPR005: injection site fires after the jit dispatch above.
+        self._fault.check_raise("decode", tick=0)
+        return out
+
+
+def suppressed_ok(plan):
+    return jnp.asarray(plan)  # noqa: RPR009 -- RPR008: nothing to suppress

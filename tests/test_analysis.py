@@ -1,0 +1,612 @@
+"""Tests for repro.analysis: the RPR lint rules (positive + negative
+fixtures per rule), pragma round-trips, the CLI, and the abstract
+kernel-contract verifier over dense/reference/pallas on two zoo configs."""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.analysis import lint_paths
+from repro.analysis.lint import LintEngine, main as lint_main
+from repro.analysis.pragmas import collect_pragmas, suppressed
+
+FIXTURES = Path(__file__).parent / "fixtures" / "analysis"
+
+
+def lint_source(tmp_path, source, name="mod.py", select=None):
+    f = tmp_path / name
+    f.write_text(textwrap.dedent(source))
+    return lint_paths([str(f)], select=select)
+
+
+def codes(findings):
+    return sorted({f.code for f in findings})
+
+
+# ---------------------------------------------------------------------------
+# RPR001 — cached tracer capture (the PR 3 regression shape)
+# ---------------------------------------------------------------------------
+
+
+def test_rpr001_cached_property_jnp_fires(tmp_path):
+    # regression fixture: the exact PR 3 bug — AttentionPlan's cached
+    # layout arrays built with jnp, first touched under eval_shape.
+    found = lint_source(
+        tmp_path,
+        """
+        import jax.numpy as jnp
+        from functools import cached_property
+
+        class AttentionPlan:
+            @cached_property
+            def stacked(self):
+                return jnp.stack([jnp.asarray([1, 2])])
+        """,
+        select=["RPR001"],
+    )
+    assert codes(found) == ["RPR001"]
+
+
+def test_rpr001_lru_cache_fires_and_numpy_is_clean(tmp_path):
+    found = lint_source(
+        tmp_path,
+        """
+        import functools
+        import jax.numpy as jnp
+
+        @functools.lru_cache(maxsize=None)
+        def build(n):
+            return jnp.zeros((n,))
+        """,
+        select=["RPR001"],
+    )
+    assert codes(found) == ["RPR001"]
+    clean = lint_source(
+        tmp_path,
+        """
+        import numpy as np
+        from functools import cached_property
+
+        class AttentionPlan:
+            @cached_property
+            def stacked(self):
+                return np.stack([np.asarray([1, 2])])
+        """,
+        name="clean.py",
+        select=["RPR001"],
+    )
+    assert clean == []
+
+
+def test_rpr001_uncached_jnp_is_clean(tmp_path):
+    assert (
+        lint_source(
+            tmp_path,
+            """
+            import jax.numpy as jnp
+
+            def attend(q):
+                return jnp.dot(q, q)
+            """,
+            select=["RPR001"],
+        )
+        == []
+    )
+
+
+# ---------------------------------------------------------------------------
+# RPR002 — use after donation
+# ---------------------------------------------------------------------------
+
+
+def test_rpr002_read_after_donation_fires(tmp_path):
+    found = lint_source(
+        tmp_path,
+        """
+        import jax
+
+        def tick(params, cache, tokens):
+            step = jax.jit(lambda p, c, t: (t, c), donate_argnums=(1,))
+            out, new_cache = step(params, cache, tokens)
+            return cache["seq_len"], out
+        """,
+        select=["RPR002"],
+    )
+    assert codes(found) == ["RPR002"]
+
+
+def test_rpr002_rebound_result_is_clean(tmp_path):
+    assert (
+        lint_source(
+            tmp_path,
+            """
+            import jax
+
+            def tick(params, cache, tokens):
+                step = jax.jit(lambda p, c, t: (t, c), donate_argnums=(1,))
+                out, cache = step(params, cache, tokens)
+                return cache["seq_len"], out
+            """,
+            select=["RPR002"],
+        )
+        == []
+    )
+
+
+def test_rpr002_multiline_call_args_not_self_flagged(tmp_path):
+    assert (
+        lint_source(
+            tmp_path,
+            """
+            import jax
+
+            def tick(params, cache):
+                step = jax.jit(lambda p, c: c, donate_argnums=(1,))
+                cache = step(
+                    params,
+                    cache,
+                )
+                return cache
+            """,
+            select=["RPR002"],
+        )
+        == []
+    )
+
+
+def test_rpr002_immediately_invoked_jit_fires(tmp_path):
+    found = lint_source(
+        tmp_path,
+        """
+        import jax
+
+        def once(buf):
+            jax.jit(lambda b: b * 2, donate_argnums=(0,))(buf)
+            return buf
+        """,
+        select=["RPR002"],
+    )
+    assert codes(found) == ["RPR002"]
+
+
+# ---------------------------------------------------------------------------
+# RPR003 — host/device discipline in plan/layout builders
+# ---------------------------------------------------------------------------
+
+
+def test_rpr003_jnp_in_build_plan_fires_np_is_clean(tmp_path):
+    found = lint_source(
+        tmp_path,
+        """
+        import jax.numpy as jnp
+
+        def build_plan(model_cfg, context_len):
+            return jnp.arange(context_len)
+        """,
+        select=["RPR003"],
+    )
+    assert codes(found) == ["RPR003"]
+    assert (
+        lint_source(
+            tmp_path,
+            """
+            import numpy as np
+
+            def build_plan(model_cfg, context_len):
+                return np.arange(context_len)
+            """,
+            name="clean.py",
+            select=["RPR003"],
+        )
+        == []
+    )
+
+
+def test_rpr003_jnp_outside_zone_is_clean(tmp_path):
+    # as_arrays is the sanctioned host->device conversion point.
+    assert (
+        lint_source(
+            tmp_path,
+            """
+            import jax.numpy as jnp
+
+            class LayoutArrays:
+                def as_arrays(self):
+                    return jnp.asarray(self.rows)
+            """,
+            select=["RPR003"],
+        )
+        == []
+    )
+
+
+# ---------------------------------------------------------------------------
+# RPR004 — blocking calls in async def
+# ---------------------------------------------------------------------------
+
+
+def test_rpr004_blocking_calls_fire(tmp_path):
+    found = lint_source(
+        tmp_path,
+        """
+        import time
+
+        async def run(engine):
+            engine.step()
+            time.sleep(1)
+        """,
+        select=["RPR004"],
+    )
+    assert len(found) == 2
+    assert codes(found) == ["RPR004"]
+
+
+def test_rpr004_sync_def_and_nested_def_are_clean(tmp_path):
+    assert (
+        lint_source(
+            tmp_path,
+            """
+            import asyncio
+            import time
+
+            def run_sync(engine):
+                engine.step()
+
+            async def run(engine):
+                def deferred():
+                    time.sleep(1)  # runs on the caller's schedule
+                await asyncio.sleep(0)
+                return deferred
+            """,
+            select=["RPR004"],
+        )
+        == []
+    )
+
+
+# ---------------------------------------------------------------------------
+# RPR005 — fault hook placement
+# ---------------------------------------------------------------------------
+
+
+def test_rpr005_dispatch_before_injection_fires(tmp_path):
+    found = lint_source(
+        tmp_path,
+        """
+        class Engine:
+            def tick(self, tokens):
+                out = self._rung_step_fns(0)[0](tokens)
+                self._fault.check_raise("decode", tick=0)
+                return out
+        """,
+        select=["RPR005"],
+    )
+    assert codes(found) == ["RPR005"]
+
+
+def test_rpr005_injection_first_is_clean(tmp_path):
+    assert (
+        lint_source(
+            tmp_path,
+            """
+            class Engine:
+                def tick(self, tokens):
+                    self._fault.check_raise("decode", tick=0)
+                    return self._rung_step_fns(0)[0](tokens)
+            """,
+            select=["RPR005"],
+        )
+        == []
+    )
+
+
+# ---------------------------------------------------------------------------
+# RPR006 — config field liveness (project-wide)
+# ---------------------------------------------------------------------------
+
+_CONFIG_SRC = """
+from dataclasses import dataclass
+
+@dataclass
+class SparseConfig:
+    token_budget: int = 4096
+    ghost_knob: int = 0
+"""
+
+
+def test_rpr006_dead_field_fires_read_field_does_not(tmp_path):
+    (tmp_path / "config.py").write_text(textwrap.dedent(_CONFIG_SRC))
+    (tmp_path / "user.py").write_text(
+        "def budget(cfg):\n    return cfg.token_budget\n"
+    )
+    found = lint_paths([str(tmp_path)], select=["RPR006"])
+    assert [f.code for f in found] == ["RPR006"]
+    assert "ghost_knob" in found[0].message
+
+
+def test_rpr006_read_via_own_method_counts(tmp_path):
+    (tmp_path / "config.py").write_text(
+        textwrap.dedent(
+            """
+            from dataclasses import dataclass
+
+            @dataclass
+            class SparseConfig:
+                budget_frac: float = 0.04
+
+                def budget_for(self, n):
+                    return int(self.budget_frac * n)
+            """
+        )
+    )
+    assert lint_paths([str(tmp_path)], select=["RPR006"]) == []
+
+
+# ---------------------------------------------------------------------------
+# RPR007 — import-time device state
+# ---------------------------------------------------------------------------
+
+
+def test_rpr007_module_level_jnp_fires(tmp_path):
+    found = lint_source(
+        tmp_path,
+        """
+        import jax
+        import jax.numpy as jnp
+
+        SINK = jnp.zeros((4,))
+        KEY = jax.random.PRNGKey(0)
+        """,
+        select=["RPR007"],
+    )
+    assert len(found) == 2
+    assert codes(found) == ["RPR007"]
+
+
+def test_rpr007_function_body_and_numpy_are_clean(tmp_path):
+    assert (
+        lint_source(
+            tmp_path,
+            """
+            import numpy as np
+            import jax.numpy as jnp
+
+            SINK = np.zeros((4,))
+
+            def make():
+                return jnp.zeros((4,))
+            """,
+            select=["RPR007"],
+        )
+        == []
+    )
+
+
+# ---------------------------------------------------------------------------
+# Pragmas + RPR008
+# ---------------------------------------------------------------------------
+
+
+def test_pragma_suppresses_finding(tmp_path):
+    found = lint_source(
+        tmp_path,
+        """
+        import jax.numpy as jnp
+
+        def build_plan(cfg, n):
+            return jnp.arange(n)  # noqa: RPR003
+        """,
+    )
+    assert found == []  # suppressed AND the pragma is used (no RPR008)
+
+
+def test_unused_pragma_reports_rpr008(tmp_path):
+    found = lint_source(
+        tmp_path,
+        """
+        import numpy as np
+
+        def build_plan(cfg, n):
+            return np.arange(n)  # noqa: RPR003
+        """,
+    )
+    assert codes(found) == ["RPR008"]
+
+
+def test_wrong_code_pragma_keeps_finding_and_flags_pragma(tmp_path):
+    found = lint_source(
+        tmp_path,
+        """
+        import jax.numpy as jnp
+
+        def build_plan(cfg, n):
+            return jnp.arange(n)  # noqa: RPR001
+        """,
+    )
+    assert codes(found) == ["RPR003", "RPR008"]
+
+
+def test_bare_and_foreign_noqa_are_ruffs_territory(tmp_path):
+    # bare "# noqa" and foreign codes pass through untouched: no
+    # suppression of RPR findings, no RPR008 accounting.
+    found = lint_source(
+        tmp_path,
+        """
+        import jax.numpy as jnp
+
+        def build_plan(cfg, n):
+            a = jnp.arange(n)  # noqa
+            b = jnp.arange(n)  # noqa: F401
+            return a, b
+        """,
+    )
+    assert [f.code for f in found] == ["RPR003", "RPR003"]
+
+
+def test_pragma_in_string_literal_is_not_a_pragma():
+    pragmas = collect_pragmas('x = "# noqa: RPR001"\ny = 1  # noqa: RPR002\n')
+    assert list(pragmas) == [2]
+    assert pragmas[2].codes == frozenset({"RPR002"})
+    assert suppressed(pragmas, 2, "RPR002")
+    assert pragmas[2].unused_codes == []
+    assert not suppressed(pragmas, 1, "RPR001")
+
+
+# ---------------------------------------------------------------------------
+# Engine + CLI
+# ---------------------------------------------------------------------------
+
+
+def test_seeded_fixture_fires_every_rule():
+    found = LintEngine().run([str(FIXTURES)])
+    assert codes(found) == [
+        "RPR001",
+        "RPR002",
+        "RPR003",
+        "RPR004",
+        "RPR005",
+        "RPR006",
+        "RPR007",
+        "RPR008",
+    ]
+
+
+def test_cli_json_report_and_exit_codes(tmp_path, capsys):
+    out = tmp_path / "report.json"
+    rc = lint_main([str(FIXTURES), "--format", "json", "--output", str(out)])
+    capsys.readouterr()
+    assert rc == 1
+    report = json.loads(out.read_text())
+    assert report["tool"] == "repro.analysis.lint"
+    assert report["n_findings"] == len(report["findings"]) > 0
+
+    clean = tmp_path / "clean.py"
+    clean.write_text("x = 1\n")
+    assert lint_main([str(clean)]) == 0
+    capsys.readouterr()
+
+
+def test_cli_module_entrypoint_on_src_tree_is_clean():
+    repo = Path(__file__).parent.parent
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", str(repo / "src")],
+        capture_output=True,
+        text=True,
+        env={"PYTHONPATH": str(repo / "src"), "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "clean: 0 findings" in proc.stdout
+
+
+def test_syntax_error_is_reported_not_crashed(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text("def broken(:\n")
+    found = lint_paths([str(bad)])
+    assert [f.code for f in found] == ["RPR000"]
+
+
+# ---------------------------------------------------------------------------
+# Contracts verifier (abstract only — no device execution)
+# ---------------------------------------------------------------------------
+
+
+def test_contracts_full_grid_passes():
+    from repro.analysis.contracts import run_contracts
+
+    report = run_contracts()
+    assert report["n_failures"] == 0, report["failures"]
+    assert report["backends_covered"] == 3
+    assert report["configs_covered"] == 2
+    assert report["cells"] == 6
+
+
+def test_contracts_host_descriptor_guard_rejects_device_arrays():
+    import jax.numpy as jnp
+
+    from repro.analysis.contracts import ContractFailure, _check_host_int
+
+    _check_host_int("ok", np.arange(4, dtype=np.int32))
+    with pytest.raises(ContractFailure, match="host numpy"):
+        _check_host_int("bad", jnp.arange(4))
+    with pytest.raises(ContractFailure, match="integer"):
+        _check_host_int("bad", np.arange(4.0))
+
+
+def test_contracts_sharding_coverage_rejects_unknown_leaf():
+    import jax
+
+    from repro.analysis.contracts import (
+        ContractFailure,
+        check_sharding_coverage,
+    )
+
+    good = {"seq_len": jax.ShapeDtypeStruct((2,), np.int32)}
+    check_sharding_coverage(good)
+    bad = {"mystery_buffer": jax.ShapeDtypeStruct((2, 8, 4), np.float32)}
+    with pytest.raises(ContractFailure, match="mystery_buffer"):
+        check_sharding_coverage(bad)
+
+
+def test_contracts_detects_cache_spec_drift():
+    # a model whose decode_step grows the cache must fail step_stability.
+    import dataclasses
+
+    import jax
+
+    from repro.analysis.contracts import ContractFailure, check_step_stability
+    from repro.configs import get_config, smoke_variant
+    from repro.models.transformer import Transformer
+
+    cfg = smoke_variant(get_config("llama3.2-3b"))
+    cfg = dataclasses.replace(
+        cfg, sparse=dataclasses.replace(cfg.sparse, enabled=True)
+    )
+    model = Transformer(cfg)
+
+    class Drifting:
+        cfg = model.cfg
+
+        def decode_step(self, params, cache, tokens):
+            logits, cache = model.decode_step(params, cache, tokens)
+            cache = dict(cache)
+            cache["stowaway"] = tokens  # leaf-count drift
+            return logits, cache
+
+        prefill_chunk = staticmethod(model.prefill_chunk)
+
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    cache = jax.eval_shape(lambda: model.init_cache(2, 512))
+    with pytest.raises(ContractFailure, match="leaf count"):
+        check_step_stability(Drifting(), params, cache, 2)
+
+
+def test_calibrate_for_config_consumes_config_tau():
+    # SparseConfig.tau drives the Eq.-2 assignment through the
+    # config-driven entry point (the dead-flag fix for RPR006).
+    import dataclasses
+
+    import jax
+
+    from repro.configs import get_config, smoke_variant
+    from repro.core import calibrate_for_config
+
+    cfg = smoke_variant(get_config("llama3.2-3b"))
+    cfg = dataclasses.replace(
+        cfg,
+        sparse=dataclasses.replace(
+            cfg.sparse, tau=0.9, candidate_block_sizes=(16, 32)
+        ),
+    )
+    new_cfg, result = calibrate_for_config(
+        jax.random.PRNGKey(0), cfg, seq_len=256, n_samples=1
+    )
+    assert result.tau == 0.9
+    assert new_cfg.sparse.block_sizes is not None
+    assert len(new_cfg.sparse.block_sizes) == cfg.n_layers
+    assert all(
+        b in (16, 32) for row in new_cfg.sparse.block_sizes for b in row
+    )
